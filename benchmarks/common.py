@@ -1,0 +1,169 @@
+"""Shared benchmark harness.
+
+All quality tables run on a REDUCED llama-family model trained on the
+structured synthetic corpus (repro/data/synthetic.py) for a few hundred
+steps — enough for FFN neurons to specialize so the paper's activation
+statistics exist (fig2 verifies). The trained checkpoint is cached under
+results/bench_model so every table reuses the same base model.
+
+Absolute paper numbers need the real pretrained checkpoints; the bench
+suite reproduces ORDERINGS and DELTAS (see DESIGN.md deviations).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import CMoEConfig, ModelConfig
+from repro.checkpoint import CheckpointManager
+from repro.data import ShardedLoader, make_calibration_batch
+from repro.launch.steps import make_train_step
+from repro.models import build_model
+from repro.optim.adamw import adamw_init
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+VOCAB = 256
+NUM_DOMAINS = 4
+
+
+def bench_config() -> ModelConfig:
+    """Reduced llama-2-family model: 4L, d=128, d_ff=512 (8-expert clean)."""
+    return ModelConfig(
+        name="bench-llama", family="dense", num_layers=4, d_model=128,
+        num_heads=4, num_kv_heads=4, head_dim=32, d_ff=512,
+        vocab_size=VOCAB, activation="swiglu", dtype="float32")
+
+
+def get_base_model(steps: int = 500, batch: int = 16, seq: int = 128,
+                   seed: int = 0):
+    """Train (or load cached) the bench base model."""
+    cfg = bench_config()
+    model = build_model(cfg)
+    ckpt_dir = os.path.join(RESULTS, "bench_model")
+    mgr = CheckpointManager(ckpt_dir, keep=1)
+    params = model.init(jax.random.PRNGKey(seed))
+    if mgr.latest_step() == steps:
+        (state, _) = mgr.restore({"params": params})
+        return cfg, model, state["params"]
+    opt = adamw_init(params)
+    loader = ShardedLoader(VOCAB, batch, seq, seed=seed,
+                           num_domains=NUM_DOMAINS)
+    step = jax.jit(make_train_step(model, lr=3e-3, warmup=30, total=steps,
+                                   remat=False))
+    t0 = time.perf_counter()
+    for i in range(steps):
+        b = {"tokens": jnp.asarray(next(loader)["tokens"])}
+        params, opt, m = step(params, opt, b)
+        if i % 100 == 0:
+            print(f"  [base] step {i} loss {float(m['loss']):.3f}",
+                  file=sys.stderr)
+    print(f"  [base] trained {steps} steps in "
+          f"{time.perf_counter()-t0:.0f}s, final loss "
+          f"{float(m['loss']):.3f}", file=sys.stderr)
+    mgr.save(steps, {"params": params}, {}, block=True)
+    return cfg, model, params
+
+
+def eval_ppl(model, params, *, seed: int = 999, batches: int = 4,
+             batch: int = 8, seq: int = 128, domains=None) -> float:
+    """Held-out perplexity on the synthetic corpus."""
+    loader = ShardedLoader(VOCAB, batch, seq, seed=seed,
+                           num_domains=NUM_DOMAINS)
+    total, count = 0.0, 0
+    loss_fn = jax.jit(lambda p, b: model.loss(p, b, remat=False)[0])
+    for _ in range(batches):
+        b = {"tokens": jnp.asarray(next(loader)["tokens"])}
+        total += float(loss_fn(params, b))
+        count += 1
+    return float(np.exp(total / count))
+
+
+def eval_next_token_acc(model, params, *, seed: int = 555,
+                        batch: int = 16, seq: int = 64) -> float:
+    """Zero-shot surrogate: next-token top-1 accuracy on held-out data."""
+    loader = ShardedLoader(VOCAB, batch, seq, seed=seed,
+                           num_domains=NUM_DOMAINS)
+    b = {"tokens": jnp.asarray(next(loader)["tokens"])}
+    logits = jax.jit(lambda p, t: model.forward(p, {"tokens": t}))(
+        params, b["tokens"][:, :-1])
+    pred = jnp.argmax(logits, -1)
+    return float((pred == b["tokens"][:, 1:]).mean())
+
+
+def calib_batch(n_samples: int = 8, seq: int = 128, seed: int = 1234):
+    b = make_calibration_batch(VOCAB, n_samples, seq, seed=seed,
+                               num_domains=NUM_DOMAINS)
+    return {"tokens": jnp.asarray(b["tokens"])}
+
+
+def default_cm(**kw) -> CMoEConfig:
+    base = dict(num_experts=8, num_shared=3, top_k=3, k_activation=16,
+                assignment="jv")
+    base.update(kw)
+    return CMoEConfig(**base)
+
+
+def finetune(model, params, *, steps: int = 60, lr: float = 3e-4,
+             seed: int = 77, batch: int = 8, seq: int = 128,
+             gamma: float = 1e-3):
+    """Lightweight post-conversion fine-tune: u-scaling + all params via
+    small-LR Adam + load-balance bias rule (the paper's 2k-sample recipe,
+    scaled down)."""
+    from repro.optim.balance import apply_balance_update
+    opt = adamw_init(params)
+    loader = ShardedLoader(VOCAB, batch, seq, seed=seed,
+                           num_domains=NUM_DOMAINS)
+    step = jax.jit(make_train_step(model, lr=lr, warmup=5, total=steps,
+                                   remat=False))
+    for _ in range(steps):
+        b = {"tokens": jnp.asarray(next(loader)["tokens"])}
+        params, opt, m = step(params, opt, b)
+        if "moe_load" in m and gamma > 0:
+            params = apply_balance_update(params, m["moe_load"], gamma=gamma)
+    return params
+
+
+def time_fn(fn, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median wall time (us) of a jitted call."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def ffn_flops_per_token(cfg, cm: CMoEConfig | None) -> float:
+    """Analytic FFN FLOPs per token (the paper's Table-7 FLOPs object)."""
+    glu = 3 if cfg.activation in ("swiglu", "geglu") else 2
+    dense = 2.0 * glu * cfg.d_model * cfg.d_ff
+    if cm is None:
+        return dense
+    m = cfg.d_ff // cm.num_experts
+    active = (cm.num_shared + cm.top_k) * m
+    router = 2.0 * 2 * cfg.d_model * cm.num_routed
+    return 2.0 * glu * cfg.d_model * active + router
+
+
+def emit(table: str, rows: list[dict]):
+    """Print `name,us_per_call,derived` CSV rows (scaffold contract) and
+    save the full record to results/bench/<table>.json."""
+    import json
+    os.makedirs(os.path.join(RESULTS, "bench"), exist_ok=True)
+    with open(os.path.join(RESULTS, "bench", f"{table}.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+    for r in rows:
+        name = f"{table}/{r['name']}"
+        us = r.get("us_per_call", "")
+        derived = ";".join(f"{k}={v}" for k, v in r.items()
+                           if k not in ("name", "us_per_call"))
+        print(f"{name},{us},{derived}")

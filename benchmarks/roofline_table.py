@@ -1,0 +1,59 @@
+"""§Roofline table: reads results/dryrun/*.json (written by
+repro.launch.dryrun) and prints the per-(arch x shape x mesh) roofline
+terms, dominant bottleneck, MODEL_FLOPS ratio and a what-would-help note."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def _advice(rec) -> str:
+    r = rec["roofline"]
+    dom = r["dominant"]
+    if dom == "memory":
+        return ("cut HBM traffic: fewer f32 round-trips / fused kernels / "
+                "bf16 optimizer states" if rec["shape"] == "train_4k" else
+                "KV/cache layout + fused decode kernels")
+    if dom == "collective":
+        return "reshard: fold EP all-to-all / reduce-scatter gradients"
+    return "MXU-align tiles; raise arithmetic intensity per HBM byte"
+
+
+def load_rows(mesh: str = "16x16", include_opts: bool = False):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        rec = json.load(open(path))
+        if rec.get("mesh") != mesh:
+            continue
+        if not include_opts and rec.get("opts"):
+            continue
+        rows.append(rec)
+    return rows
+
+
+def main():
+    rows = load_rows()
+    print("arch,shape,mesh,status,mem_GiB,compute_ms,memory_ms,"
+          "collective_ms,dominant,useful_flops_ratio,advice")
+    for rec in rows:
+        if rec["status"] == "skipped":
+            print(f"{rec['arch']},{rec['shape']},{rec['mesh']},skip,,,,,,,"
+                  f"\"{rec['reason'][:60]}\"")
+            continue
+        if rec["status"] != "ok":
+            print(f"{rec['arch']},{rec['shape']},{rec['mesh']},error,,,,,,,")
+            continue
+        r = rec["roofline"]
+        mem = rec["memory"]["total_per_device"] / 2**30
+        ratio = rec.get("useful_flops_ratio")
+        print(f"{rec['arch']},{rec['shape']},{rec['mesh']},ok,"
+              f"{mem:.2f},{r['compute_s']*1e3:.3f},{r['memory_s']*1e3:.3f},"
+              f"{r['collective_s']*1e3:.3f},{r['dominant']},"
+              f"{ratio:.3f},\"{_advice(rec)}\"")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import os
+import sys
+import time
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+TABLES = [
+    "fig2_activation_rates",        # motivation first (builds base model)
+    "table1_quality",
+    "table3_training_free",
+    "table4_calibration",
+    "table5_ablation",
+    "table6_conversion_time",
+    "table7_efficiency",
+    "table7b_hierarchical",
+    "table9_speedup_configs",
+    "table10_ppl_sparsity",
+    "table11_self_consistency",
+    "fig5_load_balance",
+]
+
+
+def main() -> None:
+    import importlib
+    failures = []
+    for name in TABLES:
+        t0 = time.perf_counter()
+        print(f"# === {name} ===", flush=True)
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            mod.main()
+        except Exception:  # noqa: BLE001 — keep the suite running
+            failures.append(name)
+            traceback.print_exc()
+        print(f"# {name} done in {time.perf_counter()-t0:.1f}s", flush=True)
+    print("# === roofline (from dry-run artifacts) ===", flush=True)
+    try:
+        from benchmarks import roofline_table
+        roofline_table.main()
+    except Exception:
+        failures.append("roofline_table")
+        traceback.print_exc()
+    if failures:
+        print(f"# FAILURES: {failures}", flush=True)
+        sys.exit(1)
+    print("# all tables OK", flush=True)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,61 @@
+"""Table 9: speedup by SxAyEz config in memory-bound (small batch) vs
+compute-bound (large batch) regimes. Paper claim: S1A5E8 @ 32k compute-bound
+gives up to 1.17x; more shared experts / more total experts give less.
+
+We measure the FFN-layer latency dense vs converted at bench scale in both
+regimes and report the speedup per config, plus the analytic active-fraction
+model for Qwen-2.5-72B-like dims (the paper's device)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (calib_batch, default_cm, emit, get_base_model,
+                               time_fn)
+from repro.config import CMoEConfig
+from repro.core.convert import convert_ffn_layer
+from repro.core.moe_ffn import cmoe_ffn
+from repro.models.layers import ffn
+
+CONFIGS = [
+    ("S1A5E8", 1, 5, 8), ("S3A3E8", 3, 3, 8), ("S2A4E8", 2, 4, 8),
+    ("S4A8E16", 4, 8, 16), ("S6A6E16", 6, 6, 16), ("S3A9E16", 3, 9, 16),
+]
+
+
+def main() -> list[dict]:
+    cfg, model, params = get_base_model()
+    calib = calib_batch()
+    ffn0 = jax.tree.map(lambda a: a[0], params["blocks"]["ffn"])
+    taps = model.ffn_inputs(params, calib)
+    x_calib = taps[0].reshape(-1, cfg.d_model)
+
+    rows = []
+    dense_fn = jax.jit(lambda x: ffn(x, ffn0, cfg.activation))
+    for regime, tokens in (("memory_bound", 64), ("compute_bound", 4096)):
+        x = jax.random.normal(jax.random.PRNGKey(0), (tokens, cfg.d_model))
+        t_dense = time_fn(dense_fn, x, iters=10)
+        for name, s, a, e in CONFIGS:
+            cm = CMoEConfig(num_experts=e, num_shared=s, top_k=a,
+                            k_activation=16, assignment="jv")
+            cp, _ = convert_ffn_layer(ffn0, x_calib, cm, cfg.activation)
+            cfg_cm = cfg.with_cmoe(cm)
+            moe_fn = jax.jit(
+                lambda xx, cp=cp, cfg_cm=cfg_cm: cmoe_ffn(
+                    xx, cp, cfg_cm)[0])
+            t_moe = time_fn(moe_fn, x, iters=10)
+            active = (s + a) / e
+            rows.append({
+                "name": f"{name}_{regime}",
+                "us_per_call": round(t_moe, 1),
+                "dense_us": round(t_dense, 1),
+                "speedup": round(t_dense / t_moe, 3),
+                "active_frac": active,
+                "analytic_bound": round(1.0 / active, 3),
+            })
+    emit("table9_speedup_configs", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Convert-then-serve: the paper's deployment story end to end.
+
+    PYTHONPATH=src python examples/convert_and_serve.py
+
+1. train a small dense LM;
+2. CMoE-convert (training-free) and optionally fine-tune briefly;
+3. serve batched generation from BOTH models and compare tokens/s.
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import CMoEConfig, ModelConfig
+from repro.core.convert import convert_dense_model
+from repro.data import ShardedLoader, make_calibration_batch
+from repro.launch.steps import make_train_step
+from repro.models import build_model
+from repro.optim.adamw import adamw_init
+
+
+def generate(model, params, prompts, gen=24):
+    b, plen = prompts.shape
+    max_len = plen + gen
+    prefill = jax.jit(lambda p, t: model.prefill(p, {"tokens": t},
+                                                 max_len=max_len))
+    decode = jax.jit(model.decode_step)
+    logits, cache = prefill(params, prompts)
+    toks = [jnp.argmax(logits, -1)[:, None]]
+    jax.block_until_ready(toks[-1])
+    t0 = time.perf_counter()
+    for i in range(gen - 1):
+        logits, cache = decode(params, toks[-1], cache,
+                               jnp.int32(plen + i))
+        toks.append(jnp.argmax(logits, -1)[:, None])
+    jax.block_until_ready(toks[-1])
+    dt = time.perf_counter() - t0
+    return jnp.concatenate(toks, 1), b * (gen - 1) / dt
+
+
+def main():
+    cfg = ModelConfig(name="serve-demo", family="dense", num_layers=2,
+                      d_model=128, num_heads=4, num_kv_heads=4, head_dim=32,
+                      d_ff=512, vocab_size=512, dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    loader = ShardedLoader(cfg.vocab_size, 8, 64, seed=0)
+    step = jax.jit(make_train_step(model, lr=2e-3, warmup=10, total=150,
+                                   remat=False))
+    for _ in range(150):
+        params, opt, _ = step(params, opt,
+                              {"tokens": jnp.asarray(next(loader)["tokens"])})
+
+    cm = CMoEConfig(num_experts=8, num_shared=3, top_k=3, k_activation=8,
+                    assignment="jv")       # S3A3E8: the paper's default
+    calib = make_calibration_batch(cfg.vocab_size, 4, 64)
+    m2, p2, _ = convert_dense_model(
+        model, params, {"tokens": jnp.asarray(calib["tokens"])}, cm)
+
+    prompts = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (8, 32)).astype(np.int32))
+    out_d, tps_d = generate(model, params, prompts)
+    out_m, tps_m = generate(m2, p2, prompts)
+    first_tok = float((out_d[:, 0] == out_m[:, 0]).mean())
+    # logit-level agreement is the meaningful fidelity metric (greedy
+    # sequences diverge exponentially after any single flip)
+    lg_d = model.forward(params, {"tokens": prompts})[:, -1]
+    lg_m = m2.forward(p2, {"tokens": prompts})[:, -1]
+    top5_d = jnp.argsort(-lg_d, axis=-1)[:, :5]
+    top5_m = jnp.argsort(-lg_m, axis=-1)[:, :5]
+    overlap = np.mean([len(set(a.tolist()) & set(b.tolist())) / 5
+                       for a, b in zip(np.asarray(top5_d),
+                                       np.asarray(top5_m))])
+    print(f"dense:  {tps_d:8.1f} tok/s")
+    print(f"cmoe:   {tps_m:8.1f} tok/s ({tps_m/tps_d:.2f}x, {cm.tag()}; "
+          f"CPU gather overhead masks the TPU-scale gain — see "
+          f"EXPERIMENTS.md §Perf for the roofline numbers)")
+    print(f"first-token greedy agreement: {first_tok:.0%}; "
+          f"top-5 logit overlap: {overlap:.0%}")
+
+
+if __name__ == "__main__":
+    main()

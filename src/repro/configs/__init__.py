@@ -1,0 +1,43 @@
+"""Architecture registry. Each module exposes config() and smoke_config()."""
+from __future__ import annotations
+
+import importlib
+
+from repro.config import ModelConfig
+
+# arch id -> module name
+ARCHS = {
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "granite-34b": "granite_34b",
+    "gemma3-4b": "gemma3_4b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "qwen1.5-0.5b": "qwen1_5_0_5b",
+    "whisper-small": "whisper_small",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "mamba2-370m": "mamba2_370m",
+    "internvl2-26b": "internvl2_26b",
+    # the paper's own evaluation model (dense llama-2 family)
+    "llama2-7b": "llama2_7b",
+}
+
+
+def _module(arch: str):
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    return importlib.import_module(f"repro.configs.{ARCHS[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).config()
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).smoke_config()
+
+
+def list_archs(include_extra: bool = False) -> list[str]:
+    names = list(ARCHS)
+    if not include_extra:
+        names.remove("llama2-7b")
+    return names

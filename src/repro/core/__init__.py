@@ -1,0 +1,11 @@
+# The paper's primary contribution: analytical FFN->MoE restructuring.
+from repro.core.convert import (ConversionReport, convert_dense_model,  # noqa
+                                convert_ffn_layer, reconstruction_error)
+from repro.core.hierarchical import convert_moe_model  # noqa: F401
+from repro.core.moe_ffn import cmoe_ffn  # noqa: F401
+from repro.core.partition import (PartitionResult, build_cmoe_params,  # noqa
+                                  partition_neurons)
+from repro.core.profiling import (activation_rates, atopk_mask,  # noqa
+                                  bimodality_summary, profile_hidden)
+from repro.core.router import (cmoe_gate, router_scores,  # noqa
+                               update_balance_bias)

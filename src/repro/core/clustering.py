@@ -1,0 +1,174 @@
+"""Balanced k-means over neuron activation patterns (paper §A.3).
+
+Two balanced-assignment backends:
+  * ``jv``      — exact Jonker–Volgenant via scipy's LAPJVsp
+                  (`linear_sum_assignment`) on the column-expanded cost,
+                  O(n^3): the paper's choice, used offline / small n.
+  * ``sinkhorn``— entropic-OT relaxation solved with pure-JAX Sinkhorn
+                  iterations + greedy capacity rounding: the TPU-native,
+                  shardable large-d_h path (see DESIGN.md hardware notes).
+
+Both satisfy the hard balance constraint: every cluster gets exactly m
+members. L2 on binary activation columns == Hamming distance (Eq. 19).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclass
+class ClusterResult:
+    assignment: np.ndarray      # (n,) int32 cluster id, balanced
+    centroids: np.ndarray       # (N_r, q) float32
+    inertia: float              # sum of squared distances to centroid
+    iters: int
+
+
+def pairwise_sqdist(feats: Array, centroids: Array) -> Array:
+    """||c_i - ĉ_j||² via the expansion trick. feats (n, q), centroids (k, q)."""
+    f2 = jnp.sum(feats * feats, axis=1, keepdims=True)          # (n, 1)
+    c2 = jnp.sum(centroids * centroids, axis=1)[None, :]        # (1, k)
+    cross = feats @ centroids.T                                  # (n, k)
+    return jnp.maximum(f2 - 2.0 * cross + c2, 0.0)
+
+
+# ------------------------------------------------------------- backends
+
+def assign_jv(dist: np.ndarray, m: int) -> np.ndarray:
+    """Exact balanced assignment: expand each cluster column into m unit-
+    capacity columns and solve the square LAP (Jonker–Volgenant)."""
+    from scipy.optimize import linear_sum_assignment
+    n, k = dist.shape
+    assert n == k * m, (n, k, m)
+    expanded = np.repeat(dist, m, axis=1)                        # (n, n)
+    rows, cols = linear_sum_assignment(expanded)
+    assignment = np.empty(n, np.int32)
+    assignment[rows] = cols // m
+    return assignment
+
+
+def sinkhorn_plan(dist: Array, m: int, tau: float, iters: int) -> Array:
+    """Entropic OT plan with row marginal 1 and column marginal m (log-space
+    Sinkhorn, pure JAX)."""
+    n, k = dist.shape
+    logk = -dist / tau                                           # (n, k)
+    log_r = jnp.zeros((n,))                                      # row masses 1
+    log_c = jnp.full((k,), jnp.log(float(m)))                    # col masses m
+
+    def step(carry, _):
+        f, g = carry
+        # row update: f_i = -logsumexp_j(logk + g_j)
+        f = log_r - jax.nn.logsumexp(logk + g[None, :], axis=1)
+        g = log_c - jax.nn.logsumexp(logk + f[:, None], axis=0)
+        return (f, g), None
+
+    (f, g), _ = jax.lax.scan(step, (jnp.zeros((n,)), jnp.zeros((k,))),
+                             None, length=iters)
+    return jnp.exp(logk + f[:, None] + g[None, :])
+
+
+def round_plan_greedy(plan: np.ndarray, m: int) -> np.ndarray:
+    """Round a soft plan to a hard balanced assignment: visit (i, j) cells by
+    descending plan mass, assign while capacity remains."""
+    n, k = plan.shape
+    order = np.argsort(-plan, axis=None)
+    assignment = np.full(n, -1, np.int32)
+    capacity = np.full(k, m, np.int32)
+    assigned = 0
+    for flat in order:
+        i, j = divmod(int(flat), k)
+        if assignment[i] < 0 and capacity[j] > 0:
+            assignment[i] = j
+            capacity[j] -= 1
+            assigned += 1
+            if assigned == n:
+                break
+    # safety: any stragglers get remaining capacity
+    if assigned < n:
+        rem = np.where(assignment < 0)[0]
+        slots = np.repeat(np.arange(k), capacity)
+        assignment[rem] = slots[:len(rem)]
+    return assignment
+
+
+def assign_sinkhorn(dist: np.ndarray, m: int, tau: float = 0.05,
+                    iters: int = 100) -> np.ndarray:
+    scale = float(np.median(dist)) + 1e-9
+    plan = np.asarray(sinkhorn_plan(jnp.asarray(dist / scale), m, tau, iters))
+    return round_plan_greedy(plan, m)
+
+
+# ------------------------------------------------------------- k-means
+
+def balanced_kmeans(feats: np.ndarray, num_clusters: int, *,
+                    init_order: np.ndarray | None = None,
+                    method: str = "auto", max_iters: int = 8,
+                    tau: float = 0.05, sinkhorn_iters: int = 100,
+                    tol: float = 1e-4) -> ClusterResult:
+    """Balanced k-means: every cluster ends with exactly n/num_clusters
+    members.
+
+    feats: (n, q) float; ``init_order``: priority order for centroid seeding
+    (paper: remaining neurons with highest activation rates); ``method``:
+    jv | sinkhorn | auto (jv when n <= 2048).
+    """
+    feats = np.asarray(feats, np.float32)
+    n, q = feats.shape
+    assert n % num_clusters == 0, (n, num_clusters)
+    m = n // num_clusters
+    if method == "auto":
+        method = "jv" if n <= 2048 else "sinkhorn"
+
+    if init_order is None:
+        init_order = np.arange(n)
+    centroids = feats[init_order[:num_clusters]].copy()
+
+    assignment = None
+    inertia = np.inf
+    it = 0
+    for it in range(1, max_iters + 1):
+        dist = np.asarray(pairwise_sqdist(jnp.asarray(feats),
+                                          jnp.asarray(centroids)))
+        if method == "jv":
+            new_assignment = assign_jv(dist, m)
+        elif method == "sinkhorn":
+            new_assignment = assign_sinkhorn(dist, m, tau=tau,
+                                             iters=sinkhorn_iters)
+        else:
+            raise ValueError(method)
+        new_inertia = float(dist[np.arange(n), new_assignment].sum())
+        # centroid update (Eq. 21)
+        for j in range(num_clusters):
+            members = feats[new_assignment == j]
+            if len(members):
+                centroids[j] = members.mean(axis=0)
+        if assignment is not None and (assignment == new_assignment).all():
+            assignment, inertia = new_assignment, new_inertia
+            break
+        if new_inertia > inertia - tol * max(inertia, 1.0) and \
+                assignment is not None:
+            if new_inertia < inertia:
+                assignment, inertia = new_assignment, new_inertia
+            break
+        assignment, inertia = new_assignment, new_inertia
+    return ClusterResult(assignment=assignment, centroids=centroids,
+                         inertia=inertia, iters=it)
+
+
+def representative_neurons(feats: np.ndarray, result: ClusterResult) -> np.ndarray:
+    """R_j = argmin_{i in cluster j} ||c_i - ĉ_j|| (Eq. 7/25).
+    Returns (N_r,) indices into feats rows."""
+    k = result.centroids.shape[0]
+    dist = np.asarray(pairwise_sqdist(jnp.asarray(feats),
+                                      jnp.asarray(result.centroids)))
+    reps = np.empty(k, np.int64)
+    for j in range(k):
+        members = np.where(result.assignment == j)[0]
+        reps[j] = members[np.argmin(dist[members, j])]
+    return reps

@@ -1,0 +1,114 @@
+"""End-to-end dense → CMoE model conversion (paper §4, Figure 3).
+
+Pipeline per FFN layer:
+  1. capture pre-FFN activations on the calibration batch,
+  2. compute hidden states h and ATopK profile (A, μ),
+  3. partition: shared experts (top-μ) + balanced clustering of the rest,
+  4. slice original weights into the CMoE tree + analytical router.
+
+`convert_dense_model` converts every FFN layer of a dense-family model and
+returns a model whose config carries the CMoEConfig — the converted layers
+run through `repro.core.moe_ffn.cmoe_ffn`. The loop over layers is serial
+on the host (exactly how a 70B would be converted: layer-streamed, tiny
+memory), profiling itself is JAX on device.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import CMoEConfig, ModelConfig
+from repro.core.partition import (PartitionResult, build_cmoe_params,
+                                  partition_neurons)
+from repro.core.profiling import profile_hidden
+from repro.models.layers import ffn_hidden
+from repro.models.model import Model, build_model
+
+Array = jax.Array
+
+
+@dataclass
+class ConversionReport:
+    seconds_total: float
+    seconds_profile: float
+    seconds_cluster: float
+    num_layers: int
+    parts: list            # PartitionResult per layer
+    calib_tokens: int
+
+
+def convert_ffn_layer(ffn_params: dict, x_calib: Array, cm: CMoEConfig,
+                      activation: str):
+    """Convert one FFN given its calibration inputs x_calib (q, d)."""
+    h = ffn_hidden(x_calib, ffn_params, activation)          # (q, d_h)
+    a, mu = profile_hidden(h, cm.k_activation)
+    part = partition_neurons(np.asarray(a), np.asarray(mu), cm)
+    cmoe_p = build_cmoe_params(ffn_params, part, cm, activation)
+    return cmoe_p, part
+
+
+def convert_dense_model(model: Model, params: dict, calib_batch: dict,
+                        cm: CMoEConfig,
+                        router_fit: Optional[Callable] = None):
+    """Convert every FFN layer. Returns (cmoe_model, cmoe_params, report).
+
+    ``router_fit``: optional override producing router params from
+    (x_calib, h, part) — used by the baseline ablations (learned routers);
+    None means the paper's analytical representative-neuron router.
+    """
+    cfg = model.cfg
+    assert cfg.family in ("dense", "vlm", "audio"), \
+        f"use hierarchical conversion for {cfg.family}"
+    t0 = time.perf_counter()
+    taps = model.ffn_inputs(params, calib_batch)             # (L, B, S, d)
+    taps = jax.device_get(taps)
+    l, b, s, d = taps.shape
+    x_all = jnp.asarray(taps.reshape(l, b * s, d))
+    t_profile = time.perf_counter() - t0
+
+    blocks = params["blocks"]
+    cmoe_layers = []
+    parts = []
+    t1 = time.perf_counter()
+    for li in range(l):
+        ffn_l = jax.tree.map(lambda a: a[li], blocks["ffn"])
+        h = ffn_hidden(x_all[li], ffn_l, cfg.activation)
+        a, mu = profile_hidden(h, cm.k_activation)
+        part = partition_neurons(np.asarray(a), np.asarray(mu), cm)
+        cmoe_p = build_cmoe_params(ffn_l, part, cm, cfg.activation)
+        if router_fit is not None:
+            cmoe_p["router"] = router_fit(x_all[li], h, part)
+        cmoe_layers.append(cmoe_p)
+        parts.append(part)
+    t_cluster = time.perf_counter() - t1
+
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *cmoe_layers)
+    new_blocks = {k: v for k, v in blocks.items() if k != "ffn"}
+    new_blocks["cmoe"] = stacked
+    new_params = {**params, "blocks": new_blocks}
+
+    new_cfg = cfg.with_cmoe(cm)
+    new_model = build_model(new_cfg, use_kernel=model.use_kernel)
+    report = ConversionReport(
+        seconds_total=time.perf_counter() - t0,
+        seconds_profile=t_profile,
+        seconds_cluster=t_cluster,
+        num_layers=l,
+        parts=parts,
+        calib_tokens=b * s,
+    )
+    return new_model, new_params, report
+
+
+def reconstruction_error(model: Model, params: dict, cmoe_model: Model,
+                         cmoe_params: dict, batch: dict) -> float:
+    """E_x || F_MoE(x) - F(x) ||² on final hidden states (Eq. 2 surrogate)."""
+    h_dense = model.hidden_states(params, batch)
+    h_moe = cmoe_model.hidden_states(cmoe_params, batch)
+    diff = (h_dense.astype(jnp.float32) - h_moe.astype(jnp.float32))
+    return float(jnp.mean(jnp.sum(diff * diff, axis=-1)))

@@ -1,0 +1,198 @@
+"""Hierarchical application to existing MoE models (paper §4.4, Eq. 10).
+
+Each routed expert E_i is restructured into shared + routed SUB-experts with
+its own analytical sub-router. At runtime the two-level routing is flattened:
+after the top-level dispatch produces (E, C, d) expert buffers, sub-expert
+selection is a SECOND grouped dispatch over E·N_r' flat sub-experts —
+re-using the exact same capacity machinery (one extra all-to-all on TPU,
+see DESIGN.md).
+
+Param layout on a converted MoE block:
+  p["moe"]   keeps router / balance_bias / shared_* (top level, unchanged)
+  p["cmoe"]  = {
+     "shared": {wg,wu,wd}: (E, d, ms) / (E, ms, d),
+     "routed": {wg,wu,wd}: (E, N_r', d, m') / (E, N_r', m', d),
+     "router": {wg_r,wu_r}: (E, d, N_r'),
+     "u", "bias": (E, N_r'),
+  }
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import CMoEConfig
+from repro.core.partition import build_cmoe_params, partition_neurons
+from repro.core.profiling import profile_hidden
+from repro.core.router import cmoe_gate
+from repro.models.layers import matmul, swish
+from repro.models.moe import (DispatchInfo, assign_positions, combine,
+                              dispatch, expert_capacity, expert_ffn)
+from repro.models.model import Model, build_model
+
+Array = jax.Array
+
+
+@dataclass
+class HierarchicalReport:
+    seconds_total: float
+    num_layers: int
+    num_experts: int
+
+
+def convert_expert(wg_e, wu_e, wd_e, x_calib, cm: CMoEConfig,
+                   activation: str):
+    """Convert ONE routed expert (d, m) weights into sub-experts."""
+    ffn_e = {"wg": wg_e, "wu": wu_e, "wd": wd_e}
+    from repro.models.layers import ffn_hidden
+    h = ffn_hidden(x_calib, ffn_e, activation)
+    a, mu = profile_hidden(h, cm.k_activation)
+    part = partition_neurons(np.asarray(a), np.asarray(mu), cm)
+    return build_cmoe_params(ffn_e, part, cm, activation), part
+
+
+def convert_moe_model(model: Model, params: dict, calib_batch: dict,
+                      cm: CMoEConfig):
+    """Hierarchically convert every routed expert of every MoE layer."""
+    cfg = model.cfg
+    assert cfg.family == "moe", cfg.family
+    t0 = time.perf_counter()
+    taps = model.ffn_inputs(params, calib_batch)
+    interleaved = isinstance(taps, dict)
+    moe_taps = taps["moe"] if interleaved else taps
+    moe_taps = np.asarray(jax.device_get(moe_taps))
+    l, b, s, d = moe_taps.shape
+    x_all = jnp.asarray(moe_taps.reshape(l, b * s, d))
+
+    key = "blocks_moe" if interleaved else "blocks"
+    blocks = params[key]
+    new_layers = []
+    for li in range(l):
+        moe_p = jax.tree.map(lambda a: a[li], blocks["moe"])
+        e = moe_p["wg"].shape[0]
+        per_expert = []
+        for ei in range(e):
+            cmoe_e, _ = convert_expert(moe_p["wg"][ei], moe_p["wu"][ei],
+                                       moe_p["wd"][ei], x_all[li], cm,
+                                       cfg.activation)
+            per_expert.append(cmoe_e)
+        stacked_e = jax.tree.map(lambda *xs: jnp.stack(xs), *per_expert)
+        new_layers.append(stacked_e)
+    cmoe_stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *new_layers)
+
+    new_moe = {k: v for k, v in blocks["moe"].items()
+               if k not in ("wg", "wu", "wd")}
+    new_blocks = {k: v for k, v in blocks.items() if k != "moe"}
+    new_blocks["moe"] = new_moe
+    new_blocks["cmoe"] = cmoe_stacked
+    new_params = {**params, key: new_blocks}
+
+    new_model = build_model(cfg.with_cmoe(cm), use_kernel=model.use_kernel)
+    report = HierarchicalReport(time.perf_counter() - t0, l, e)
+    return new_model, new_params, report
+
+
+# ------------------------------------------------------------- runtime
+
+def hierarchical_moe_ffn(x: Array, p: dict, cfg, *, use_kernel: bool = False):
+    """Two-level MoE forward on a converted block. x: (B, S, d)."""
+    moe = cfg.moe
+    cm = cfg.cmoe
+    b, s, d = x.shape
+    xf = x.reshape(b * s, d)
+    t = b * s
+
+    # ---- top level (original router, unchanged) ----
+    scores = matmul(xf, p["moe"]["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(scores, axis=-1)
+    sel = probs
+    if moe.balance_bias and "balance_bias" in p["moe"]:
+        sel = probs + p["moe"]["balance_bias"][None, :]
+    gates, idx = jax.lax.top_k(sel, moe.top_k)
+    gates = jnp.take_along_axis(probs, idx, axis=1)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    capacity = expert_capacity(t, moe.num_experts, moe.top_k,
+                               moe.capacity_factor)
+    position, keep = assign_positions(idx, moe.num_experts, capacity)
+    info = DispatchInfo(idx, position, keep, gates.astype(x.dtype))
+    xbuf = dispatch(xf, info, moe.num_experts, capacity)     # (E, C, d)
+    occupancy = jnp.zeros((moe.num_experts, capacity), jnp.int32).at[
+        jnp.where(info.keep.reshape(-1), info.expert_idx.reshape(-1), 0),
+        jnp.where(info.keep.reshape(-1), info.position.reshape(-1), 0)
+    ].add(info.keep.reshape(-1).astype(jnp.int32)) > 0
+
+    cp = p["cmoe"]
+    e = moe.num_experts
+    n_r = cm.num_routed
+
+    # ---- sub-level shared experts (always active) ----
+    g = jnp.einsum("ecd,eds->ecs", xbuf, cp["shared"]["wg"].astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,eds->ecs", xbuf, cp["shared"]["wu"].astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    act = (lambda v: v * jax.nn.sigmoid(v)) if cfg.activation == "swiglu" \
+        else jax.nn.gelu
+    h_sh = (act(g) * u).astype(x.dtype)
+    y_shared = jnp.einsum("ecs,esd->ecd", h_sh,
+                          cp["shared"]["wd"].astype(x.dtype),
+                          preferred_element_type=jnp.float32).astype(x.dtype)
+
+    # ---- sub-level routed: flatten to E*N_r' sub-experts ----
+    sg = jnp.einsum("ecd,edn->ecn", xbuf, cp["router"]["wg_r"].astype(
+        x.dtype), preferred_element_type=jnp.float32)
+    su = jnp.einsum("ecd,edn->ecn", xbuf, cp["router"]["wu_r"].astype(
+        x.dtype), preferred_element_type=jnp.float32)
+    sub_scores = (act(sg) * su)                              # (E, C, N_r')
+    sub_scores_f = sub_scores.reshape(e * capacity, n_r)
+    bias = cp.get("bias")
+    u_scale = cp.get("u") if cm.learnable_scaling else None
+    sub_probs = jax.nn.softmax(sub_scores_f, axis=-1)
+    sel2 = sub_probs
+    if bias is not None:
+        sel2 = sub_probs + jnp.repeat(bias, capacity, axis=0)
+    _, sub_idx = jax.lax.top_k(sel2, cm.top_k)               # (E*C, k')
+    p_sel = jnp.take_along_axis(sub_probs, sub_idx, axis=1)
+    if u_scale is not None:
+        u_rows = jnp.repeat(u_scale, capacity, axis=0)       # (E*C, N_r')
+        sub_gates = 1.0 + p_sel * jnp.take_along_axis(u_rows, sub_idx, axis=1)
+    else:
+        sub_gates = jnp.ones_like(p_sel)
+
+    # global flat sub-expert ids: e * N_r' + j
+    owner = jnp.repeat(jnp.arange(e), capacity)[:, None]     # (E*C, 1)
+    flat_sub = owner * n_r + sub_idx
+    occ = occupancy.reshape(-1)                              # (E*C,)
+    sub_cap = expert_capacity(e * capacity, e * n_r, cm.top_k,
+                              moe.capacity_factor)
+    sub_pos, sub_keep = assign_positions(flat_sub, e * n_r, sub_cap)
+    sub_keep = sub_keep & occ[:, None]
+    sub_info = DispatchInfo(flat_sub, sub_pos, sub_keep,
+                            sub_gates.astype(x.dtype))
+    xsub = dispatch(xbuf.reshape(e * capacity, d), sub_info, e * n_r, sub_cap)
+    ysub = expert_ffn(
+        xsub,
+        cp["routed"]["wg"].reshape(e * n_r, d, -1),
+        cp["routed"]["wu"].reshape(e * n_r, d, -1),
+        cp["routed"]["wd"].reshape(e * n_r, -1, d),
+        cfg.activation, use_kernel=use_kernel)
+    y_routed = combine(ysub, sub_info).reshape(e, capacity, d)
+
+    ybuf = y_shared + y_routed
+    out = combine(ybuf, info)
+
+    # ---- top-level shared experts (deepseek) ----
+    if moe.num_shared > 0 and "shared_wg" in p["moe"]:
+        g = matmul(xf, p["moe"]["shared_wg"]).astype(jnp.float32)
+        u2 = matmul(xf, p["moe"]["shared_wu"]).astype(jnp.float32)
+        h = (act(g) * u2).astype(x.dtype)
+        out = out + matmul(h, p["moe"]["shared_wd"])
+
+    load = jnp.zeros((moe.num_experts,), jnp.float32).at[idx.reshape(-1)].add(
+        keep.reshape(-1).astype(jnp.float32)) / (t * moe.top_k)
+    aux = {"load": load, "router_probs_mean": probs.mean(0)}
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,121 @@
+"""Neuron partitioning (paper §4.1): shared-expert selection by activation
+rate, routed-expert construction by balanced clustering, and assembly of the
+CMoE parameter tree from slices of the ORIGINAL FFN weights.
+
+The conversion is exact by construction: shared ∪ routed neurons form a
+permutation of the original hidden dimension, so activating everything
+reproduces the dense output bit-for-bit (the core test invariant).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import CMoEConfig
+from repro.core.clustering import (ClusterResult, balanced_kmeans,
+                                   representative_neurons)
+
+Array = jnp.ndarray
+
+
+@dataclass
+class PartitionResult:
+    shared_idx: np.ndarray        # (N_s * m,) original neuron indices
+    routed_idx: np.ndarray        # (N_r, m) original neuron indices
+    rep_idx: np.ndarray           # (N_r,) representative neuron (original id)
+    mu: np.ndarray                # (d_h,) activation rates
+    cluster: ClusterResult | None
+
+
+def partition_neurons(a: np.ndarray, mu: np.ndarray,
+                      cm: CMoEConfig) -> PartitionResult:
+    """a: (q, d_h) int8 ATopK matrix, mu: (d_h,) rates."""
+    a = np.asarray(a)
+    mu = np.asarray(mu)
+    dh = mu.shape[0]
+    n = cm.num_experts
+    assert dh % n == 0, f"d_h={dh} not divisible by num_experts={n}"
+    m = dh // n
+    n_shared = cm.num_shared * m
+
+    order = np.argsort(-mu, kind="stable")
+    shared_idx = np.sort(order[:n_shared])
+    routed_pool = np.sort(order[n_shared:])                  # original ids
+
+    feats = a[:, routed_pool].T.astype(np.float32)           # (n_routed, q)
+    # centroid seeding: highest-rate neurons among the routed pool (Eq. 17)
+    seed_order = np.argsort(-mu[routed_pool], kind="stable")
+    result = balanced_kmeans(feats, cm.num_routed,
+                             init_order=seed_order,
+                             method=cm.assignment,
+                             tau=cm.sinkhorn_tau,
+                             sinkhorn_iters=cm.sinkhorn_iters)
+    routed_idx = np.stack([routed_pool[result.assignment == j]
+                           for j in range(cm.num_routed)])   # (N_r, m)
+    reps_local = representative_neurons(feats, result)
+    rep_idx = routed_pool[reps_local]
+    return PartitionResult(shared_idx=shared_idx, routed_idx=routed_idx,
+                           rep_idx=rep_idx, mu=mu, cluster=result)
+
+
+def build_cmoe_params(ffn: dict, part: PartitionResult, cm: CMoEConfig,
+                      activation: str) -> dict:
+    """Slice the original FFN weights into the CMoE parameter tree.
+
+    ffn: {"wg": (d, d_h), "wu": (d, d_h), "wd": (d_h, d)} for glu
+         {"wi": (d, d_h), "wd": (d_h, d)} for gelu.
+    """
+    sh = jnp.asarray(part.shared_idx)
+    rt = jnp.asarray(part.routed_idx)                         # (N_r, m)
+    rep = jnp.asarray(part.rep_idx)
+    wd = ffn["wd"]
+    if activation in ("swiglu", "geglu"):
+        wg, wu = ffn["wg"], ffn["wu"]
+        shared = {"wg": wg[:, sh], "wu": wu[:, sh], "wd": wd[sh, :]}
+        routed = {"wg": jnp.swapaxes(wg[:, rt], 0, 1),        # (N_r, d, m)
+                  "wu": jnp.swapaxes(wu[:, rt], 0, 1),
+                  "wd": wd[rt, :]}                            # (N_r, m, d)
+        router = {"wg_r": wg[:, rep], "wu_r": wu[:, rep]}     # (d, N_r)
+    else:
+        wi = ffn["wi"]
+        shared = {"wi": wi[:, sh], "wd": wd[sh, :]}
+        routed = {"wi": jnp.swapaxes(wi[:, rt], 0, 1),
+                  "wd": wd[rt, :]}
+        router = {"wi_r": wi[:, rep]}
+    return {
+        "shared": shared,
+        "routed": routed,
+        "router": router,
+        "u": jnp.zeros((cm.num_routed,), jnp.float32),
+        "bias": jnp.zeros((cm.num_routed,), jnp.float32),
+    }
+
+
+def reconstruct_dense_ffn(cmoe_p: dict, part: PartitionResult,
+                          activation: str, d_model: int) -> dict:
+    """Inverse of build_cmoe_params (used by tests): scatter slices back."""
+    dh = part.mu.shape[0]
+    dtype = cmoe_p["shared"]["wd"].dtype
+    wd = jnp.zeros((dh, d_model), dtype)
+    wd = wd.at[jnp.asarray(part.shared_idx)].set(cmoe_p["shared"]["wd"])
+    wd = wd.at[jnp.asarray(part.routed_idx).reshape(-1)].set(
+        cmoe_p["routed"]["wd"].reshape(-1, d_model))
+    out = {"wd": wd}
+    if activation in ("swiglu", "geglu"):
+        for name in ("wg", "wu"):
+            w = jnp.zeros((d_model, dh), dtype)
+            w = w.at[:, jnp.asarray(part.shared_idx)].set(
+                cmoe_p["shared"][name])
+            w = w.at[:, jnp.asarray(part.routed_idx).reshape(-1)].set(
+                jnp.swapaxes(cmoe_p["routed"][name], 0, 1).reshape(
+                    d_model, -1))
+            out[name] = w
+    else:
+        w = jnp.zeros((d_model, dh), dtype)
+        w = w.at[:, jnp.asarray(part.shared_idx)].set(cmoe_p["shared"]["wi"])
+        w = w.at[:, jnp.asarray(part.routed_idx).reshape(-1)].set(
+            jnp.swapaxes(cmoe_p["routed"]["wi"], 0, 1).reshape(d_model, -1))
+        out["wi"] = w
+    return out

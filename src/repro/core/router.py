@@ -1,0 +1,64 @@
+"""Analytical router (paper §4.2) + gating with learnable scaling and
+aux-loss-free load-balance bias (paper §4.3, Eq. 9)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import matmul, swish
+
+Array = jax.Array
+
+
+def router_scores(x: Array, router_p: dict, activation: str) -> Array:
+    """G(x) = Swish(x W_gate^R) ⊙ (x W_up^R)  (Eq. 8) — literally the FFN's
+    own representative-neuron columns. x: (T, d) -> scores (T, N_r) f32.
+
+    A {"w_lin"} router is a learned linear router (baseline ablations)."""
+    if "w_lin" in router_p:
+        return matmul(x, router_p["w_lin"]).astype(jnp.float32)
+    if activation in ("swiglu", "geglu"):
+        g = matmul(x, router_p["wg_r"]).astype(jnp.float32)
+        u = matmul(x, router_p["wu_r"]).astype(jnp.float32)
+        act = (lambda v: v * jax.nn.sigmoid(v)) if activation == "swiglu" \
+            else jax.nn.gelu
+        return act(g) * u
+    # gelu FFN (whisper): single-branch hidden
+    g = matmul(x, router_p["wi_r"]).astype(jnp.float32)
+    return jax.nn.gelu(g)
+
+
+def cmoe_gate(scores: Array, top_k: int, *,
+              u: Array | None = None,
+              bias: Array | None = None):
+    """Top-N_k gating (Eq. 9).
+
+    scores: (T, N_r) raw router scores. Returns (gates (T,k), idx (T,k),
+    probs (T,N_r)). Training-free: u=0 -> gates are exactly 1.
+    The balance bias shifts SELECTION only, never the gate value.
+    """
+    probs = jax.nn.softmax(scores, axis=-1)                     # s'
+    sel = probs if bias is None else probs + bias[None, :]
+    _, idx = jax.lax.top_k(sel, top_k)
+    p_sel = jnp.take_along_axis(probs, idx, axis=1)
+    if u is None:
+        gates = jnp.ones_like(p_sel)
+    else:
+        gates = 1.0 + p_sel * jnp.take_along_axis(
+            jnp.broadcast_to(u[None, :], probs.shape), idx, axis=1)
+    return gates, idx, probs
+
+
+def update_balance_bias(bias: Array, load: Array, gamma: float) -> Array:
+    """b_i += γ if underloaded (p_i < p*), -= γ if overloaded (paper §4.3).
+    load: (N_r,) utilization fractions summing ~1."""
+    n = bias.shape[0]
+    p_star = 1.0 / n
+    return bias + gamma * jnp.sign(p_star - load)
+
+
+def expert_load(idx: Array, keep: Array, num_experts: int) -> Array:
+    """Utilization fraction per expert from selected indices (T, k)."""
+    counts = jnp.zeros((num_experts,), jnp.float32).at[idx.reshape(-1)].add(
+        keep.reshape(-1).astype(jnp.float32))
+    return counts / jnp.maximum(counts.sum(), 1.0)

@@ -1,0 +1,3 @@
+from repro.data.loader import ShardedLoader  # noqa: F401
+from repro.data.synthetic import (make_calibration_batch,  # noqa: F401
+                                  synthetic_tokens)

@@ -1,0 +1,2 @@
+from repro.distributed.sharding import (batch_specs, cache_specs,  # noqa
+                                        param_specs, to_shardings)

@@ -1,0 +1,124 @@
+"""Activation-sharding policy: explicit with_sharding_constraint anchors.
+
+Without anchors GSPMD is free to propagate the FSDP weight shardings into
+the activations (feature-sharded, batch-replicated execution) — observed to
+blow per-device activation memory by the DP degree. The policy pins:
+  * residual streams  -> P(dp, [seq over model], None)
+  * CE logits chunks  -> P(dp, None, model)   (vocab stays TP-sharded)
+
+Model code calls `shard_residual` / `shard_logits`; they are no-ops unless
+a launcher installs a policy (so tests and single-device runs are
+unaffected).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def _policy():
+    return getattr(_STATE, "policy", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, *, seq_shard: bool = True,
+                        local_dispatch: bool = False,
+                        capacity_factor: float = 1.25):
+    old = _policy()
+    _STATE.policy = {"mesh": mesh, "seq_shard": seq_shard,
+                     "local_dispatch": local_dispatch,
+                     "capacity_factor": capacity_factor}
+    try:
+        yield
+    finally:
+        _STATE.policy = old
+
+
+def local_dispatch_mesh(batch_size: int):
+    """Mesh for shard_map-local CMoE dispatch, or None. Requires the
+    policy flag AND a batch divisible by the DP degree."""
+    pol = _policy()
+    if pol is None or not pol.get("local_dispatch"):
+        return None
+    mesh = pol["mesh"]
+    dp = _dp(mesh)
+    if dp is None or batch_size % _size(mesh, dp) != 0:
+        return None
+    return mesh
+
+
+def _dp(mesh: Mesh):
+    names = tuple(n for n in ("pod", "data") if n in mesh.axis_names)
+    return names if len(names) > 1 else (names[0] if names else None)
+
+
+def _size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        s = 1
+        for a in axis:
+            s *= mesh.shape[a]
+        return s
+    return mesh.shape.get(axis, 1) if hasattr(mesh.shape, "get") else \
+        mesh.shape[axis]
+
+
+def shard_residual(x: jax.Array) -> jax.Array:
+    """x: (B, S, d) residual-stream activation."""
+    pol = _policy()
+    if pol is None or x.ndim != 3:
+        return x
+    mesh = pol["mesh"]
+    dp = _dp(mesh)
+    b, s, _ = x.shape
+    bspec = dp if (dp and b % _size(mesh, dp) == 0) else None
+    sspec = None
+    if pol["seq_shard"] and s > 1 and s % _size(mesh, "model") == 0 and \
+            _size(mesh, "model") > 1:
+        sspec = "model"
+    if bspec is None and sspec is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(bspec, sspec, None)))
+
+
+def attn_chunk_hint(seq_len: int, default: int) -> int:
+    """With a sequence-sharded residual, flash q-chunks must divide the
+    per-device sequence slice or the block reshape forces an all-gather.
+    Returns a chunk_q aligned to S / model_size when SP is on."""
+    pol = _policy()
+    if pol is None or not pol["seq_shard"]:
+        return default
+    msize = _size(pol["mesh"], "model")
+    if msize <= 1 or seq_len % msize:
+        return default
+    return max(128, min(default, seq_len // msize))
+
+
+def shard_logits(x: jax.Array) -> jax.Array:
+    """x: (B, chunk, V) CE logits chunk — vocab over model."""
+    pol = _policy()
+    if pol is None or x.ndim != 3:
+        return x
+    mesh = pol["mesh"]
+    dp = _dp(mesh)
+    b, _, v = x.shape
+    bspec = dp if (dp and b % _size(mesh, dp) == 0) else None
+    vspec = "model" if v % _size(mesh, "model") == 0 and \
+        _size(mesh, "model") > 1 else None
+    if bspec is None and vspec is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(bspec, None, vspec)))
+
+
+def policy_capacity_factor(default: float = 1.25) -> float:
+    pol = _policy()
+    return pol.get("capacity_factor", default) if pol else default

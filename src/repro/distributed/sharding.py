@@ -1,0 +1,251 @@
+"""Sharding rules: logical parallelism (DP / FSDP / TP / EP / sequence
+sharding) mapped onto the physical (pod, data, model) mesh.
+
+Strategy (baseline — the §Perf iterations adjust from here):
+  * batch over (pod, data)  — DP; gradients reduce over those axes;
+  * weights: TP over `model` on the semantically-parallel dim (heads, FFN
+    width, experts) + FSDP over `data`(+`pod`) on the other large dim —
+    GSPMD all-gathers per layer inside the scan (ZeRO-3 style);
+  * experts over `model` (EP folded into the TP axis: one physical ring
+    carries both TP reduce and EP all-to-all — roofline shows which wins);
+  * KV caches: batch over DP; heads over `model` when divisible, else the
+    TIME dim over `model` (flash-decode style partial softmax);
+  * anything unmatched falls back to a greedy divisibility-checked spec.
+
+Rules are name-based over the param tree; every assignment is divisibility
+checked so one table serves all ten architectures.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Array = jax.Array
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        s = 1
+        for n in name:
+            s *= _axis_size(mesh, n)
+        return s
+    return mesh.shape[name] if name in mesh.axis_names else 0
+
+
+def dp_axes(mesh: Mesh):
+    names = tuple(n for n in ("pod", "data") if n in mesh.axis_names)
+    return names if len(names) > 1 else (names[0] if names else None)
+
+
+def _fit(shape, template, mesh) -> P:
+    """Drop axes that don't divide the corresponding dim; never double-use
+    an axis."""
+    used = set()
+    out = []
+    for dim, want in zip(shape, template):
+        if want is None:
+            out.append(None)
+            continue
+        cands = want if isinstance(want, (list,)) else [want]
+        placed = None
+        for cand in cands:
+            size = _axis_size(mesh, cand)
+            flat = cand if isinstance(cand, tuple) else (cand,)
+            if size > 1 and dim % size == 0 and not (set(flat) & used):
+                placed = cand
+                used.update(flat)
+                break
+        out.append(placed)
+    return P(*out)
+
+
+# template tables keyed by the leaf's last path component; templates are per
+# TRAILING dims (leading stack dims L / E are padded with None)
+def _param_template(name: str, ndim_trailing: int, dp) -> Optional[list]:
+    t = {
+        # embeddings / heads. NOTE: sharding BOTH dims of the embed table
+        # makes GSPMD's gather partitioner bail to full rematerialization
+        # (observed: 64 GiB replicated embedding output on deepseek
+        # prefill) — vocab over model only, d replicated.
+        "embed": [["model"], None],
+        "lm_head": [None, ["model"]],
+        "enc_pos": [None, None],
+        "vision_proj": [None, None],
+        # attention
+        "wq": [[dp, "data"], ["model"], None],
+        "wk": [[dp, "data"], ["model"], None],
+        "wv": [[dp, "data"], ["model"], None],
+        "wo": [["model"], None, [dp, "data"]],
+        "bq": [["model"], None],
+        "bk": [["model"], None],
+        "bv": [["model"], None],
+        # dense FFN
+        "wg": [[dp, "data"], ["model"]],
+        "wu": [[dp, "data"], ["model"]],
+        "wi": [[dp, "data"], ["model"]],
+        "wd": [["model"], [dp, "data"]],
+        # MoE
+        "router": [[dp, "data"], None],
+        "balance_bias": [None],
+        "shared_wg": [[dp, "data"], ["model"]],
+        "shared_wu": [[dp, "data"], ["model"]],
+        "shared_wd": [["model"], [dp, "data"]],
+        # MLA
+        "q_dproj": [[dp, "data"], None],
+        "q_uproj": [None, ["model"], None],
+        "kv_dproj": [[dp, "data"], None],
+        "kv_uproj": [None, ["model"], None],
+        # mamba2 (TP on the SSM mixer is intentionally off — see DESIGN.md)
+        "in_proj": [[dp, "data"], None],
+        "out_proj": [None, [dp, "data"]],
+        "conv_w": [None, None],
+        "conv_b": [None],
+        # CMoE router columns
+        "wg_r": [[dp, "data"], None],
+        "wu_r": [[dp, "data"], None],
+        "wi_r": [[dp, "data"], None],
+        "w_lin": [[dp, "data"], None],
+    }
+    tpl = t.get(name)
+    if tpl is None:
+        return None
+    if len(tpl) != ndim_trailing:
+        return None
+    return tpl
+
+
+def _spec_for_param(path, leaf, mesh) -> P:
+    names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+    name = names[-1]
+    dp = dp_axes(mesh)
+    shape = leaf.shape
+    ndim = len(shape)
+    in_moe = any(n in ("moe", "cmoe") for n in names)
+    in_routed = "routed" in names
+
+    # expert-stacked weights: (E, d, m) / (E, m, d) or hierarchical with
+    # extra leading dims. EP: experts over model.
+    if in_moe and name in ("wg", "wu", "wd", "wi") and ndim >= 3:
+        # find trailing template
+        if in_routed and ndim >= 3:
+            # CMoE routed: (.., N_r, d, m) — N_r small: TP the m dim
+            base = ([None, [dp, "data"], ["model"]]
+                    if name in ("wg", "wu", "wi")
+                    else [None, ["model"], [dp, "data"]])
+        else:
+            # pretrained MoE experts: (.., E, d, m) — EP over model
+            base = ([["model"], [dp, "data"], None]
+                    if name in ("wg", "wu", "wi")
+                    else [["model"], None, [dp, "data"]])
+        tpl = [None] * (ndim - 3) + base
+        return _fit(shape, tpl, mesh)
+
+    tpl = None
+    for trailing in range(ndim, 0, -1):
+        tpl = _param_template(name, trailing, dp)
+        if tpl is not None:
+            tpl = [None] * (ndim - trailing) + tpl
+            break
+    if tpl is None:
+        # norm scales / biases / tiny leaves: REPLICATE. Sharding a (d,)
+        # scale over the mesh drags activations into feature-sharding and
+        # un-shards the batch (observed: 78 GiB/device). Only leaves with
+        # >= 2**22 elements fall through to the greedy FSDP fallback.
+        if int(np.prod(shape)) < (1 << 22):
+            return P(*([None] * ndim))
+        order = list(np.argsort(shape)[::-1])
+        tpl = [None] * ndim
+        for axis_name in (["model"], [dp, "data"]):
+            for d in order:
+                if tpl[d] is not None:
+                    continue
+                trial = list(tpl)
+                trial[d] = axis_name
+                cand = _fit(shape, trial, mesh)
+                if cand != P(*tpl):
+                    tpl = [cand[i] for i in range(ndim)]
+                    break
+        return P(*tpl)
+    return _fit(shape, tpl, mesh)
+
+
+def param_specs(abstract_params: Any, mesh: Mesh):
+    """PartitionSpec tree for a param (or optimizer-state) tree."""
+    flat = jax.tree_util.tree_flatten_with_path(abstract_params)[0]
+    specs = [_spec_for_param(p, l, mesh) if getattr(l, "ndim", 0) > 0
+             else P() for p, l in flat]
+    treedef = jax.tree_util.tree_structure(abstract_params)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ------------------------------------------------------------- batches
+
+def batch_specs(batch_tree: Any, mesh: Mesh):
+    """Batch dim over DP; everything else replicated (baseline)."""
+    dp = dp_axes(mesh)
+
+    def spec(leaf):
+        if leaf.ndim == 0:
+            return P()
+        b = leaf.shape[0]
+        if b % max(_axis_size(mesh, dp), 1) == 0 and \
+                _axis_size(mesh, dp) > 1:
+            return P(*([dp] + [None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree.map(spec, batch_tree)
+
+
+def cache_specs(cache_tree: Any, mesh: Mesh):
+    """KV/state caches: greedy — batch dim over DP when divisible, then the
+    largest remaining dim over model (heads if divisible, else time)."""
+    dp = dp_axes(mesh)
+    dp_size = _axis_size(mesh, dp)
+    msize = _axis_size(mesh, "model")
+
+    def spec(leaf):
+        if leaf.ndim == 0:
+            return P()
+        shape = leaf.shape
+        out = [None] * leaf.ndim
+        # caches are stacked (L, B, ...): batch dim is index 1 (or 0 when
+        # not stacked). find first dim divisible by dp among dims 0..1
+        used_dp = False
+        for bdim in (1, 0):
+            if bdim < leaf.ndim and shape[bdim] % dp_size == 0 and \
+                    dp_size > 1:
+                out[bdim] = dp
+                used_dp = True
+                break
+        # model axis: prefer a head-like dim (second-to-last), else largest
+        cands = sorted(range(leaf.ndim), key=lambda i: -shape[i])
+        pref = [leaf.ndim - 2] + cands if leaf.ndim >= 2 else cands
+        for i in pref:
+            if i < 0 or out[i] is not None:
+                continue
+            if shape[i] % msize == 0 and msize > 1 and shape[i] > msize:
+                # batch-of-1 long-context: fold DP into the same big dim so
+                # a 500k cache shards over the WHOLE mesh, not one ring
+                if not used_dp and dp is not None and \
+                        shape[i] % (msize * dp_size) == 0 and \
+                        shape[i] > 4 * msize * dp_size:
+                    axes = (dp if isinstance(dp, tuple) else (dp,)) + \
+                        ("model",)
+                    out[i] = axes
+                else:
+                    out[i] = "model"
+                break
+        return P(*out)
+
+    return jax.tree.map(spec, cache_tree)
+
+
+def to_shardings(spec_tree: Any, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

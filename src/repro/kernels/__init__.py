@@ -1,0 +1,5 @@
+# Pallas TPU kernels for the compute hot spots: fused SwiGLU FFN, CMoE
+# routed-expert grouped matmul, analytical router scoring, flash attention,
+# and the Mamba2 SSD chunk scan. `ops` holds the jit'd public wrappers,
+# `ref` the pure-jnp oracles the tests compare against.
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,67 @@
+"""CMoE routed-expert grouped matmul Pallas kernel (TPU target).
+
+After capacity dispatch, routed-expert compute is a batched GEMM over
+(E, C, d) token bins with per-expert weight slabs — exactly MXU-shaped work.
+This kernel fuses the whole expert FFN (gate ⊙ up → down) per expert so the
+per-expert hidden (C, m) stays in VMEM.
+
+Grid (E, C/bc, m/bm); the output block (bc, d) is revisited across the
+m-dimension and accumulated in f32 scratch. m is the CMoE expert width
+(d_h / N, e.g. 1376 for Llama-2-7B E8), so bm=128..512 tiles it cleanly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref, *,
+            activation: str):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0]                                     # (bc, d)
+    g = jnp.dot(x, wg_ref[0], preferred_element_type=jnp.float32)
+    u = jnp.dot(x, wu_ref[0], preferred_element_type=jnp.float32)
+    if activation == "swiglu":
+        h = g * jax.nn.sigmoid(g) * u
+    else:
+        h = jax.nn.gelu(g) * u
+    acc_ref[...] += jnp.dot(h.astype(x.dtype), wd_ref[0],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def moe_gmm(xbuf: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array,
+            *, activation: str = "swiglu", block_c: int = 128,
+            block_m: int = 128, interpret: bool = True) -> jax.Array:
+    """xbuf: (E, C, d); wg/wu: (E, d, m); wd: (E, m, d) -> (E, C, d).
+    Caller pads C and m to block multiples."""
+    e, c, d = xbuf.shape
+    m = wg.shape[2]
+    assert c % block_c == 0 and m % block_m == 0, (c, m, block_c, block_m)
+    grid = (e, c // block_c, m // block_m)
+    return pl.pallas_call(
+        functools.partial(_kernel, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_c, d), lambda e_, i, k: (e_, i, 0)),
+            pl.BlockSpec((1, d, block_m), lambda e_, i, k: (e_, 0, k)),
+            pl.BlockSpec((1, d, block_m), lambda e_, i, k: (e_, 0, k)),
+            pl.BlockSpec((1, block_m, d), lambda e_, i, k: (e_, k, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, d), lambda e_, i, k: (e_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, c, d), xbuf.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, d), jnp.float32)],
+        interpret=interpret,
+    )(xbuf, wg, wu, wd)

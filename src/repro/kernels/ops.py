@@ -1,0 +1,139 @@
+"""jit'd wrappers around the Pallas kernels: shape padding, dtype handling,
+interpret-mode selection (CPU validates the kernel bodies; TPU compiles
+them), and fallbacks to the jnp oracle where a kernel precondition fails.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.flash_decode import flash_decode as _flash_decode
+from repro.kernels.moe_gmm import moe_gmm as _moe_gmm
+from repro.kernels.router_score import router_score as _router
+from repro.kernels.ssd_scan import ssd_scan as _ssd
+from repro.kernels.swiglu import swiglu_ffn as _swiglu
+
+Array = jax.Array
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: Array, axis: int, mult: int) -> tuple[Array, int]:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad:
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        x = jnp.pad(x, widths)
+    return x, n
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "block_t",
+                                             "block_f"))
+def swiglu_ffn(x: Array, wg: Array, wu: Array, wd: Array, *,
+               activation: str = "swiglu", block_t: int = 128,
+               block_f: int = 128) -> Array:
+    """x: (..., d). Pads tokens and f to block multiples."""
+    shape = x.shape
+    xf = x.reshape(-1, shape[-1])
+    xf, t0 = _pad_to(xf, 0, block_t)
+    wg_p, f0 = _pad_to(wg, 1, block_f)
+    wu_p, _ = _pad_to(wu, 1, block_f)
+    wd_p, _ = _pad_to(wd, 0, block_f)
+    out = _swiglu(xf, wg_p, wu_p, wd_p, activation=activation,
+                  block_t=block_t, block_f=block_f,
+                  interpret=_interpret())
+    return out[:t0].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "block_c",
+                                             "block_m"))
+def moe_gmm(xbuf: Array, wg: Array, wu: Array, wd: Array, *,
+            activation: str = "swiglu", block_c: int = 128,
+            block_m: int = 128) -> Array:
+    xb, c0 = _pad_to(xbuf, 1, block_c)
+    wg_p, m0 = _pad_to(wg, 2, block_m)
+    wu_p, _ = _pad_to(wu, 2, block_m)
+    wd_p, _ = _pad_to(wd, 1, block_m)
+    out = _moe_gmm(xb, wg_p, wu_p, wd_p, activation=activation,
+                   block_c=block_c, block_m=block_m,
+                   interpret=_interpret())
+    return out[:, :c0]
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "block_t"))
+def router_score(x: Array, wg_r: Array, wu_r: Array, *,
+                 activation: str = "swiglu", block_t: int = 256) -> Array:
+    xf, t0 = _pad_to(x, 0, block_t)
+    out = _router(xf, wg_r, wu_r, activation=activation, block_t=block_t,
+                  interpret=_interpret())
+    return out[:t0]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    block_q: int = 128, block_k: int = 128) -> Array:
+    """q: (BH, S, D); k/v: (BH, T, D). Pads S/T; padded kv columns are
+    masked out by the causal structure or sliced away."""
+    qp, s0 = _pad_to(q, 1, block_q)
+    kp, t0 = _pad_to(k, 1, block_k)
+    vp, _ = _pad_to(v, 1, block_k)
+    if kp.shape[1] != t0 and not causal:
+        # non-causal: padded keys must not receive mass — fall back
+        return ref.flash_attention_ref(q, k, v, causal=False)
+    out = _flash(qp, kp, vp, causal=causal, block_q=block_q,
+                 block_k=block_k, interpret=_interpret())
+    return out[:, :s0]
+
+
+def ssd_scan(xh: Array, dt: Array, b: Array, c: Array, a_log: Array,
+             d_skip: Array, *, chunk: int = 128, h0: Array | None = None):
+    """Drop-in for `repro.models.ssm.ssd_chunked` (same signature/returns).
+
+    xh: (B, S, nh, hp); dt: (B, S, nh); b/c: (B, S, N).
+    """
+    bsz, s, nh, hp = xh.shape
+    n = b.shape[-1]
+    if h0 is not None:
+        # carried prefill state: use the jnp path (kernel starts from zero)
+        from repro.models.ssm import ssd_chunked
+        return ssd_chunked(xh, dt, b, c, a_log, d_skip, chunk, h0=h0)
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    dta = dt.astype(jnp.float32) * a                       # (B, S, nh)
+    xw = xh.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+    # flatten (B, nh) -> BH; broadcast b/c per head
+    xw_f = xw.transpose(0, 2, 1, 3).reshape(bsz * nh, s, hp)
+    dta_f = dta.transpose(0, 2, 1).reshape(bsz * nh, s)
+    b_f = jnp.broadcast_to(b[:, None], (bsz, nh, s, n)).reshape(
+        bsz * nh, s, n)
+    c_f = jnp.broadcast_to(c[:, None], (bsz, nh, s, n)).reshape(
+        bsz * nh, s, n)
+    pad = (-s) % chunk
+    if pad:
+        xw_f = jnp.pad(xw_f, ((0, 0), (0, pad), (0, 0)))
+        dta_f = jnp.pad(dta_f, ((0, 0), (0, pad)))
+        b_f = jnp.pad(b_f, ((0, 0), (0, pad), (0, 0)))
+        c_f = jnp.pad(c_f, ((0, 0), (0, pad), (0, 0)))
+    y, h_fin = _ssd(xw_f, dta_f, b_f, c_f, chunk=min(chunk, s + pad),
+                    interpret=_interpret())
+    y = y[:, :s].reshape(bsz, nh, s, hp).transpose(0, 2, 1, 3)
+    y = y + xh.astype(jnp.float32) * d_skip.astype(jnp.float32)[:, None]
+    h_fin = h_fin.reshape(bsz, nh, hp, n)
+    return y, h_fin
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def flash_decode(q: Array, k: Array, v: Array, pos: Array, *,
+                 block_k: int = 512) -> Array:
+    """q: (BH, 1, D); k/v: (BH, T, D); pos: () int32. Pads T; padded keys
+    are masked by the position check."""
+    kp, t0 = _pad_to(k, 1, block_k)
+    vp, _ = _pad_to(v, 1, block_k)
+    return _flash_decode(q, kp, vp, pos, block_k=block_k,
+                         interpret=_interpret())

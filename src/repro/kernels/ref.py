@@ -1,0 +1,109 @@
+"""Pure-jnp oracles for every Pallas kernel. These are the correctness
+ground truth: kernel tests sweep shapes/dtypes and assert allclose."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _act(name: str):
+    if name == "swiglu":
+        return lambda v: v * jax.nn.sigmoid(v)
+    return jax.nn.gelu
+
+
+def swiglu_ffn_ref(x: Array, wg: Array, wu: Array, wd: Array,
+                   activation: str = "swiglu") -> Array:
+    """x: (T, d); wg/wu: (d, f); wd: (f, d)."""
+    g = jnp.dot(x, wg, preferred_element_type=jnp.float32)
+    u = jnp.dot(x, wu, preferred_element_type=jnp.float32)
+    h = _act(activation)(g) * u
+    return jnp.dot(h.astype(x.dtype), wd,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def moe_gmm_ref(xbuf: Array, wg: Array, wu: Array, wd: Array,
+                activation: str = "swiglu") -> Array:
+    """xbuf: (E, C, d); wg/wu: (E, d, m); wd: (E, m, d)."""
+    g = jnp.einsum("ecd,edm->ecm", xbuf, wg,
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edm->ecm", xbuf, wu,
+                   preferred_element_type=jnp.float32)
+    h = (_act(activation)(g) * u).astype(xbuf.dtype)
+    return jnp.einsum("ecm,emd->ecd", h, wd,
+                      preferred_element_type=jnp.float32).astype(xbuf.dtype)
+
+
+def router_score_ref(x: Array, wg_r: Array, wu_r: Array,
+                     activation: str = "swiglu") -> Array:
+    """Analytical router scores: x (T, d), wg_r/wu_r (d, N_r) -> (T, N_r)."""
+    g = jnp.dot(x, wg_r, preferred_element_type=jnp.float32)
+    u = jnp.dot(x, wu_r, preferred_element_type=jnp.float32)
+    return _act(activation)(g) * u
+
+
+def flash_attention_ref(q: Array, k: Array, v: Array, *,
+                        causal: bool = True) -> Array:
+    """q: (BH, S, D); k/v: (BH, T, D). Plain softmax attention oracle."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k,
+                   preferred_element_type=jnp.float32) * (d ** -0.5)
+    if causal:
+        sq, tk = q.shape[1], k.shape[1]
+        mask = jnp.arange(tk)[None, :] <= jnp.arange(sq)[:, None]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(v.dtype)
+
+
+def ssd_scan_ref(xw: Array, dta: Array, b: Array, c: Array,
+                 chunk: int, h0: Array | None = None):
+    """SSD oracle over pre-chunked inputs.
+
+    xw: (BH, L, P) dt-weighted inputs; dta: (BH, L) log-decays;
+    b, c: (BH, L, N). Returns (y (BH, L, P), h_fin (BH, P, N)).
+    """
+    bh, l, p = xw.shape
+    n = b.shape[-1]
+    nc = l // chunk
+    xw = xw.reshape(bh, nc, chunk, p)
+    dta = dta.reshape(bh, nc, chunk)
+    b = b.reshape(bh, nc, chunk, n)
+    c = c.reshape(bh, nc, chunk, n)
+    if h0 is None:
+        h0 = jnp.zeros((bh, p, n), jnp.float32)
+
+    def step(h, inp):
+        xw_c, dta_c, b_c, c_c = inp
+        lcum = jnp.cumsum(dta_c, axis=1)                     # (BH, Lc)
+        rel = lcum[:, :, None] - lcum[:, None, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        decay = jnp.where(tri[None], jnp.exp(rel), 0.0)
+        cb = jnp.einsum("btn,bsn->bts", c_c, b_c)
+        y = jnp.einsum("bts,bsp->btp", cb * decay, xw_c)
+        y += jnp.einsum("btn,bpn->btp", c_c, h) * jnp.exp(lcum)[..., None]
+        lend = lcum[:, -1:]
+        w = jnp.exp(lend - lcum)
+        h = h * jnp.exp(lend)[..., None] + jnp.einsum(
+            "bsp,bsn,bs->bpn", xw_c, b_c, w)
+        return h, y
+
+    h_fin, ys = jax.lax.scan(
+        step, h0, (xw.swapaxes(0, 1), dta.swapaxes(0, 1),
+                   b.swapaxes(0, 1), c.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1).reshape(bh, l, p), h_fin
+
+
+def flash_decode_ref(q: Array, k: Array, v: Array, pos) -> Array:
+    """q: (BH, 1, D); k/v: (BH, T, D); mask positions > pos."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k,
+                   preferred_element_type=jnp.float32) * (d ** -0.5)
+    mask = jnp.arange(k.shape[1])[None, None, :] <= pos
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(v.dtype)

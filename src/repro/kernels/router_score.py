@@ -1,0 +1,47 @@
+"""Analytical-router scoring Pallas kernel (TPU target).
+
+The CMoE router is two skinny matmuls + a gated activation over the
+representative-neuron columns:  s = act(x Wg^R) ⊙ (x Wu^R). N_r is tiny
+(5..13), so the op is bandwidth-bound on x — fusing both matmuls and the
+activation reads x exactly once. Grid tiles tokens only; the (d, N_r)
+weights stay resident in VMEM for the whole grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, wg_ref, wu_ref, o_ref, *, activation: str):
+    x = x_ref[...]
+    g = jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)
+    u = jnp.dot(x, wu_ref[...], preferred_element_type=jnp.float32)
+    if activation == "swiglu":
+        s = g * jax.nn.sigmoid(g) * u
+    else:
+        s = jax.nn.gelu(g) * u
+    o_ref[...] = s
+
+
+def router_score(x: jax.Array, wg_r: jax.Array, wu_r: jax.Array, *,
+                 activation: str = "swiglu", block_t: int = 256,
+                 interpret: bool = True) -> jax.Array:
+    """x: (T, d); wg_r/wu_r: (d, N_r) -> scores (T, N_r) f32."""
+    t, d = x.shape
+    n_r = wg_r.shape[1]
+    assert t % block_t == 0, (t, block_t)
+    return pl.pallas_call(
+        functools.partial(_kernel, activation=activation),
+        grid=(t // block_t,),
+        in_specs=[
+            pl.BlockSpec((block_t, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, n_r), lambda i: (0, 0)),
+            pl.BlockSpec((d, n_r), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_t, n_r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, n_r), jnp.float32),
+        interpret=interpret,
+    )(x, wg_r, wu_r)

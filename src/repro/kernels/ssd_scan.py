@@ -1,0 +1,81 @@
+"""Mamba2 SSD chunk-scan Pallas kernel (TPU target).
+
+State-space duality: each chunk is a dense (Lc, Lc) semiseparable matmul
+(MXU work) plus an O(P·N) inter-chunk recurrence. Grid (BH, L/Lc) with the
+chunk dimension innermost — the running state h (P, N) persists in VMEM
+scratch across chunk steps (sequential TPU grid), exactly the carry the
+pure-JAX `ssd_chunked` threads through lax.scan.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(xw_ref, dta_ref, b_ref, c_ref, y_ref, hout_ref, h_ref, *,
+            chunk: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    xw = xw_ref[0].astype(jnp.float32)                # (Lc, P)
+    dta = dta_ref[0].astype(jnp.float32)              # (Lc,)
+    b = b_ref[0].astype(jnp.float32)                  # (Lc, N)
+    c = c_ref[0].astype(jnp.float32)                  # (Lc, N)
+
+    lcum = jnp.cumsum(dta)                            # (Lc,)
+    rel = lcum[:, None] - lcum[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1) <= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    decay = jnp.where(tri, jnp.exp(rel), 0.0)
+    cb = jnp.dot(c, b.T, preferred_element_type=jnp.float32)
+    y = jnp.dot(cb * decay, xw, preferred_element_type=jnp.float32)
+    h = h_ref[...]
+    y += jnp.dot(c, h.T, preferred_element_type=jnp.float32) * \
+        jnp.exp(lcum)[:, None]
+    lend = lcum[-1]
+    w = jnp.exp(lend - lcum)
+    h_ref[...] = h * jnp.exp(lend) + jnp.dot(
+        (xw * w[:, None]).T, b, preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _():
+        hout_ref[0] = h_ref[...]
+
+
+def ssd_scan(xw: jax.Array, dta: jax.Array, b: jax.Array, c: jax.Array, *,
+             chunk: int = 128, interpret: bool = True):
+    """xw: (BH, L, P); dta: (BH, L); b/c: (BH, L, N). L % chunk == 0.
+    Returns (y (BH, L, P) f32, h_fin (BH, P, N) f32)."""
+    bh, l, p = xw.shape
+    n = b.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    grid = (bh, l // chunk)
+    y, h_fin = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk), lambda i, j: (i, j)),
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, p, n), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, l, p), jnp.float32),
+            jax.ShapeDtypeStruct((bh, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xw, dta, b, c)
+    return y, h_fin

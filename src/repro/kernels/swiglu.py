@@ -1,0 +1,68 @@
+"""Fused SwiGLU FFN Pallas kernel (TPU target, validated via interpret).
+
+Computes  out = (act(x Wg) ⊙ (x Wu)) Wd  in ONE kernel so the (T, f) hidden
+state never round-trips HBM — the FFN is the memory-bound hot spot CMoE's
+experts slice up, and fusing gate/up/down removes 3·T·f hidden bytes of HBM
+traffic per layer.
+
+Tiling: grid (T/bt, f/bf). Per step the kernel holds
+  x (bt, d) + wg/wu (d, bf) + wd (bf, d) + out (bt, d)  in VMEM.
+With bt=bf=128, d≤8192, bf16 that is ≤ 2·8192·128·2·3 ≈ 12.6 MB — inside a
+v5e core's VMEM. The output block is revisited across the f-grid dimension
+(sequential on TPU) and accumulated in a f32 scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref, *,
+            activation: str):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    g = jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)
+    u = jnp.dot(x, wu_ref[...], preferred_element_type=jnp.float32)
+    if activation == "swiglu":
+        h = g * jax.nn.sigmoid(g) * u
+    else:
+        h = jax.nn.gelu(g) * u
+    acc_ref[...] += jnp.dot(h.astype(x.dtype), wd_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def swiglu_ffn(x: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array,
+               *, activation: str = "swiglu", block_t: int = 128,
+               block_f: int = 128, interpret: bool = True) -> jax.Array:
+    """x: (T, d); wg/wu: (d, f); wd: (f, d). Caller pads T, f to blocks."""
+    t, d = x.shape
+    f = wg.shape[1]
+    assert t % block_t == 0 and f % block_f == 0, (t, f, block_t, block_f)
+    grid = (t // block_t, f // block_f)
+    return pl.pallas_call(
+        functools.partial(_kernel, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, block_f), lambda i, j: (0, j)),
+            pl.BlockSpec((d, block_f), lambda i, j: (0, j)),
+            pl.BlockSpec((block_f, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_t, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_t, d), jnp.float32)],
+        interpret=interpret,
+    )(x, wg, wu, wd)

@@ -1,0 +1,92 @@
+"""Conversion CLI: dense (or MoE) checkpoint -> CMoE checkpoint.
+
+    PYTHONPATH=src python -m repro.launch.convert --arch qwen1.5-0.5b \
+        --smoke --cmoe S3A3E8 --calib-samples 8 --out ckpts/cmoe
+
+Mirrors the paper's pipeline: load -> profile on calibration tokens ->
+partition + analytical router -> (optional) small fine-tune -> save. The
+saved checkpoint is loadable by serve.py / train.py with the converted
+config.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import override
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, get_smoke_config
+from repro.core.convert import convert_dense_model
+from repro.core.hierarchical import convert_moe_model
+from repro.data import make_calibration_batch
+from repro.launch.serve import parse_sxayez
+from repro.models import build_model
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--cmoe", default="S3A3E8")
+    ap.add_argument("--k-activation", type=int, default=0,
+                    help="0 = auto (d_ff/32, min 2)")
+    ap.add_argument("--calib-samples", type=int, default=8)
+    ap.add_argument("--calib-seq", type=int, default=128)
+    ap.add_argument("--assignment", default="auto",
+                    choices=["auto", "jv", "sinkhorn"])
+    ap.add_argument("--from-ckpt", default=None,
+                    help="checkpoint dir holding {'params': ...}")
+    ap.add_argument("--out", default="checkpoints/cmoe")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    cfg = override(cfg, dtype="float32") if args.smoke else cfg
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    if args.from_ckpt:
+        mgr_in = CheckpointManager(args.from_ckpt)
+        (state, _) = mgr_in.restore({"params": params})
+        params = state["params"]
+        print(f"loaded params from {args.from_ckpt} "
+              f"(step {mgr_in.latest_step()})")
+
+    cm = parse_sxayez(args.cmoe)
+    ka = args.k_activation or max(2, cfg.d_ff // 32 if cfg.d_ff else 2)
+    import dataclasses
+    cm = dataclasses.replace(cm, k_activation=ka,
+                             assignment=args.assignment)
+    calib = make_calibration_batch(cfg.vocab_size, args.calib_samples,
+                                   args.calib_seq, seed=1234)
+    calib = {"tokens": jnp.asarray(calib["tokens"])}
+
+    t0 = time.perf_counter()
+    if cfg.family == "moe":
+        new_model, new_params, rep = convert_moe_model(model, params,
+                                                       calib, cm)
+        print(f"hierarchical conversion: {rep.num_layers} layers x "
+              f"{rep.num_experts} experts in {rep.seconds_total:.1f}s")
+    else:
+        new_model, new_params, rep = convert_dense_model(model, params,
+                                                         calib, cm)
+        print(f"converted {rep.num_layers} FFN layers in "
+              f"{rep.seconds_total:.1f}s (profile {rep.seconds_profile:.1f}s"
+              f" + cluster {rep.seconds_cluster:.1f}s, "
+              f"{rep.calib_tokens} calib tokens)")
+
+    mgr = CheckpointManager(args.out, keep=2)
+    mgr.save(0, {"params": new_params},
+             {"arch": args.arch, "cmoe": cm.tag(), "smoke": args.smoke},
+             block=True)
+    print(f"saved converted checkpoint to {args.out} "
+          f"({cm.tag()}, {cm.sparsity:.0%} sparsity, "
+          f"total {time.perf_counter()-t0:.1f}s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,237 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry run: lower + compile every (architecture x input shape) on
+the production meshes with ShapeDtypeStruct stand-ins (no allocation), then
+record memory analysis, loop-corrected HLO cost terms and the collective
+schedule for §Dry-run / §Roofline of EXPERIMENTS.md.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-34b \
+        --shape train_4k --multi-pod
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SHAPES
+from repro.configs import get_config, list_archs
+from repro.distributed.policy import activation_sharding
+from repro.distributed.sharding import (batch_specs, cache_specs,
+                                        param_specs, to_shardings)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (make_decode_step, make_prefill_step,
+                                make_train_step)
+from repro.models import build_model
+from repro.optim.adamw import adamw_init
+from repro import roofline
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _truthy(v) -> bool:
+    if isinstance(v, str):
+        return v.lower() in ("1", "true", "yes")
+    return bool(v)
+
+
+def skip_reason(cfg, shape) -> str | None:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return ("pure full-attention arch: 500k-token KV decode needs "
+                "sub-quadratic attention (see DESIGN.md §Long-context)")
+    return None
+
+
+def build_cell(arch: str, shape_name: str, mesh, opts: dict):
+    """Returns (jitted_fn, example_args) with shardings attached."""
+    cfg = get_config(arch)
+    if opts.get("cmoe"):
+        from repro.launch.serve import parse_sxayez
+        cfg = cfg.with_cmoe(parse_sxayez(str(opts["cmoe"])))
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    specs = model.input_specs(shape)
+
+    if shape.kind == "train":
+        params = model.abstract_params()
+        moment_dtype = jnp.bfloat16 if str(
+            opts.get("opt_dtype", "")) == "bf16" else jnp.float32
+        opt = jax.eval_shape(
+            lambda p: adamw_init(p, moment_dtype=moment_dtype), params)
+        p_sh = to_shardings(param_specs(params, mesh), mesh)
+        o_sh = to_shardings(param_specs(opt, mesh), mesh)
+        b_sh = to_shardings(batch_specs(specs, mesh), mesh)
+        remat_opt = opts.get("remat", True)
+        if isinstance(remat_opt, str) and remat_opt != "dots":
+            remat_opt = _truthy(remat_opt)
+        step = make_train_step(model, remat=remat_opt)
+        fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                     donate_argnums=(0, 1))
+        args = (params, opt, specs)
+    elif shape.kind == "prefill":
+        params = model.abstract_params()
+        p_sh = to_shardings(param_specs(params, mesh), mesh)
+        b_sh = to_shardings(batch_specs(specs, mesh), mesh)
+        step = make_prefill_step(model)
+        fn = jax.jit(step, in_shardings=(p_sh, b_sh))
+        args = (params, specs)
+    else:  # decode
+        params = model.abstract_params()
+        p_sh = to_shardings(param_specs(params, mesh), mesh)
+        cache = specs["cache"]
+        c_sh = to_shardings(cache_specs(cache, mesh), mesh)
+        t_sh = to_shardings(batch_specs({"token": specs["token"]},
+                                        mesh), mesh)["token"]
+        step = make_decode_step(model)
+        fn = jax.jit(step, in_shardings=(p_sh, t_sh, c_sh, None),
+                     out_shardings=(None, c_sh), donate_argnums=(2,))
+        args = (params, specs["token"], cache, specs["pos"])
+    return cfg, shape, fn, args
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             opts: dict | None = None, save: bool = True) -> dict:
+    opts = opts or {}
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "opts": {k: v for k, v in opts.items()}}
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    reason = skip_reason(cfg, shape)
+    if reason:
+        record.update(status="skipped", reason=reason)
+        _save(record, save)
+        return record
+
+    t0 = time.perf_counter()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        num_chips = mesh.devices.size
+        seq_shard = _truthy(opts.get("seq_shard", True))
+        local_dispatch = _truthy(opts.get("local_dispatch", True))
+        cap = float(opts.get("capacity_factor", 1.25))
+        with mesh, activation_sharding(mesh, seq_shard=seq_shard,
+                                       local_dispatch=local_dispatch,
+                                       capacity_factor=cap):
+            cfg, shape, fn, args = build_cell(arch, shape_name, mesh, opts)
+            lowered = fn.lower(*args)
+            t_lower = time.perf_counter() - t0
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis() or {}
+            hlo = compiled.as_text()
+        parsed = roofline.analyze(hlo)
+        terms = roofline.roofline_terms(parsed, num_chips=num_chips)
+        n_params = cfg.num_params()
+        mf = roofline.model_flops(cfg, shape, n_params)
+        hlo_flops_global = parsed["flops"] * num_chips
+        record.update(
+            status="ok",
+            seconds_lower=round(t_lower, 2),
+            seconds_compile=round(t_compile, 2),
+            num_chips=num_chips,
+            num_params=n_params,
+            memory={
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "total_per_device": (mem.argument_size_in_bytes +
+                                     mem.temp_size_in_bytes),
+            },
+            cost_analysis_raw={k: v for k, v in cost.items()
+                               if k in ("flops", "bytes accessed")},
+            parsed={
+                "flops_per_device": parsed["flops"],
+                "bytes_per_device": parsed["bytes"],
+                "collective_bytes_per_device": parsed["collective_bytes"],
+                "collectives": parsed["collectives"],
+                "trip_counts": parsed["trip_counts"][:32],
+            },
+            roofline={**terms,
+                      "memory_s_lower": (mem.argument_size_in_bytes /
+                                         roofline.HBM_BW)},
+            model_flops=mf,
+            useful_flops_ratio=(mf / hlo_flops_global
+                                if hlo_flops_global else None),
+        )
+    except Exception as e:  # noqa: BLE001 — record the failure, don't die
+        record.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+    _save(record, save)
+    return record
+
+
+def _save(record: dict, save: bool):
+    if not save:
+        return
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    name = (f"{record['arch']}_{record['shape']}_{record['mesh']}"
+            .replace("/", "_").replace(".", "_"))
+    suffix = ""
+    if record.get("opts"):
+        suffix = "_" + "_".join(f"{k}-{v}" for k, v in
+                                sorted(record["opts"].items()))
+    with open(os.path.join(RESULTS_DIR, name + suffix + ".json"), "w") as f:
+        json.dump(record, f, indent=1, default=str)
+
+
+def summarize(record: dict) -> str:
+    if record["status"] == "skipped":
+        return (f"{record['arch']:28s} {record['shape']:12s} "
+                f"{record['mesh']:8s} SKIP ({record['reason'][:40]}...)")
+    if record["status"] == "error":
+        return (f"{record['arch']:28s} {record['shape']:12s} "
+                f"{record['mesh']:8s} ERROR {record['error'][:80]}")
+    r = record["roofline"]
+    m = record["memory"]["total_per_device"] / 2**30
+    return (f"{record['arch']:28s} {record['shape']:12s} "
+            f"{record['mesh']:8s} ok mem/dev={m:6.2f}GiB "
+            f"compute={r['compute_s']*1e3:9.3f}ms "
+            f"memory={r['memory_s']*1e3:9.3f}ms "
+            f"coll={r['collective_s']*1e3:9.3f}ms -> {r['dominant']}"
+            f" (compile {record['seconds_compile']:.0f}s)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--opt", action="append", default=[],
+                    help="key=val perf-iteration flags")
+    args = ap.parse_args()
+    opts = {}
+    for kv in args.opt:
+        k, v = kv.split("=", 1)
+        opts[k] = v if v not in ("0", "1", "true", "false") else \
+            v in ("1", "true")
+
+    cells = []
+    archs = list_archs() if args.arch is None else [args.arch]
+    shapes = list(SHAPES) if args.shape is None else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else \
+        [args.multi_pod]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                cells.append((arch, shape, mp))
+
+    for arch, shape, mp in cells:
+        rec = run_cell(arch, shape, multi_pod=mp, opts=opts)
+        print(summarize(rec), flush=True)
+
+
+if __name__ == "__main__":
+    main()

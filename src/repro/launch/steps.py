@@ -1,0 +1,46 @@
+"""Step functions shared by train.py / serve.py / dryrun.py."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw_update, cosine_schedule
+from repro.optim.adamw import AdamWState
+
+
+def make_train_step(model, *, lr: float = 3e-4, warmup: int = 100,
+                    total: int = 10000, weight_decay: float = 0.1,
+                    b1: float = 0.9, b2: float = 0.95,
+                    grad_clip: float = 1.0, remat: bool = True):
+    def train_step(params, opt: AdamWState, batch):
+        def loss_fn(p):
+            return model.loss(p, batch, remat=remat)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        lr_t = cosine_schedule(opt.step, lr, warmup, total)
+        params, opt, om = adamw_update(
+            grads, opt, params, lr=lr_t, b1=b1, b2=b2,
+            weight_decay=weight_decay, grad_clip=grad_clip)
+        out_metrics = {"loss": loss, **om}
+        if "moe_load" in metrics:
+            out_metrics["moe_load"] = metrics["moe_load"]
+        return params, opt, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(model):
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(params, batch)
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params, token, cache, pos):
+        logits, cache = model.decode_step(params, token, cache, pos)
+        return logits, cache
+
+    return decode_step

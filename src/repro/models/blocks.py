@@ -1,0 +1,332 @@
+"""Per-family transformer blocks. Every family exposes:
+
+  init_block(key, cfg, dtype)      -> one layer's params (to be vmapped)
+  block_fn(x, p, cfg, ctx)         -> (x, new_cache_slice, aux)
+
+`ctx` is a BlockCtx with positions / cache slice / per-layer metadata, so a
+single `lax.scan` body serves the whole stack (constant HLO size vs depth).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm as ssm_lib
+from repro.models.attention import gqa_attention, mla_attention
+from repro.models.layers import ffn, matmul, rms_norm
+from repro.models.moe import init_moe_ffn, moe_ffn
+
+Array = jax.Array
+
+
+class BlockCtx(NamedTuple):
+    positions: Array                 # rope positions for this call
+    cache: Any                       # this layer's cache slice (or None)
+    cache_pos: Optional[Array]       # write offset into cache
+    window: Array | int              # sliding window (0 = full)
+    causal: bool
+    use_rope: bool
+    use_kernel: bool
+    cross_kv: Any = None             # whisper decoder cross K/V slice
+    capture: bool = False            # add pre-FFN activations to aux
+
+
+def _lecun(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return (jax.random.normal(key, shape, jnp.float32) *
+            (1.0 / fan_in) ** 0.5).astype(dtype)
+
+
+def init_attn(key, cfg, dtype) -> dict:
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _lecun(ks[0], (d, cfg.num_heads, hd), dtype, d),
+        "wk": _lecun(ks[1], (d, cfg.num_kv_heads, hd), dtype, d),
+        "wv": _lecun(ks[2], (d, cfg.num_kv_heads, hd), dtype, d),
+        "wo": _lecun(ks[3], (cfg.num_heads, hd, d), dtype,
+                     cfg.num_heads * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads, hd), dtype)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads, hd), dtype)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads, hd), dtype)
+    return p
+
+
+def init_mla(key, cfg, dtype) -> dict:
+    m = cfg.mla
+    d = cfg.d_model
+    h = cfg.num_heads
+    ks = jax.random.split(key, 5)
+    return {
+        "q_dproj": _lecun(ks[0], (d, m.q_lora_rank), dtype, d),
+        "q_norm": jnp.zeros((m.q_lora_rank,), dtype),
+        "q_uproj": _lecun(
+            ks[1], (m.q_lora_rank, h, m.qk_nope_head_dim + m.qk_rope_head_dim),
+            dtype, m.q_lora_rank),
+        "kv_dproj": _lecun(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim),
+                           dtype, d),
+        "kv_norm": jnp.zeros((m.kv_lora_rank,), dtype),
+        "kv_uproj": _lecun(
+            ks[3], (m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim),
+            dtype, m.kv_lora_rank),
+        "wo": _lecun(ks[4], (h, m.v_head_dim, d), dtype, h * m.v_head_dim),
+    }
+
+
+def init_ffn(key, cfg, dtype, d_ff: Optional[int] = None) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    if cfg.activation in ("swiglu", "geglu"):
+        return {"wg": _lecun(ks[0], (d, d_ff), dtype, d),
+                "wu": _lecun(ks[1], (d, d_ff), dtype, d),
+                "wd": _lecun(ks[2], (d_ff, d), dtype, d_ff)}
+    return {"wi": _lecun(ks[0], (d, d_ff), dtype, d),
+            "wd": _lecun(ks[2], (d_ff, d), dtype, d_ff)}
+
+
+def _apply_ffn(x: Array, p: dict, cfg, ctx: BlockCtx):
+    """Dense FFN or (if converted) the CMoE sparse FFN. Returns (y, aux)."""
+    if cfg.cmoe is not None and "cmoe" in p:
+        from repro.core.moe_ffn import cmoe_ffn, cmoe_ffn_local
+        from repro.distributed.policy import (local_dispatch_mesh,
+                                              policy_capacity_factor)
+        cap = policy_capacity_factor()
+        mesh = local_dispatch_mesh(x.shape[0]) if x.ndim == 3 else None
+        if mesh is not None:
+            return cmoe_ffn_local(x, p["cmoe"], cfg, mesh,
+                                  capacity_factor=cap,
+                                  use_kernel=ctx.use_kernel)
+        return cmoe_ffn(x, p["cmoe"], cfg, capacity_factor=cap,
+                        use_kernel=ctx.use_kernel)
+    if ctx.use_kernel and cfg.activation in ("swiglu", "geglu"):
+        from repro.kernels import ops as kops
+        y = kops.swiglu_ffn(x, p["ffn"]["wg"], p["ffn"]["wu"],
+                            p["ffn"]["wd"], activation=cfg.activation)
+        return y, {}
+    return ffn(x, p["ffn"], cfg.activation), {}
+
+
+# ------------------------------------------------------------ dense
+
+def init_cmoe_ffn(key, cfg, dtype) -> dict:
+    """Random-initialized CMoE parameter tree with the CONVERTED layout —
+    lets full-size converted configs be lowered abstractly (dry-run) and
+    converted models be trained from scratch."""
+    cm = cfg.cmoe
+    d = cfg.d_model
+    m = cfg.d_ff // cm.num_experts
+    ms = cm.num_shared * m
+    n_r = cm.num_routed
+    ks = jax.random.split(key, 8)
+    glu = cfg.activation in ("swiglu", "geglu")
+    if glu:
+        shared = {"wg": _lecun(ks[0], (d, ms), dtype),
+                  "wu": _lecun(ks[1], (d, ms), dtype),
+                  "wd": _lecun(ks[2], (ms, d), dtype, ms)}
+        routed = {"wg": _lecun(ks[3], (n_r, d, m), dtype, d),
+                  "wu": _lecun(ks[4], (n_r, d, m), dtype, d),
+                  "wd": _lecun(ks[5], (n_r, m, d), dtype, m)}
+        router = {"wg_r": _lecun(ks[6], (d, n_r), dtype),
+                  "wu_r": _lecun(ks[7], (d, n_r), dtype)}
+    else:
+        shared = {"wi": _lecun(ks[0], (d, ms), dtype),
+                  "wd": _lecun(ks[2], (ms, d), dtype, ms)}
+        routed = {"wi": _lecun(ks[3], (n_r, d, m), dtype, d),
+                  "wd": _lecun(ks[5], (n_r, m, d), dtype, m)}
+        router = {"wi_r": _lecun(ks[6], (d, n_r), dtype)}
+    return {"shared": shared, "routed": routed, "router": router,
+            "u": jnp.zeros((n_r,), jnp.float32),
+            "bias": jnp.zeros((n_r,), jnp.float32)}
+
+
+def init_dense_block(key, cfg, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {"norm1": jnp.zeros((cfg.d_model,), dtype),
+         "attn": init_attn(k1, cfg, dtype),
+         "norm2": jnp.zeros((cfg.d_model,), dtype)}
+    if cfg.cmoe is not None and cfg.family in ("dense", "vlm", "audio"):
+        p["cmoe"] = init_cmoe_ffn(k2, cfg, dtype)
+    else:
+        p["ffn"] = init_ffn(k2, cfg, dtype)
+    return p
+
+
+def dense_block(x: Array, p: dict, cfg, ctx: BlockCtx):
+    h, new_kv = gqa_attention(
+        rms_norm(x, p["norm1"], cfg.norm_eps), p["attn"], cfg,
+        positions=ctx.positions, causal=ctx.causal, window=ctx.window,
+        kv_cache=ctx.cache, cache_pos=ctx.cache_pos, use_rope=ctx.use_rope)
+    x = x + h
+    ffn_in = rms_norm(x, p["norm2"], cfg.norm_eps)
+    y, aux = _apply_ffn(ffn_in, p, cfg, ctx)
+    if ctx.capture:
+        aux = {**aux, "ffn_in": ffn_in}
+    return x + y, new_kv, aux
+
+
+# ------------------------------------------------------------ MoE (llama4)
+
+def _apply_moe(ffn_in: Array, p: dict, cfg, ctx: BlockCtx):
+    """Pretrained-MoE dispatch: shard_map all-to-all EP when the policy
+    enables it (seq-sharded tokens, divisible experts), else global GSPMD."""
+    from repro.distributed.policy import local_dispatch_mesh
+    from repro.models.moe import moe_ffn_local
+    b, s, d = ffn_in.shape
+    mesh = local_dispatch_mesh(b)
+    if mesh is not None and "model" in mesh.axis_names:
+        msize = mesh.shape["model"]
+        if cfg.moe.num_experts % msize == 0 and s % msize == 0 and s > 1:
+            y, aux = moe_ffn_local(ffn_in, p["moe"], cfg, mesh,
+                                   use_kernel=ctx.use_kernel)
+            if cfg.moe.num_shared > 0 and "shared_wg" in p["moe"]:
+                g = matmul(ffn_in, p["moe"]["shared_wg"])
+                u = matmul(ffn_in, p["moe"]["shared_wu"])
+                act = (lambda v: v * jax.nn.sigmoid(v)) \
+                    if cfg.activation == "swiglu" else jax.nn.gelu
+                h = (act(g.astype(jnp.float32)) *
+                     u.astype(jnp.float32)).astype(ffn_in.dtype)
+                y = y + matmul(h, p["moe"]["shared_wd"])
+            return y, aux
+    return moe_ffn(ffn_in, p["moe"], cfg, use_kernel=ctx.use_kernel)
+
+
+
+def init_moe_block(key, cfg, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {"norm1": jnp.zeros((cfg.d_model,), dtype),
+            "attn": init_attn(k1, cfg, dtype),
+            "norm2": jnp.zeros((cfg.d_model,), dtype),
+            "moe": init_moe_ffn(k2, cfg, dtype)}
+
+
+def moe_block(x: Array, p: dict, cfg, ctx: BlockCtx):
+    h, new_kv = gqa_attention(
+        rms_norm(x, p["norm1"], cfg.norm_eps), p["attn"], cfg,
+        positions=ctx.positions, causal=ctx.causal, window=ctx.window,
+        kv_cache=ctx.cache, cache_pos=ctx.cache_pos)
+    x = x + h
+    ffn_in = rms_norm(x, p["norm2"], cfg.norm_eps)
+    if cfg.cmoe is not None and "cmoe" in p:
+        from repro.core.hierarchical import hierarchical_moe_ffn
+        y, aux = hierarchical_moe_ffn(ffn_in, p, cfg,
+                                      use_kernel=ctx.use_kernel)
+    else:
+        y, aux = _apply_moe(ffn_in, p, cfg, ctx)
+    if ctx.capture:
+        aux = {**aux, "ffn_in": ffn_in}
+    return x + y, new_kv, aux
+
+
+# ------------------------------------------------------------ MLA+MoE
+
+def init_mla_moe_block(key, cfg, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {"norm1": jnp.zeros((cfg.d_model,), dtype),
+            "attn": init_mla(k1, cfg, dtype),
+            "norm2": jnp.zeros((cfg.d_model,), dtype),
+            "moe": init_moe_ffn(k2, cfg, dtype)}
+
+
+def mla_moe_block(x: Array, p: dict, cfg, ctx: BlockCtx):
+    h, new_cache = mla_attention(
+        rms_norm(x, p["norm1"], cfg.norm_eps), p["attn"], cfg,
+        positions=ctx.positions, kv_cache=ctx.cache, cache_pos=ctx.cache_pos)
+    x = x + h
+    ffn_in = rms_norm(x, p["norm2"], cfg.norm_eps)
+    if cfg.cmoe is not None and "cmoe" in p:
+        from repro.core.hierarchical import hierarchical_moe_ffn
+        y, aux = hierarchical_moe_ffn(ffn_in, p, cfg,
+                                      use_kernel=ctx.use_kernel)
+    else:
+        y, aux = _apply_moe(ffn_in, p, cfg, ctx)
+    if ctx.capture:
+        aux = {**aux, "ffn_in": ffn_in}
+    return x + y, new_cache, aux
+
+
+# ------------------------------------------------------------ mamba2
+
+def init_mamba_block(key, cfg, dtype) -> dict:
+    return {"norm1": jnp.zeros((cfg.d_model,), dtype),
+            "mixer": ssm_lib.init_mamba2_block(key, cfg, dtype)}
+
+
+def mamba_block(x: Array, p: dict, cfg, ctx: BlockCtx):
+    h, new_cache = ssm_lib.mamba2_block(
+        rms_norm(x, p["norm1"], cfg.norm_eps), p["mixer"], cfg,
+        cache=ctx.cache, use_kernel=ctx.use_kernel)
+    return x + h, new_cache, {}
+
+
+# ------------------------------------------------------------ whisper dec
+
+def init_encdec_block(key, cfg, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"norm1": jnp.zeros((cfg.d_model,), dtype),
+         "attn": init_attn(k1, cfg, dtype),
+         "norm_x": jnp.zeros((cfg.d_model,), dtype),
+         "xattn": init_attn(k2, cfg, dtype),
+         "norm2": jnp.zeros((cfg.d_model,), dtype)}
+    if cfg.cmoe is not None:
+        p["cmoe"] = init_cmoe_ffn(k3, cfg, dtype)
+    else:
+        p["ffn"] = init_ffn(k3, cfg, dtype)
+    return p
+
+
+def encdec_block(x: Array, p: dict, cfg, ctx: BlockCtx):
+    h, new_kv = gqa_attention(
+        rms_norm(x, p["norm1"], cfg.norm_eps), p["attn"], cfg,
+        positions=ctx.positions, causal=True,
+        kv_cache=ctx.cache, cache_pos=ctx.cache_pos, use_rope=False)
+    x = x + h
+    cross = ctx.cross_kv
+    if not isinstance(cross, tuple):        # raw encoder output: project here
+        cross = cross_kv_project(cross, p["xattn"], cfg)
+    h, _ = gqa_attention(
+        rms_norm(x, p["norm_x"], cfg.norm_eps), p["xattn"], cfg,
+        positions=ctx.positions, cross_kv=cross)
+    x = x + h
+    ffn_in = rms_norm(x, p["norm2"], cfg.norm_eps)
+    y, aux = _apply_ffn(ffn_in, p, cfg, ctx)
+    if ctx.capture:
+        aux = {**aux, "ffn_in": ffn_in}
+    return x + y, new_kv, aux
+
+
+def cross_kv_project(enc_out: Array, p_xattn: dict, cfg):
+    """Precompute encoder K/V for decoder cross-attention."""
+    b, f, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = matmul(enc_out, p_xattn["wk"].reshape(cfg.d_model, -1)).reshape(
+        b, f, cfg.num_kv_heads, hd)
+    v = matmul(enc_out, p_xattn["wv"].reshape(cfg.d_model, -1)).reshape(
+        b, f, cfg.num_kv_heads, hd)
+    return k, v
+
+
+BLOCKS = {
+    "dense": (init_dense_block, dense_block),
+    "moe": (init_moe_block, moe_block),
+    "mla_moe": (init_mla_moe_block, mla_moe_block),
+    "mamba": (init_mamba_block, mamba_block),
+    "encdec": (init_encdec_block, encdec_block),
+}
+
+
+def block_kind(cfg) -> str:
+    if cfg.family == "moe":
+        return "mla_moe" if cfg.mla is not None else "moe"
+    if cfg.family == "ssm":
+        return "mamba"
+    if cfg.family == "hybrid":
+        return "mamba"              # + shared attn handled by the stack
+    if cfg.family == "audio":
+        return "encdec"             # decoder; encoder uses dense blocks
+    return "dense"                  # dense | vlm

@@ -1,0 +1,95 @@
+"""Shared layer primitives: norms, RoPE, FFN variants, embeddings.
+
+All functions are pure; parameters are plain dict pytrees. Matmuls accumulate
+in float32 (``preferred_element_type``) and cast back to the residual dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+def layer_norm(x: Array, scale: Array, bias: Array, eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(dtype)
+
+
+def matmul(x: Array, w: Array) -> Array:
+    """x @ w with fp32 accumulation, output in x.dtype."""
+    return jnp.matmul(x, w.astype(x.dtype),
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- RoPE
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- FFN
+
+def swish(x: Array) -> Array:
+    return x * jax.nn.sigmoid(x)
+
+
+def ffn_hidden(x: Array, p: dict, activation: str) -> Array:
+    """The FFN hidden state h — the object CMoE profiles.
+
+    swiglu: h = swish(x Wg) * (x Wu)
+    geglu:  h = gelu(x Wg) * (x Wu)
+    gelu:   h = gelu(x Wi)
+    """
+    if activation in ("swiglu", "geglu"):
+        g = matmul(x, p["wg"])
+        u = matmul(x, p["wu"])
+        act = swish if activation == "swiglu" else jax.nn.gelu
+        return act(g.astype(jnp.float32)).astype(x.dtype) * u
+    if activation == "gelu":
+        g = matmul(x, p["wi"])
+        return jax.nn.gelu(g.astype(jnp.float32)).astype(x.dtype)
+    raise ValueError(f"unknown activation {activation}")
+
+
+def ffn(x: Array, p: dict, activation: str) -> Array:
+    h = ffn_hidden(x, p, activation)
+    return matmul(h, p["wd"])
+
+
+def embed(tokens: Array, table: Array) -> Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x: Array, table_or_head: Array, tied: bool) -> Array:
+    if tied:
+        return jnp.matmul(x, table_or_head.T.astype(x.dtype),
+                          preferred_element_type=jnp.float32)
+    return jnp.matmul(x, table_or_head.astype(x.dtype),
+                      preferred_element_type=jnp.float32)

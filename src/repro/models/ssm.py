@@ -1,0 +1,205 @@
+"""Mamba2 SSD (state-space duality) blocks: chunked parallel form for
+train/prefill, recurrent form for decode.
+
+Simplifications vs the reference CUDA implementation (noted in DESIGN.md):
+single B/C group (n_groups=1), depthwise causal conv over the concatenated
+(x, B, C) channels. The chunked algorithm is the TPU-friendly form: each
+chunk is a dense (Lc x Lc) semiseparable matmul (MXU work) plus an O(1)
+inter-chunk state recurrence carried by `lax.scan` —
+`repro.kernels.ssd_scan` is the Pallas version of the inner chunk compute.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import matmul, rms_norm
+
+Array = jax.Array
+
+
+def d_inner(cfg) -> int:
+    return cfg.ssm.expand * cfg.d_model
+
+
+def num_ssm_heads(cfg) -> int:
+    s = cfg.ssm
+    return s.num_heads or d_inner(cfg) // s.head_dim
+
+
+def _split_proj(zxbcdt: Array, cfg):
+    di = d_inner(cfg)
+    n = cfg.ssm.state_size
+    nh = num_ssm_heads(cfg)
+    z, xin, b, c, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    assert dt.shape[-1] == nh
+    return z, xin, b, c, dt
+
+
+def _causal_conv(x: Array, w: Array, bias: Array,
+                 state: Array | None = None):
+    """Depthwise causal conv. x: (B, S, C); w: (cw, C); returns (y, new_state)
+    where state is the last (cw-1) inputs (for decode)."""
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)              # (B, S+cw-1, C)
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(cw):
+        y = y + xp[:, i:i + x.shape[1], :].astype(jnp.float32) * \
+            w[i].astype(jnp.float32)
+    y = y + bias.astype(jnp.float32)
+    new_state = xp[:, xp.shape[1] - (cw - 1):, :]
+    return y.astype(x.dtype), new_state
+
+
+def ssd_chunked(x: Array, dt: Array, b: Array, c: Array, a_log: Array,
+                d_skip: Array, chunk: int, h0: Array | None = None):
+    """Chunked SSD scan.
+
+    x: (B, S, nh, hp); dt: (B, S, nh) (post-softplus); b, c: (B, S, N);
+    a_log: (nh,) with A = -exp(a_log); d_skip: (nh,).
+    Returns y: (B, S, nh, hp), h_final: (B, nh, hp, N).
+    """
+    bsz, s, nh, hp = x.shape
+    n = b.shape[-1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // chunk
+
+    a = -jnp.exp(a_log.astype(jnp.float32))             # (nh,)
+    dta = dt.astype(jnp.float32) * a                    # (B, Sp, nh) log-decay
+    xw = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+
+    # reshape into chunks
+    xw = xw.reshape(bsz, nc, chunk, nh, hp)
+    dta = dta.reshape(bsz, nc, chunk, nh)
+    bm = b.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+    cm = c.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, nh, hp, n), jnp.float32)
+
+    def chunk_step(h, inp):
+      with jax.named_scope("ssd_vmem"):                 # Pallas-resident
+        xw_c, dta_c, b_c, c_c = inp                     # leading axis: B
+        # cumulative log-decay within chunk: l_t = sum_{u<=t} dta_u
+        l = jnp.cumsum(dta_c, axis=1)                   # (B, Lc, nh)
+        # intra-chunk: M[t,s] = exp(l_t - l_s) for s<=t
+        rel = l[:, :, None, :] - l[:, None, :, :]       # (B, Lc, Lc, nh)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        decay = jnp.where(tri[None, :, :, None], jnp.exp(rel), 0.0)
+        cb = jnp.einsum("btn,bsn->bts", c_c, b_c)       # (B, Lc, Lc)
+        m = cb[..., None] * decay                       # (B, Lc, Lc, nh)
+        y_intra = jnp.einsum("btsh,bshp->bthp", m, xw_c)
+        # inter-chunk: y += C_t h_prev * exp(l_t)
+        y_inter = jnp.einsum("btn,bhpn->bthp", c_c, h) * \
+            jnp.exp(l)[..., None]
+        # state update: h = exp(l_Lc) h + sum_s exp(l_Lc - l_s) xw_s B_sᵀ
+        l_end = l[:, -1:, :]                            # (B, 1, nh)
+        w = jnp.exp(l_end - l)                          # (B, Lc, nh)
+        h_new = h * jnp.exp(l_end)[:, 0, :, None, None] + jnp.einsum(
+            "bshp,bsn,bsh->bhpn", xw_c, b_c, w)
+        return h_new, y_intra + y_inter
+
+    h_fin, y = jax.lax.scan(
+        chunk_step, h0,
+        (xw.swapaxes(0, 1), dta.swapaxes(0, 1), bm.swapaxes(0, 1),
+         cm.swapaxes(0, 1)))
+    y = y.swapaxes(0, 1).reshape(bsz, nc * chunk, nh, hp)[:, :s]
+    y = y + x.astype(jnp.float32)[:, :s] * d_skip.astype(jnp.float32)[:, None]
+    return y, h_fin
+
+
+def ssd_step(x: Array, dt: Array, b: Array, c: Array, a_log: Array,
+             d_skip: Array, h: Array):
+    """Recurrent single-token step. x: (B, 1, nh, hp); h: (B, nh, hp, N)."""
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    dta = dt[:, 0].astype(jnp.float32) * a              # (B, nh)
+    decay = jnp.exp(dta)                                # (B, nh)
+    xw = x[:, 0].astype(jnp.float32) * dt[:, 0].astype(jnp.float32)[..., None]
+    h_new = h * decay[..., None, None] + jnp.einsum(
+        "bhp,bn->bhpn", xw, b[:, 0].astype(jnp.float32))
+    y = jnp.einsum("bn,bhpn->bhp", c[:, 0].astype(jnp.float32), h_new)
+    y = y + x[:, 0].astype(jnp.float32) * d_skip.astype(jnp.float32)[:, None]
+    return y[:, None], h_new                            # (B, 1, nh, hp)
+
+
+def mamba2_block(x: Array, p: dict, cfg, *,
+                 cache: tuple[Array, Array] | None = None,
+                 use_kernel: bool = False):
+    """Full Mamba2 mixer block (pre-norm, residual added by caller).
+
+    x: (B, S, d). cache: (conv_state (B,cw-1,di+2N), ssm_state (B,nh,hp,N))
+    for decode (S==1) / carried prefill. Returns (y (B,S,d), new_cache).
+    """
+    s_cfg = cfg.ssm
+    di = d_inner(cfg)
+    n = s_cfg.state_size
+    nh = num_ssm_heads(cfg)
+    hp = di // nh
+    bsz, seq, _ = x.shape
+
+    zxbcdt = matmul(x, p["in_proj"])
+    z, xin, b, c, dt = _split_proj(zxbcdt, cfg)
+    conv_in = jnp.concatenate([xin, b, c], axis=-1)     # (B, S, di+2N)
+    conv_state = cache[0] if cache is not None else None
+    conv_out, new_conv_state = _causal_conv(conv_in, p["conv_w"],
+                                            p["conv_b"], conv_state)
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xin, b, c = jnp.split(conv_out, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    xh = xin.reshape(bsz, seq, nh, hp)
+    h0 = cache[1] if cache is not None else None
+    if seq == 1 and cache is not None:
+        y, h_fin = ssd_step(xh, dt, b, c, p["a_log"], p["d_skip"], h0)
+    elif use_kernel:
+        from repro.kernels import ops as kops
+        y, h_fin = kops.ssd_scan(xh, dt, b, c, p["a_log"], p["d_skip"],
+                                 chunk=s_cfg.chunk_size, h0=h0)
+    else:
+        y, h_fin = ssd_chunked(xh, dt, b, c, p["a_log"], p["d_skip"],
+                               chunk=s_cfg.chunk_size, h0=h0)
+    y = y.reshape(bsz, seq, di).astype(x.dtype)
+    # gated RMSNorm (Mamba2): norm(y * silu(z))
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["out_norm"], cfg.norm_eps)
+    out = matmul(y, p["out_proj"])
+    new_cache = (new_conv_state, h_fin) if (cache is not None) else None
+    return out, new_cache
+
+
+def init_mamba2_block(key, cfg, dtype):
+    di = d_inner(cfg)
+    n = cfg.ssm.state_size
+    nh = num_ssm_heads(cfg)
+    cw = cfg.ssm.conv_width
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * di + 2 * n + nh
+    return {
+        "in_proj": _lecun(ks[0], (d, proj_out), dtype),
+        "conv_w": _lecun(ks[1], (cw, di + 2 * n), dtype),
+        "conv_b": jnp.zeros((di + 2 * n,), dtype),
+        "a_log": jnp.zeros((nh,), jnp.float32),         # A = -1
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),  # small initial dt
+        "out_norm": jnp.zeros((di,), dtype),
+        "out_proj": _lecun(ks[2], (di, d), dtype),
+    }
+
+
+def _lecun(key, shape, dtype):
+    fan_in = shape[0] if len(shape) == 2 else shape[-2]
+    return (jax.random.normal(key, shape, jnp.float32) *
+            (1.0 / fan_in) ** 0.5).astype(dtype)

@@ -1,0 +1,4 @@
+from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,  # noqa
+                               cosine_schedule, global_norm)
+from repro.optim.balance import apply_balance_update  # noqa: F401
+from repro.optim.lora import init_lora, merge_lora  # noqa: F401

@@ -1,0 +1,30 @@
+"""Aux-loss-free load balancing (paper §4.3 / DeepSeek-v3): after each step,
+nudge each expert's selection bias against its measured utilization."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.router import update_balance_bias
+
+
+def apply_balance_update(params: dict, moe_load, *, gamma: float = 1e-3,
+                         key_path: str = "cmoe") -> dict:
+    """moe_load: (L, N_r) utilization per layer (from loss metrics).
+    Updates params["blocks"][key_path]["bias"] (or pretrained-MoE
+    balance_bias) out-of-band — no gradients involved."""
+    blocks_key = "blocks" if "blocks" in params else "blocks_moe"
+    blocks = dict(params[blocks_key])
+    if key_path in blocks and "bias" in blocks[key_path]:
+        tree = dict(blocks[key_path])
+        tree["bias"] = jax.vmap(
+            lambda b, l: update_balance_bias(b, l, gamma))(
+                tree["bias"], moe_load)
+        blocks[key_path] = tree
+    elif "moe" in blocks and "balance_bias" in blocks["moe"]:
+        tree = dict(blocks["moe"])
+        tree["balance_bias"] = jax.vmap(
+            lambda b, l: update_balance_bias(b, l, gamma))(
+                tree["balance_bias"], moe_load)
+        blocks["moe"] = tree
+    return {**params, blocks_key: blocks}

@@ -1,0 +1,37 @@
+"""Gradient compression for cross-pod reduction (distributed-optimization
+trick): bf16 cast or int8 quantization with error feedback. At 2+ pods the
+pod-axis all-reduce crosses DCI links; halving/quartering gradient bytes
+there is nearly free in quality when error feedback carries the residual.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_bf16(grads):
+    return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def compress_int8_ef(grads, error_state: Optional[dict]):
+    """Per-tensor symmetric int8 with error feedback.
+    Returns (quantized_as_f32, new_error_state)."""
+    if error_state is None:
+        error_state = jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def q(g, e):
+        gf = g.astype(jnp.float32) + e
+        scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-12
+        qi = jnp.clip(jnp.round(gf / scale), -127, 127)
+        deq = qi * scale
+        return deq, gf - deq
+
+    pairs = jax.tree.map(q, grads, error_state)
+    deq = jax.tree.map(lambda t: t[0], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda t: t[1], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return deq, err

@@ -1,0 +1,74 @@
+"""LoRA-style low-rank adapters (paper §5.1: rank 8, alpha 32, applied for
+the optional 2k-sample fine-tune after conversion).
+
+Implementation: functional low-rank deltas. `init_lora` builds an adapter
+tree aligned with the base params (None where not adapted); `merge_lora`
+returns effective params  W + (alpha/r)·A·B. Training differentiates the
+loss w.r.t. the adapter tree only — mathematically identical to LoRA, and
+it composes with scanned (L, in, out)-stacked weights via batched einsum.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+DEFAULT_TARGETS = ("wg", "wu", "wd", "wi", "wq", "wk", "wv", "wo",
+                   "wg_r", "wu_r", "wi_r")
+
+
+def _is_target(path, leaf, targets) -> bool:
+    last = path[-1]
+    name = getattr(last, "key", getattr(last, "name", str(last)))
+    return name in targets and leaf.ndim in (2, 3)
+
+
+def init_lora(params, key: Array, *, rank: int = 8,
+              targets=DEFAULT_TARGETS):
+    """Adapter tree: for each targeted 2-D (in, out) leaf, A (in, r) ~ N(0,
+    1/in), B (r, out) = 0; 3-D stacked (L, in, out) get (L, in, r)/(L, r,
+    out)."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    keys = jax.random.split(key, max(len(flat), 1))
+
+    def make(path_leaf, k):
+        path, leaf = path_leaf
+        if not _is_target(path, leaf, targets):
+            return None
+        if leaf.ndim == 2:
+            din, dout = leaf.shape
+            a = jax.random.normal(k, (din, rank), jnp.float32) * din ** -0.5
+            b = jnp.zeros((rank, dout), jnp.float32)
+        else:
+            l, din, dout = leaf.shape
+            a = jax.random.normal(k, (l, din, rank), jnp.float32) \
+                * din ** -0.5
+            b = jnp.zeros((l, rank, dout), jnp.float32)
+        return {"a": a, "b": b}
+
+    leaves = [make(pl_, k) for pl_, k in zip(flat, keys)]
+    treedef = jax.tree_util.tree_structure(
+        params, is_leaf=lambda x: isinstance(x, jnp.ndarray))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def merge_lora(params, lora, *, alpha: float = 32.0, rank: int = 8):
+    """Effective params: W + (alpha/rank) · A @ B where adapted."""
+    scale = alpha / rank
+
+    def merge(p, ad):
+        if ad is None:
+            return p
+        a, b = ad["a"], ad["b"]
+        if p.ndim == 2:
+            delta = a @ b
+        else:
+            delta = jnp.einsum("lir,lro->lio", a, b)
+        return (p.astype(jnp.float32) + scale * delta).astype(p.dtype)
+
+    return jax.tree.map(merge, params, lora,
+                        is_leaf=lambda x: x is None or isinstance(x, dict)
+                        and "a" in x)

@@ -1,0 +1,320 @@
+"""Roofline analysis from compiled HLO artifacts.
+
+XLA's `compiled.cost_analysis()` counts while-loop bodies ONCE (verified in
+EXPERIMENTS.md §Dry-run methodology), which under-counts scanned layer
+stacks by ~L×. This module therefore parses `compiled.as_text()` directly
+and walks the call graph with LOOP TRIP-COUNT MULTIPLIERS:
+
+  * dot/convolution FLOPs from operand/result shapes (x multiplier);
+  * HBM bytes per top-level op (operands + result of each post-fusion op —
+    each fusion is one kernel, so its boundary IS the HBM traffic);
+  * collective bytes for all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute (operand sizes, per the brief).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (set in `V5E`).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+import numpy as np
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*?)\s*"
+                    r"([\w\-]+)\((.*)\)", re.DOTALL)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*?\)\s*->", re.M)
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _parse_shapes(type_str: str):
+    """'(f32[1,2]{...}, s32[])' -> [(dtype, shape), ...]."""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(x) for x in dims.split(",")) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _bytes_of(type_str: str) -> int:
+    total = 0
+    for dt, shape in _parse_shapes(type_str):
+        total += _DTYPE_BYTES[dt] * int(np.prod(shape)) if shape else \
+            _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    result_type: str
+    operands: list                     # operand op names
+    raw: str
+
+    @property
+    def result_bytes(self) -> int:
+        return _bytes_of(self.result_type)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: dict = field(default_factory=dict)
+    order: list = field(default_factory=list)
+
+
+def parse_hlo_module(text: str) -> dict:
+    """Parse scheduled HLO text into {computation_name: Computation}."""
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    pending = ""
+    for line in text.splitlines():
+        stripped = line.strip()
+        header = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->", line)
+        if header and (line.startswith("%") or line.startswith("ENTRY")):
+            cur = Computation(name=header.group(2))
+            comps[header.group(2)] = cur
+            if header.group(1):
+                comps["__entry__"] = cur
+            continue
+        if cur is None or not stripped or stripped == "}":
+            pending = ""
+            continue
+        pending = pending + " " + stripped if pending else stripped
+        # ops can wrap lines; a complete op has balanced parens
+        if pending.count("(") != pending.count(")"):
+            continue
+        m = re.match(r"^(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?.*?\)?)\s*"
+                     r"([\w\-]+)\((.*)\)(.*)$", pending)
+        pending = ""
+        if not m:
+            continue
+        name, rtype, kind, args, tail = m.groups()
+        operands = re.findall(r"%([\w.\-]+)", args)
+        op = Op(name=name, kind=kind, result_type=rtype,
+                operands=operands, raw=m.group(0))
+        cur.ops[name] = op
+        cur.order.append(name)
+    return comps
+
+
+def _trip_count(cond_comp: Computation, comps: dict) -> int:
+    """Extract the loop bound from a while condition computation (jax scan
+    lowers to iota 0..N with LT compare against constant N)."""
+    consts = []
+    for op in cond_comp.ops.values():
+        cm = re.search(r"constant\((\d+)\)", op.raw)
+        if cm:
+            consts.append(int(cm.group(1)))
+        # the compare may live in a wrapped fusion
+        fm = re.search(r"calls=%([\w.\-]+)", op.raw)
+        if fm and fm.group(1) in comps:
+            for op2 in comps[fm.group(1)].ops.values():
+                cm2 = re.search(r"constant\((\d+)\)", op2.raw)
+                if cm2:
+                    consts.append(int(cm2.group(1)))
+    return max(consts) if consts else 1
+
+
+def _dot_flops(op: Op, comp: Computation, comps: dict) -> float:
+    """FLOPs of a dot from result shape x contracted size."""
+    shapes = _parse_shapes(op.result_type)
+    if not shapes:
+        return 0.0
+    result_elems = float(np.prod(shapes[0][1])) if shapes[0][1] else 1.0
+    lhs_type = None
+    if op.operands:
+        lhs_name = op.operands[0]
+        if lhs_name in comp.ops:
+            lhs_type = comp.ops[lhs_name].result_type
+    k = 1.0
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.raw)
+    if cm and lhs_type:
+        lshapes = _parse_shapes(lhs_type)
+        if lshapes:
+            lshape = lshapes[0][1]
+            dims = [int(x) for x in cm.group(1).split(",") if x]
+            for dd in dims:
+                if dd < len(lshape):
+                    k *= lshape[dd]
+    return 2.0 * result_elems * k
+
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "while", "conditional", "call", "custom-call",
+               "after-all", "iota", "partition-id", "replica-id"}
+
+# ops inside these jax.named_scope regions are VMEM-resident in the Pallas
+# kernels (flash attention block math, SSD chunk math): their fusion
+# boundaries are NOT HBM traffic on the TPU target. FLOPs still count.
+_VMEM_SCOPES = ("flash_vmem", "ssd_vmem")
+
+
+def _vmem_resident(op_raw: str) -> bool:
+    return any(scope in op_raw for scope in _VMEM_SCOPES)
+
+
+def analyze(text: str, known_trips: dict | None = None) -> dict:
+    """Walk the module with loop multipliers.
+
+    Returns dict(flops, bytes, collective_bytes, collectives={kind: bytes},
+    trip_counts=[...]).
+    """
+    comps = parse_hlo_module(text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        raise ValueError("no entry computation found")
+    totals = {"flops": 0.0, "bytes": 0.0, "collective_bytes": 0.0}
+    per_coll: dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    trips: list[int] = []
+    visited_stack: list[str] = []
+
+    def walk(comp: Computation, mult: float, count_bytes: bool):
+        if comp.name in visited_stack:           # defensive: no recursion
+            return
+        visited_stack.append(comp.name)
+        for name in comp.order:
+            op = comp.ops[name]
+            kind = op.kind
+            if kind == "dot" or kind == "convolution":
+                totals["flops"] += mult * _dot_flops(op, comp, comps)
+                if count_bytes and not _vmem_resident(op.raw):
+                    opb = sum(_bytes_of(comp.ops[o].result_type)
+                              for o in op.operands if o in comp.ops)
+                    totals["bytes"] += mult * (opb + op.result_bytes)
+            elif kind in COLLECTIVES or any(op.raw.find(c + "(") >= 0
+                                            for c in ()):
+                opb = sum(_bytes_of(comp.ops[o].result_type)
+                          for o in op.operands if o in comp.ops)
+                totals["collective_bytes"] += mult * opb
+                per_coll[kind] = per_coll.get(kind, 0.0) + mult * opb
+                if count_bytes:
+                    totals["bytes"] += mult * (opb + op.result_bytes)
+            elif kind == "fusion":
+                fm = re.search(r"calls=%([\w.\-]+)", op.raw)
+                if count_bytes and not _vmem_resident(op.raw):
+                    opb = sum(_bytes_of(comp.ops[o].result_type)
+                              for o in op.operands if o in comp.ops)
+                    totals["bytes"] += mult * (opb + op.result_bytes)
+                if fm and fm.group(1) in comps:
+                    # count only FLOPs inside fusion bodies (bytes are the
+                    # fusion boundary)
+                    walk(comps[fm.group(1)], mult, count_bytes=False)
+            elif kind == "while":
+                body = re.search(r"body=%?([\w.\-]+)", op.raw)
+                cond = re.search(r"condition=%?([\w.\-]+)", op.raw)
+                trip = 1
+                if cond and cond.group(1) in comps:
+                    trip = _trip_count(comps[cond.group(1)], comps)
+                trips.append(trip)
+                if body and body.group(1) in comps:
+                    walk(comps[body.group(1)], mult * trip, count_bytes)
+            elif kind == "conditional":
+                # count the heavier branch (upper bound; see DESIGN.md)
+                branches = re.findall(
+                    r"(?:true_computation|false_computation|branch_computations:?)"
+                    r"=?\{?%?([\w.\-,% ]+)\}?", op.raw)
+                names = []
+                for b in branches:
+                    names += [x.strip().lstrip("%") for x in b.split(",")]
+                subtotals = []
+                for n in names:
+                    if n in comps:
+                        before = dict(totals)
+                        walk(comps[n], mult, count_bytes)
+                        delta = {k: totals[k] - before[k] for k in totals}
+                        for k in totals:
+                            totals[k] = before[k]
+                        subtotals.append(delta)
+                if subtotals:
+                    best = max(subtotals, key=lambda d: d["flops"] +
+                               d["bytes"])
+                    for k in totals:
+                        totals[k] += best[k]
+            elif kind == "call":
+                cm = re.search(r"to_apply=%?([\w.\-]+)", op.raw)
+                if cm and cm.group(1) in comps:
+                    walk(comps[cm.group(1)], mult, count_bytes)
+            elif kind in _SKIP_BYTES:
+                continue
+            else:
+                # standalone non-fused op (copy, sort, rng, reduce, ...)
+                if count_bytes and not _vmem_resident(op.raw):
+                    opb = sum(_bytes_of(comp.ops[o].result_type)
+                              for o in op.operands if o in comp.ops)
+                    totals["bytes"] += mult * (opb + op.result_bytes)
+        visited_stack.pop()
+
+    walk(entry, 1.0, count_bytes=True)
+    return {**totals, "collectives": per_coll, "trip_counts": trips}
+
+
+def roofline_terms(analysis: dict, *, num_chips: int,
+                   collective_links: int = 2) -> dict:
+    """Seconds per step for each roofline term (per-device program).
+
+    The parsed module is the per-device SPMD program, so terms divide by
+    per-chip peaks only. `collective_links`: ICI links engaged per chip
+    (2D torus ring: 2 per axis direction is optimistic; we use 2).
+    """
+    compute = analysis["flops"] / PEAK_FLOPS
+    memory = analysis["bytes"] / HBM_BW
+    collective = analysis["collective_bytes"] / (ICI_BW * collective_links)
+    dominant = max(("compute", compute), ("memory", memory),
+                   ("collective", collective), key=lambda kv: kv[1])[0]
+    return {"compute_s": compute, "memory_s": memory,
+            "collective_s": collective, "dominant": dominant,
+            "num_chips": num_chips}
+
+
+def model_flops(cfg, shape, num_params: int) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE); decode counts one
+    token per sequence."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 6.0
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 2.0
+    else:
+        tokens = shape.global_batch
+        mult = 2.0
+    n = active_params(cfg, num_params)
+    return mult * n * tokens
+
+
+def active_params(cfg, num_params: int) -> float:
+    """Per-token active parameter count (MoE / CMoE discount)."""
+    if cfg.moe is None and cfg.cmoe is not None:
+        # CMoE-converted dense FFN: only (shared + top_k)/E of d_ff active
+        cm = cfg.cmoe
+        glu = 3 if cfg.activation in ("swiglu", "geglu") else 2
+        ffn_total = cfg.num_layers * glu * cfg.d_model * cfg.d_ff
+        frac = (cm.num_shared + cm.top_k) / cm.num_experts
+        return float(num_params - ffn_total * (1.0 - frac))
+    if cfg.moe is None:
+        return float(num_params)
+    moe = cfg.moe
+    n_layer_moe = cfg.num_layers // moe.moe_every
+    glu = 3 if cfg.activation in ("swiglu", "geglu") else 2
+    per_expert = glu * cfg.d_model * moe.d_expert
+    total_expert = n_layer_moe * moe.num_experts * per_expert
+    active_expert = n_layer_moe * moe.top_k * per_expert
+    return float(num_params - total_expert + active_expert)

@@ -1,0 +1,198 @@
+"""Unit tests: profiling, clustering, partition, router, gating."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import CMoEConfig
+from repro.core.clustering import (assign_jv, assign_sinkhorn,
+                                   balanced_kmeans, pairwise_sqdist,
+                                   representative_neurons)
+from repro.core.partition import (build_cmoe_params, partition_neurons,
+                                  reconstruct_dense_ffn)
+from repro.core.profiling import (activation_rates, atopk_mask,
+                                  bimodality_summary, profile_hidden)
+from repro.core.router import (cmoe_gate, expert_load, router_scores,
+                               update_balance_bias)
+from repro.models.layers import ffn_hidden
+
+
+# -------------------------------------------------------------- profiling
+
+def test_atopk_exact_k_per_row():
+    h = jax.random.normal(jax.random.PRNGKey(0), (64, 40))
+    a = atopk_mask(h, 7)
+    assert a.shape == (64, 40)
+    np.testing.assert_array_equal(np.asarray(a.sum(1)), 7)
+
+
+def test_atopk_selects_largest_magnitude():
+    h = jnp.asarray([[0.1, -5.0, 2.0, 0.01]])
+    a = atopk_mask(h, 2)
+    np.testing.assert_array_equal(np.asarray(a[0]), [0, 1, 1, 0])
+
+
+def test_activation_rates_bounds():
+    h = jax.random.normal(jax.random.PRNGKey(1), (128, 32))
+    a, mu = profile_hidden(h, 5)
+    assert float(mu.min()) >= 0 and float(mu.max()) <= 1
+    assert abs(float(mu.mean()) - 5 / 32) < 1e-6      # mass conservation
+
+
+def test_bimodality_summary_keys():
+    s = bimodality_summary(jnp.asarray([0.01, 0.02, 0.99, 1.0]))
+    assert 0 <= s["frac_above_hi"] <= 1
+
+
+# -------------------------------------------------------------- clustering
+
+def test_jv_assignment_balanced_and_optimal():
+    rng = np.random.default_rng(0)
+    dist = rng.random((6, 2)).astype(np.float32)
+    a = assign_jv(dist, 3)
+    counts = np.bincount(a, minlength=2)
+    np.testing.assert_array_equal(counts, [3, 3])
+    # brute force optimum over all balanced assignments
+    import itertools
+    best = np.inf
+    for combo in itertools.combinations(range(6), 3):
+        mask = np.zeros(6, bool)
+        mask[list(combo)] = True
+        cost = dist[mask, 0].sum() + dist[~mask, 1].sum()
+        best = min(best, cost)
+    got = dist[np.arange(6), a].sum()
+    assert abs(got - best) < 1e-5
+
+
+def test_sinkhorn_close_to_jv():
+    rng = np.random.default_rng(1)
+    feats = rng.random((64, 16)).astype(np.float32)
+    cent = rng.random((4, 16)).astype(np.float32)
+    dist = np.asarray(pairwise_sqdist(jnp.asarray(feats),
+                                      jnp.asarray(cent)))
+    a_jv = assign_jv(dist, 16)
+    a_sk = assign_sinkhorn(dist, 16, tau=0.02, iters=200)
+    np.testing.assert_array_equal(np.bincount(a_sk, minlength=4), 16)
+    cost_jv = dist[np.arange(64), a_jv].sum()
+    cost_sk = dist[np.arange(64), a_sk].sum()
+    assert cost_sk <= cost_jv * 1.15, (cost_jv, cost_sk)
+
+
+@pytest.mark.parametrize("method", ["jv", "sinkhorn"])
+def test_balanced_kmeans_balance(method):
+    rng = np.random.default_rng(2)
+    feats = rng.random((48, 20)).astype(np.float32)
+    res = balanced_kmeans(feats, 4, method=method)
+    np.testing.assert_array_equal(np.bincount(res.assignment, minlength=4),
+                                  12)
+    reps = representative_neurons(feats, res)
+    for j, r in enumerate(reps):
+        assert res.assignment[r] == j
+
+
+def test_kmeans_recovers_planted_clusters():
+    rng = np.random.default_rng(3)
+    centers = rng.random((4, 32)) * 10
+    feats = np.concatenate([centers[i] + 0.01 * rng.standard_normal((8, 32))
+                            for i in range(4)]).astype(np.float32)
+    res = balanced_kmeans(feats, 4, method="jv")
+    for i in range(4):
+        group = res.assignment[i * 8:(i + 1) * 8]
+        assert len(set(group.tolist())) == 1    # each blob intact
+
+
+# -------------------------------------------------------------- partition
+
+def test_partition_covers_all_neurons():
+    rng = np.random.default_rng(4)
+    a = (rng.random((100, 40)) < 0.2).astype(np.int8)
+    mu = a.mean(0).astype(np.float32)
+    cm = CMoEConfig(num_experts=8, num_shared=3, top_k=3, assignment="jv")
+    part = partition_neurons(a, mu, cm)
+    all_idx = np.concatenate([part.shared_idx, part.routed_idx.reshape(-1)])
+    np.testing.assert_array_equal(np.sort(all_idx), np.arange(40))
+    assert part.routed_idx.shape == (5, 5)
+    # shared experts have the HIGHEST activation rates
+    assert mu[part.shared_idx].min() >= \
+        mu[part.routed_idx.reshape(-1)].max() - 1e-6
+
+
+def test_build_and_reconstruct_roundtrip():
+    rng = np.random.default_rng(5)
+    d, dh = 16, 24
+    ffn = {"wg": jnp.asarray(rng.standard_normal((d, dh)), jnp.float32),
+           "wu": jnp.asarray(rng.standard_normal((d, dh)), jnp.float32),
+           "wd": jnp.asarray(rng.standard_normal((dh, d)), jnp.float32)}
+    x = jnp.asarray(rng.standard_normal((50, d)), jnp.float32)
+    h = ffn_hidden(x, ffn, "swiglu")
+    a, mu = profile_hidden(h, 4)
+    cm = CMoEConfig(num_experts=6, num_shared=2, top_k=2, assignment="jv")
+    part = partition_neurons(np.asarray(a), np.asarray(mu), cm)
+    cp = build_cmoe_params(ffn, part, cm, "swiglu")
+    rec = reconstruct_dense_ffn(cp, part, "swiglu", d)
+    for k in ("wg", "wu", "wd"):
+        np.testing.assert_allclose(np.asarray(rec[k]), np.asarray(ffn[k]))
+
+
+# -------------------------------------------------------------- router
+
+def test_router_scores_match_representative_hidden():
+    """The analytical router IS the representative neurons' hidden values."""
+    rng = np.random.default_rng(6)
+    d, dh = 12, 16
+    ffn = {"wg": jnp.asarray(rng.standard_normal((d, dh)), jnp.float32),
+           "wu": jnp.asarray(rng.standard_normal((d, dh)), jnp.float32),
+           "wd": jnp.asarray(rng.standard_normal((dh, d)), jnp.float32)}
+    x = jnp.asarray(rng.standard_normal((30, d)), jnp.float32)
+    h = ffn_hidden(x, ffn, "swiglu")
+    a, mu = profile_hidden(h, 4)
+    cm = CMoEConfig(num_experts=4, num_shared=1, top_k=1, assignment="jv")
+    part = partition_neurons(np.asarray(a), np.asarray(mu), cm)
+    cp = build_cmoe_params(ffn, part, cm, "swiglu")
+    scores = router_scores(x, cp["router"], "swiglu")
+    np.testing.assert_allclose(np.asarray(scores),
+                               np.asarray(h[:, part.rep_idx]), atol=1e-5)
+
+
+def test_cmoe_gate_training_free_is_binary():
+    scores = jax.random.normal(jax.random.PRNGKey(0), (10, 6))
+    gates, idx, probs = cmoe_gate(scores, 2)
+    np.testing.assert_array_equal(np.asarray(gates), 1.0)
+    assert idx.shape == (10, 2)
+    # selected are the top-2 by probability
+    np.testing.assert_array_equal(
+        np.sort(np.asarray(idx), 1),
+        np.sort(np.asarray(jax.lax.top_k(probs, 2)[1]), 1))
+
+
+def test_cmoe_gate_bias_shifts_selection_not_value():
+    scores = jnp.zeros((4, 3))
+    bias = jnp.asarray([1.0, 0.0, -1.0])
+    gates, idx, _ = cmoe_gate(scores, 1, bias=bias)
+    np.testing.assert_array_equal(np.asarray(idx)[:, 0], 0)
+    np.testing.assert_array_equal(np.asarray(gates), 1.0)
+
+
+def test_cmoe_gate_learnable_scaling():
+    scores = jnp.zeros((4, 4))           # uniform probs = 0.25
+    u = jnp.asarray([2.0, 0.0, 0.0, 0.0])
+    gates, idx, _ = cmoe_gate(scores, 4, u=u)
+    g = np.asarray(gates)[np.asarray(idx) == 0]
+    np.testing.assert_allclose(g, 1.0 + 0.25 * 2.0, atol=1e-6)
+
+
+def test_balance_bias_update_direction():
+    bias = jnp.zeros(4)
+    load = jnp.asarray([0.7, 0.1, 0.1, 0.1])
+    nb = update_balance_bias(bias, load, 1e-3)
+    assert float(nb[0]) < 0                 # overloaded -> pushed down
+    assert all(float(nb[i]) > 0 for i in (1, 2, 3))
+
+
+def test_expert_load_sums_to_one():
+    idx = jnp.asarray([[0, 1], [0, 2], [3, 1]])
+    keep = jnp.ones_like(idx, bool)
+    load = expert_load(idx, keep, 4)
+    np.testing.assert_allclose(float(load.sum()), 1.0, atol=1e-6)

@@ -1,0 +1,101 @@
+"""Hierarchical MoE->MoE conversion + baseline restructuring methods."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_batch
+from repro.config import CMoEConfig, override
+from repro.configs import get_smoke_config
+from repro.core.baselines import (convert_with_partition, hybrid_router_swap,
+                                  random_partition, sleb_drop_layers,
+                                  uniform_partition, wina_ffn)
+from repro.core.hierarchical import convert_moe_model
+from repro.models import build_model
+from repro.models.layers import ffn
+
+CM = CMoEConfig(num_experts=8, num_shared=3, top_k=3, k_activation=4,
+                assignment="jv")
+
+
+@pytest.mark.parametrize("arch", ["deepseek-v2-236b",
+                                  "llama4-maverick-400b-a17b"])
+def test_hierarchical_all_active_exact(arch):
+    cfg = override(get_smoke_config(arch), dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    calib = make_batch(cfg, 2, 64, seed=3)
+    cm_all = CMoEConfig(num_experts=8, num_shared=3, top_k=5,
+                        k_activation=4, assignment="jv")
+    m2, p2, _ = convert_moe_model(model, params, calib, cm_all)
+    batch = make_batch(cfg, 2, 32, seed=4)
+    h1 = model.hidden_states(params, batch)
+    h2 = m2.hidden_states(p2, batch)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_hierarchical_sparse_runs_and_balances():
+    cfg = override(get_smoke_config("deepseek-v2-236b"), dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    calib = make_batch(cfg, 2, 64, seed=3)
+    m2, p2, rep = convert_moe_model(model, params, calib, CM)
+    batch = make_batch(cfg, 2, 32, seed=4)
+    loss, metrics = m2.loss(p2, batch)
+    assert np.isfinite(float(loss))
+    assert rep.num_experts == cfg.moe.num_experts
+
+
+@pytest.mark.parametrize("method", ["moefication", "uniform", "random"])
+def test_baseline_conversions_run(qwen_smoke, method):
+    cfg, model, params = qwen_smoke
+    calib = make_batch(cfg, 2, 64, seed=3)
+    mb, pb, _ = convert_with_partition(model, params, calib, CM, method)
+    batch = make_batch(cfg, 2, 32, seed=4)
+    loss, _ = mb.loss(pb, batch)
+    assert np.isfinite(float(loss)), method
+    # matched sparsity: same active-expert fraction as S3A3E8
+    assert mb.cfg.cmoe.top_k == CM.num_shared + CM.top_k
+    assert mb.cfg.cmoe.num_shared == 0
+
+
+def test_router_swap_runs(qwen_smoke):
+    cfg, model, params = qwen_smoke
+    calib = make_batch(cfg, 2, 64, seed=3)
+    mb, pb, _ = hybrid_router_swap(model, params, calib, CM, "moefication")
+    loss, _ = mb.loss(pb, make_batch(cfg, 2, 32, seed=4))
+    assert np.isfinite(float(loss))
+
+
+def test_partition_helpers_balanced():
+    p1 = uniform_partition(40, 8)
+    p2 = random_partition(40, 8, seed=1)
+    for p in (p1, p2):
+        assert p.routed_idx.shape == (8, 5)
+        np.testing.assert_array_equal(np.sort(p.routed_idx.reshape(-1)),
+                                      np.arange(40))
+
+
+def test_wina_keep_fraction(qwen_smoke):
+    cfg, model, params = qwen_smoke
+    ffn_l = jax.tree.map(lambda a: a[0], params["blocks"]["ffn"])
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, cfg.d_model))
+    out, mask = wina_ffn(x, ffn_l, cfg.activation, keep_frac=0.25)
+    frac = float(mask.mean())
+    assert abs(frac - 0.25) < 0.05
+    # full keep == dense
+    out_full, _ = wina_ffn(x, ffn_l, cfg.activation, keep_frac=1.0)
+    dense = ffn(x, ffn_l, cfg.activation)
+    np.testing.assert_allclose(np.asarray(out_full), np.asarray(dense),
+                               atol=1e-5)
+
+
+def test_sleb_drop_layers(qwen_smoke):
+    cfg, model, params = qwen_smoke
+    new_params, new_cfg = sleb_drop_layers(params, cfg, drop_every=2)
+    assert new_cfg.num_layers == cfg.num_layers // 2
+    m2 = build_model(new_cfg)
+    batch = make_batch(cfg, 2, 16, seed=5)
+    loss, _ = m2.loss(new_params, batch)
+    assert np.isfinite(float(loss))
