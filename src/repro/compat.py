@@ -1,0 +1,36 @@
+"""Version-compatibility shims for JAX APIs that moved between releases.
+
+Everything in the repo that needs a moved/renamed JAX symbol imports it
+from here, so an upgrade (or downgrade) is a one-file change.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+
+def _rep_check_kwargs(fn) -> dict:
+    """The replication-check kwarg was renamed check_rep -> check_vma; we
+    always disable it because the MoE dispatch bodies mix per-shard and
+    replicated outputs. Probe the signature rather than try/except so a
+    genuine TypeError from bad specs isn't swallowed."""
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return {}
+    for name in ("check_vma", "check_rep"):
+        if name in params:
+            return {name: False}
+    return {}
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """`jax.shard_map` (new) / `jax.experimental.shard_map.shard_map`
+    (pre-0.5)."""
+    if hasattr(jax, "shard_map"):
+        sm = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as sm
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              **_rep_check_kwargs(sm))

@@ -1,11 +1,44 @@
 # The paper's primary contribution: analytical FFN->MoE restructuring.
-from repro.core.convert import (ConversionReport, convert_dense_model,  # noqa
-                                convert_ffn_layer, reconstruction_error)
-from repro.core.hierarchical import convert_moe_model  # noqa: F401
-from repro.core.moe_ffn import cmoe_ffn  # noqa: F401
-from repro.core.partition import (PartitionResult, build_cmoe_params,  # noqa
-                                  partition_neurons)
-from repro.core.profiling import (activation_rates, atopk_mask,  # noqa
-                                  bimodality_summary, profile_hidden)
-from repro.core.router import (cmoe_gate, router_scores,  # noqa
-                               update_balance_bias)
+#
+# Re-exports are LAZY (PEP 562): `repro.core.experts` sits below
+# `repro.models` in the layering (models.moe delegates expert execution to
+# it), so importing any `repro.core.*` submodule must not eagerly pull in
+# `core.convert` -> `models.model` and close an import cycle.
+
+_EXPORTS = {
+    "ConversionReport": "repro.core.convert",
+    "convert_dense_model": "repro.core.convert",
+    "convert_ffn_layer": "repro.core.convert",
+    "reconstruction_error": "repro.core.convert",
+    "convert_moe_model": "repro.core.hierarchical",
+    "cmoe_ffn": "repro.core.moe_ffn",
+    "routed_experts": "repro.core.experts",
+    "select_backend": "repro.core.experts",
+    "BACKENDS": "repro.core.experts",
+    "PartitionResult": "repro.core.partition",
+    "build_cmoe_params": "repro.core.partition",
+    "partition_neurons": "repro.core.partition",
+    "activation_rates": "repro.core.profiling",
+    "atopk_mask": "repro.core.profiling",
+    "bimodality_summary": "repro.core.profiling",
+    "profile_hidden": "repro.core.profiling",
+    "cmoe_gate": "repro.core.router",
+    "router_scores": "repro.core.router",
+    "update_balance_bias": "repro.core.router",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        import importlib
+        mod = importlib.import_module(_EXPORTS[name])
+        val = getattr(mod, name)
+        globals()[name] = val        # cache: later lookups skip __getattr__
+        return val
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

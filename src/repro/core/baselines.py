@@ -148,7 +148,8 @@ def convert_with_partition(model: Model, params: dict, calib_batch: dict,
     new_blocks["cmoe"] = stacked
     new_params = {**params, "blocks": new_blocks}
     new_model = build_model(cfg.with_cmoe(cm_b),
-                            use_kernel=model.use_kernel)
+                            use_kernel=model.use_kernel,
+                            backend=model.backend)
     report = ConversionReport(time.perf_counter() - t0, 0.0, 0.0, l, parts,
                               b * s)
     return new_model, new_params, report
@@ -197,7 +198,8 @@ def hybrid_router_swap(model: Model, params: dict, calib_batch: dict,
     new_blocks["cmoe"] = stacked
     new_params = {**params, "blocks": new_blocks}
     new_model = build_model(cfg.with_cmoe(cm_b),
-                            use_kernel=model.use_kernel)
+                            use_kernel=model.use_kernel,
+                            backend=model.backend)
     return new_model, new_params, ConversionReport(
         time.perf_counter() - t0, 0, 0, l, [], b * s)
 

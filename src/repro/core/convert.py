@@ -93,7 +93,8 @@ def convert_dense_model(model: Model, params: dict, calib_batch: dict,
     new_params = {**params, "blocks": new_blocks}
 
     new_cfg = cfg.with_cmoe(cm)
-    new_model = build_model(new_cfg, use_kernel=model.use_kernel)
+    new_model = build_model(new_cfg, use_kernel=model.use_kernel,
+                            backend=model.backend)
     report = ConversionReport(
         seconds_total=time.perf_counter() - t0,
         seconds_profile=t_profile,

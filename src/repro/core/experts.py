@@ -1,0 +1,345 @@
+"""Unified routed-expert execution engine.
+
+Every routed-expert forward in the repo — the converted CMoE FFN (both the
+GSPMD and the shard_map data-local variants), the pretrained-MoE blocks
+(llama4 / deepseek-v2, global and all-to-all EP), and the hierarchical
+sub-expert runtime — delegates here. One module owns token dispatch, the
+glu / non-glu expert compute, and the backend choice, so a new kernel or
+sharding policy has a single seam to plug into.
+
+Backend matrix (``routed_experts(..., backend=...)``):
+
+  backend          dispatch             compute                 drops  use
+  ---------------  -------------------  ----------------------  -----  ----
+  exact            none (dense mask)    all E experts, (T,E,d)  no     test
+                                                                       oracle
+  grouped_xla      capacity scatter     (E,C,d)x(E,d,m) einsum  yes    prefill
+                   into (E,C,d) buffer                                 CPU/GPU
+  grouped_pallas   capacity scatter     Pallas ``moe_gmm``      yes    prefill
+                                        grouped GEMM kernel            TPU
+  gather           per-token weight     (T*k,)-batched GEMMs,   no     decode /
+                   gather (no buffer)   only selected experts          small T
+
+The grouped backends are prefill-shaped: they zero-initialize and scatter
+into an (E, C, d) capacity buffer, which costs O(E*C*d) regardless of T —
+the dominant decode-time cost for small token counts (see the MoE
+inference-optimization survey, Liu et al. 2024). The ``gather`` backend
+computes only the top-k selected experts per token with no capacity buffer
+and no token drops — the right shape when T ~ batch during decode.
+``select_backend`` encodes the policy: decode (or a prefill small enough
+to be under the gather break-even, ~E/k tokens) -> gather; larger
+prefill -> grouped, Pallas when kernels are requested (``use_kernel``;
+the Pallas kernel has no VJP, so autodiff callers must stay on the XLA
+path — serving enables kernels on TPU at the launch layer).
+
+Capacity-dispatch machinery (``expert_capacity`` / ``assign_positions`` /
+``dispatch`` / ``combine``) lives here too; ``repro.models.moe`` re-exports
+it for backward compatibility.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+BACKENDS = ("exact", "grouped_xla", "grouped_pallas", "gather")
+
+# Fallback break-even when the expert-bank shape is unknown: below this
+# many tokens the gather path beats the capacity scatter even for
+# prefill-shaped calls. With a known bank the threshold is ~E/k — weight
+# traffic is the dominant cost (gather reads t*k weight slabs, grouped
+# reads all E once); measured: benchmarks/bench_decode_backends.py.
+GATHER_TOKEN_THRESHOLD = 8
+
+
+def _act(activation: str):
+    if activation == "swiglu":
+        return lambda v: v * jax.nn.sigmoid(v)
+    return jax.nn.gelu
+
+
+def _is_glu(weights: dict) -> bool:
+    return "wg" in weights
+
+
+# ------------------------------------------------------- capacity dispatch
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def expert_capacity(num_tokens: int, num_experts: int, top_k: int,
+                    factor: float) -> int:
+    cap = int(factor * num_tokens * top_k / num_experts) + 1
+    # upper clamp: one token can occupy a bin at most top_k times (relevant
+    # for shard-destination binning where k assignments share a bin)
+    return max(8, round_up(min(cap, num_tokens * top_k), 8))
+
+
+class DispatchInfo(NamedTuple):
+    expert_idx: Array    # (T, k) int32
+    position: Array      # (T, k) int32 position within expert buffer
+    keep: Array          # (T, k) bool — False if dropped (over capacity)
+    gates: Array         # (T, k) float combine weights
+
+
+def assign_positions(expert_idx: Array, num_experts: int,
+                     capacity: int, chunk: int = 4096) -> tuple[Array, Array]:
+    """Per-assignment position within its expert's buffer (priority: earlier
+    k-choice first, then token order).
+
+    Memory-safe: the one-hot cumsum is CHUNKED over tokens with running
+    per-expert counts carried through a scan — the (T, E) one-hot matrix
+    (0.5 TB for 1M tokens x 128 experts) never materializes.
+
+    expert_idx: (T, k) int32. Returns (position (T,k), keep (T,k))."""
+    t, k = expert_idx.shape
+    chunk = min(chunk, t)
+    pad = (-t) % chunk
+    # pad with an OUT-OF-RANGE id: its one-hot row is all-zero, so padding
+    # never consumes real expert slots (caught by hypothesis: in-range
+    # padding leaked phantom counts into later k-choices)
+    idx = jnp.pad(expert_idx, ((0, pad), (0, 0)),
+                  constant_values=num_experts) if pad else expert_idx
+    nc = (t + pad) // chunk
+    counts = jnp.zeros((num_experts,), jnp.int32)
+    positions = []
+    for j in range(k):
+        col = idx[:, j].reshape(nc, chunk)
+
+        def chunk_step(counts, ids):
+            onehot = jax.nn.one_hot(ids, num_experts, dtype=jnp.int32)
+            within = jnp.cumsum(onehot, axis=0) - onehot      # 0-based
+            pos = jnp.take_along_axis(within + counts[None, :],
+                                      ids[:, None], axis=1)[:, 0]
+            return counts + jnp.sum(onehot, axis=0), pos
+
+        counts, pos_j = jax.lax.scan(chunk_step, counts, col)
+        positions.append(pos_j.reshape(-1)[:t])
+    position = jnp.stack(positions, axis=1)
+    keep = position < capacity
+    return position, keep
+
+
+def dispatch(x: Array, info: DispatchInfo, num_experts: int,
+             capacity: int) -> Array:
+    """x: (T, d) -> expert buffers (E, C, d)."""
+    t, d = x.shape
+    k = info.expert_idx.shape[1]
+    flat_e = info.expert_idx.reshape(-1)
+    flat_p = jnp.where(info.keep.reshape(-1), info.position.reshape(-1), 0)
+    contrib = jnp.repeat(x, k, axis=0) * info.keep.reshape(-1, 1).astype(
+        x.dtype)
+    buf = jnp.zeros((num_experts, capacity, d), x.dtype)
+    return buf.at[flat_e, flat_p].add(contrib, mode="drop")
+
+
+def combine(ybuf: Array, info: DispatchInfo) -> Array:
+    """ybuf: (E, C, d) -> (T, d) weighted by gates."""
+    t, k = info.expert_idx.shape
+    flat_e = info.expert_idx.reshape(-1)
+    flat_p = jnp.where(info.keep.reshape(-1), info.position.reshape(-1), 0)
+    rows = ybuf[flat_e, flat_p]                         # (T*k, d)
+    w = (info.gates.reshape(-1, 1).astype(ybuf.dtype) *
+         info.keep.reshape(-1, 1).astype(ybuf.dtype))
+    rows = rows * w
+    return rows.reshape(t, k, -1).sum(axis=1)
+
+
+# ----------------------------------------------------------- expert GEMMs
+
+def grouped_expert_ffn(xbuf: Array, weights: dict, activation: str,
+                       use_kernel: bool = False) -> Array:
+    """Batched expert FFN over capacity buffers: xbuf (E, C, d) with
+    per-expert weights (E, d, m) / (E, m, d). glu ({wg,wu,wd}) and non-glu
+    ({wi,wd}) schemas both handled here — the one place these einsum
+    branches exist."""
+    glu = _is_glu(weights)
+    if use_kernel and glu:
+        from repro.kernels import ops as kops
+        return kops.moe_gmm(xbuf, weights["wg"], weights["wu"],
+                            weights["wd"], activation=activation)
+    act = _act(activation)
+    if glu:
+        g = jnp.einsum("ecd,edm->ecm", xbuf, weights["wg"].astype(xbuf.dtype),
+                       preferred_element_type=jnp.float32)
+        u = jnp.einsum("ecd,edm->ecm", xbuf, weights["wu"].astype(xbuf.dtype),
+                       preferred_element_type=jnp.float32)
+        h = (act(g) * u).astype(xbuf.dtype)
+    else:
+        g = jnp.einsum("ecd,edm->ecm", xbuf, weights["wi"].astype(xbuf.dtype),
+                       preferred_element_type=jnp.float32)
+        h = act(g).astype(xbuf.dtype)
+    return jnp.einsum("ecm,emd->ecd", h, weights["wd"].astype(xbuf.dtype),
+                      preferred_element_type=jnp.float32).astype(xbuf.dtype)
+
+
+def all_experts_ffn(xf: Array, weights: dict, activation: str) -> Array:
+    """(T, E, d): every expert's output for every token (the oracle)."""
+    act = _act(activation)
+    if _is_glu(weights):
+        g = jnp.einsum("td,ndm->tnm", xf, weights["wg"].astype(xf.dtype),
+                       preferred_element_type=jnp.float32)
+        u = jnp.einsum("td,ndm->tnm", xf, weights["wu"].astype(xf.dtype),
+                       preferred_element_type=jnp.float32)
+        h = (act(g) * u).astype(xf.dtype)
+    else:
+        g = jnp.einsum("td,ndm->tnm", xf, weights["wi"].astype(xf.dtype),
+                       preferred_element_type=jnp.float32)
+        h = act(g).astype(xf.dtype)
+    return jnp.einsum("tnm,nmd->tnd", h, weights["wd"].astype(xf.dtype),
+                      preferred_element_type=jnp.float32).astype(xf.dtype)
+
+
+# --------------------------------------------------------------- backends
+
+def _exact(xf, weights, gates, idx, activation, valid):
+    t = xf.shape[0]
+    n_e = weights["wd"].shape[0]
+    y_all = all_experts_ffn(xf, weights, activation)          # (T, E, d)
+    w = gates.astype(y_all.dtype)
+    if valid is not None:
+        w = w * valid.astype(y_all.dtype)
+    gmask = jnp.zeros((t, n_e), y_all.dtype).at[
+        jnp.arange(t)[:, None], idx].add(w)
+    return jnp.einsum("tnd,tn->td", y_all, gmask)
+
+
+def _gather(xf, weights, gates, idx, activation, valid):
+    """Token-choice gather path: compute ONLY the selected experts.
+
+    Flattens the (T, k) assignments to T*k independent rows, gathers each
+    row's expert weights, and runs (T*k)-batched GEMMs. No capacity buffer
+    is materialized and no token is ever dropped."""
+    t, k = idx.shape
+    d = xf.shape[1]
+    act = _act(activation)
+    flat = idx.reshape(-1)                                    # (T*k,)
+    xr = jnp.repeat(xf, k, axis=0)                            # (T*k, d)
+    wd = jnp.take(weights["wd"], flat, axis=0)                # (T*k, m, d)
+    if _is_glu(weights):
+        wg = jnp.take(weights["wg"], flat, axis=0)            # (T*k, d, m)
+        wu = jnp.take(weights["wu"], flat, axis=0)
+        g = jnp.einsum("bd,bdm->bm", xr, wg.astype(xf.dtype),
+                       preferred_element_type=jnp.float32)
+        u = jnp.einsum("bd,bdm->bm", xr, wu.astype(xf.dtype),
+                       preferred_element_type=jnp.float32)
+        h = (act(g) * u).astype(xf.dtype)
+    else:
+        wi = jnp.take(weights["wi"], flat, axis=0)
+        g = jnp.einsum("bd,bdm->bm", xr, wi.astype(xf.dtype),
+                       preferred_element_type=jnp.float32)
+        h = act(g).astype(xf.dtype)
+    y = jnp.einsum("bm,bmd->bd", h, wd.astype(xf.dtype),
+                   preferred_element_type=jnp.float32).astype(xf.dtype)
+    w = gates.astype(xf.dtype)
+    if valid is not None:
+        w = w * valid.astype(xf.dtype)
+    return (y.reshape(t, k, d) * w[..., None]).sum(axis=1)
+
+
+def _grouped(xf, weights, gates, idx, activation, valid, *,
+             capacity_factor, use_kernel):
+    t = xf.shape[0]
+    k = idx.shape[1]
+    n_e = weights["wd"].shape[0]
+    capacity = expert_capacity(t, n_e, k, capacity_factor)
+    position, keep = assign_positions(idx, n_e, capacity)
+    if valid is not None:
+        keep = keep & valid
+    info = DispatchInfo(idx, position, keep, gates.astype(xf.dtype))
+    xbuf = dispatch(xf, info, n_e, capacity)
+    ybuf = grouped_expert_ffn(xbuf, weights, activation,
+                              use_kernel=use_kernel)
+    return combine(ybuf, info), keep
+
+
+# ----------------------------------------------------------------- engine
+
+def select_backend(t: int, cfg, phase: str, *, use_kernel: bool = False,
+                   num_experts: Optional[int] = None,
+                   top_k: Optional[int] = None) -> str:
+    """Backend policy: decode (and prefills under the gather break-even)
+    -> ``gather``; larger prefill -> grouped, Pallas only when a kernel
+    path is requested (``moe_gmm`` has no VJP, so autodiff must stay on
+    the XLA path — inference launchers opt into kernels on TPU).
+
+    The break-even is weight traffic: gather reads t*k per-token weight
+    slabs, grouped reads all E once (capacity floor >= 8 rows/expert), so
+    gather wins roughly while t*k <= E. Bank shape comes from
+    num_experts/top_k when the caller knows it (``routed_experts`` passes
+    the actual stacked-weight extents), else from cfg.cmoe / cfg.moe.
+
+    Decode stays on gather even past the break-even (measured crossover
+    ~batch 32 at E=160, k=6): the grouped paths DROP over-capacity tokens,
+    which at decode silently zeroes a generated token's routed output —
+    a correctness hazard, not a throughput tradeoff. Large-batch decode
+    throughput is the ragged-kernel item in ROADMAP "Open items"."""
+    if num_experts is None or top_k is None:
+        spec = getattr(cfg, "cmoe", None) or getattr(cfg, "moe", None)
+        if spec is not None:
+            num_experts = num_experts or getattr(spec, "num_routed", None) \
+                or getattr(spec, "num_experts", None)
+            top_k = top_k or getattr(spec, "top_k", None)
+    threshold = GATHER_TOKEN_THRESHOLD
+    if num_experts and top_k:
+        threshold = max(threshold, num_experts // max(top_k, 1))
+    if phase == "decode" or t <= threshold:
+        return "gather"
+    return "grouped_pallas" if use_kernel else "grouped_xla"
+
+
+def routed_experts(xf: Array, weights: dict, gates: Array, idx: Array,
+                   cfg, *, backend: Optional[str] = None,
+                   phase: str = "prefill", capacity_factor: float = 1.25,
+                   use_kernel: bool = False,
+                   valid: Optional[Array] = None):
+    """Run the routed experts selected by (gates, idx) on tokens xf.
+
+    Args:
+      xf:      (T, d) flat tokens.
+      weights: per-expert stacks — {"wg","wu","wd"} (glu) or {"wi","wd"},
+               each leading dim E.
+      gates:   (T, k) combine weights.
+      idx:     (T, k) int32 selected expert ids.
+      cfg:     model config (only ``cfg.activation`` is read).
+      backend: one of BACKENDS, or None/"auto" to use ``select_backend``.
+      phase:   "prefill" | "decode" — drives auto backend selection.
+      valid:   optional (T, k) bool; assignments with False contribute
+               nothing (used for padded / unoccupied buffer rows).
+
+    Returns (out (T, d), keep (T, k) bool). ``keep`` is all-True for the
+    drop-free backends (exact, gather) and marks capacity drops for the
+    grouped ones.
+    """
+    if backend in (None, "auto"):
+        backend = select_backend(xf.shape[0], cfg, phase,
+                                 use_kernel=use_kernel,
+                                 num_experts=weights["wd"].shape[0],
+                                 top_k=idx.shape[1])
+        if backend == "grouped_pallas" and not _is_glu(weights):
+            backend = "grouped_xla"      # moe_gmm kernel is glu-only
+    elif backend == "grouped_pallas" and not _is_glu(weights):
+        raise ValueError(
+            "backend='grouped_pallas' requires a glu weight schema "
+            "({wg,wu,wd}); the moe_gmm kernel has no non-glu ({wi,wd}) "
+            "path — use 'grouped_xla'")
+    activation = cfg.activation
+    if backend == "exact":
+        out = _exact(xf, weights, gates, idx, activation, valid)
+    elif backend == "gather":
+        out = _gather(xf, weights, gates, idx, activation, valid)
+    elif backend in ("grouped_xla", "grouped_pallas"):
+        out, keep = _grouped(xf, weights, gates, idx, activation, valid,
+                             capacity_factor=capacity_factor,
+                             use_kernel=backend == "grouped_pallas")
+        return out, keep
+    else:
+        raise ValueError(f"unknown backend {backend!r}; expected one of "
+                         f"{BACKENDS}")
+    keep = jnp.ones_like(idx, bool) if valid is None \
+        else jnp.broadcast_to(valid, idx.shape)
+    return out, keep

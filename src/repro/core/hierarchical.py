@@ -26,13 +26,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import CMoEConfig
+from repro.core.experts import (DispatchInfo, assign_positions, combine,
+                                dispatch, expert_capacity, round_up,
+                                routed_experts)
 from repro.core.partition import build_cmoe_params, partition_neurons
 from repro.core.profiling import profile_hidden
 from repro.core.router import cmoe_gate
-from repro.models.layers import matmul, swish
-from repro.models.moe import (DispatchInfo, assign_positions, combine,
-                              dispatch, expert_capacity, expert_ffn)
+from repro.models.layers import matmul
 from repro.models.model import Model, build_model
+from repro.models.moe import moe_gate
 
 Array = jax.Array
 
@@ -91,14 +93,17 @@ def convert_moe_model(model: Model, params: dict, calib_batch: dict,
     new_blocks["cmoe"] = cmoe_stacked
     new_params = {**params, key: new_blocks}
 
-    new_model = build_model(cfg.with_cmoe(cm), use_kernel=model.use_kernel)
+    new_model = build_model(cfg.with_cmoe(cm), use_kernel=model.use_kernel,
+                            backend=model.backend)
     report = HierarchicalReport(time.perf_counter() - t0, l, e)
     return new_model, new_params, report
 
 
 # ------------------------------------------------------------- runtime
 
-def hierarchical_moe_ffn(x: Array, p: dict, cfg, *, use_kernel: bool = False):
+def hierarchical_moe_ffn(x: Array, p: dict, cfg, *, use_kernel: bool = False,
+                         backend: str | None = None,
+                         phase: str = "prefill"):
     """Two-level MoE forward on a converted block. x: (B, S, d)."""
     moe = cfg.moe
     cm = cfg.cmoe
@@ -107,17 +112,17 @@ def hierarchical_moe_ffn(x: Array, p: dict, cfg, *, use_kernel: bool = False):
     t = b * s
 
     # ---- top level (original router, unchanged) ----
-    scores = matmul(xf, p["moe"]["router"]).astype(jnp.float32)
-    probs = jax.nn.softmax(scores, axis=-1)
-    sel = probs
-    if moe.balance_bias and "balance_bias" in p["moe"]:
-        sel = probs + p["moe"]["balance_bias"][None, :]
-    gates, idx = jax.lax.top_k(sel, moe.top_k)
-    gates = jnp.take_along_axis(probs, idx, axis=1)
-    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    gates, idx, probs = moe_gate(xf, p["moe"], moe)
 
-    capacity = expert_capacity(t, moe.num_experts, moe.top_k,
-                               moe.capacity_factor)
+    if phase == "decode":
+        # drop-free: capacity >= t means no expert can overflow even if
+        # every token routes to it — over-capacity drops would silently
+        # zero a generated token's entire expert contribution. Cheap at
+        # decode T; the buffer-free outer level is a ROADMAP item.
+        capacity = max(8, round_up(t, 8))
+    else:
+        capacity = expert_capacity(t, moe.num_experts, moe.top_k,
+                                   moe.capacity_factor)
     position, keep = assign_positions(idx, moe.num_experts, capacity)
     info = DispatchInfo(idx, position, keep, gates.astype(x.dtype))
     xbuf = dispatch(xf, info, moe.num_experts, capacity)     # (E, C, d)
@@ -163,24 +168,27 @@ def hierarchical_moe_ffn(x: Array, p: dict, cfg, *, use_kernel: bool = False):
     else:
         sub_gates = jnp.ones_like(p_sel)
 
-    # global flat sub-expert ids: e * N_r' + j
+    # global flat sub-expert ids: e * N_r' + j — the flattened E·N_r'
+    # sub-expert bank runs through the unified engine (unoccupied buffer
+    # rows masked via `valid`)
     owner = jnp.repeat(jnp.arange(e), capacity)[:, None]     # (E*C, 1)
     flat_sub = owner * n_r + sub_idx
     occ = occupancy.reshape(-1)                              # (E*C,)
-    sub_cap = expert_capacity(e * capacity, e * n_r, cm.top_k,
-                              moe.capacity_factor)
-    sub_pos, sub_keep = assign_positions(flat_sub, e * n_r, sub_cap)
-    sub_keep = sub_keep & occ[:, None]
-    sub_info = DispatchInfo(flat_sub, sub_pos, sub_keep,
-                            sub_gates.astype(x.dtype))
-    xsub = dispatch(xbuf.reshape(e * capacity, d), sub_info, e * n_r, sub_cap)
-    ysub = expert_ffn(
-        xsub,
-        cp["routed"]["wg"].reshape(e * n_r, d, -1),
-        cp["routed"]["wu"].reshape(e * n_r, d, -1),
-        cp["routed"]["wd"].reshape(e * n_r, -1, d),
-        cfg.activation, use_kernel=use_kernel)
-    y_routed = combine(ysub, sub_info).reshape(e, capacity, d)
+    # the sub-level call runs on E*C buffer rows, not on the outer token
+    # stream. At prefill those rows are prefill-shaped, so the engine's
+    # t-vs-bank threshold picks grouped; at decode the phase is forwarded
+    # so the engine stays on the drop-free gather path (grouped drops
+    # would silently zero a generated token's sub-expert output)
+    y_routed, _ = routed_experts(
+        xbuf.reshape(e * capacity, d),
+        {"wg": cp["routed"]["wg"].reshape(e * n_r, d, -1),
+         "wu": cp["routed"]["wu"].reshape(e * n_r, d, -1),
+         "wd": cp["routed"]["wd"].reshape(e * n_r, -1, d)},
+        sub_gates.astype(x.dtype), flat_sub, cfg,
+        backend=backend, phase=phase,
+        capacity_factor=moe.capacity_factor, use_kernel=use_kernel,
+        valid=occ[:, None])
+    y_routed = y_routed.reshape(e, capacity, d)
 
     ybuf = y_shared + y_routed
     out = combine(ybuf, info)

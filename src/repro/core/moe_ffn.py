@@ -2,12 +2,11 @@
 
 F_MoE(x) = E_shared(x) + Σ_i g_i · E_i^routed(x)
 
-Two execution paths:
-  * grouped (default): capacity-bounded dispatch + batched expert GEMM —
-    the deployable TPU path (Pallas kernel behind ``use_kernel``);
-  * exact: dense-mask evaluation of every routed expert — no capacity
-    drops, used by tests (the all-active exactness invariant) and small
-    models.
+Routed-expert execution delegates to the unified engine
+(`repro.core.experts`): capacity-grouped dispatch (XLA einsum or Pallas
+``moe_gmm``) for prefill-shaped calls, the buffer-free ``gather`` path for
+decode, and the dense-mask ``exact`` oracle for tests (the all-active
+exactness invariant) and small models.
 
 Param schema per layer (stacked over L inside the block scan):
   cmoe = {
@@ -23,10 +22,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.experts import routed_experts
 from repro.core.router import cmoe_gate, expert_load, router_scores
 from repro.models.layers import matmul, swish
-from repro.models.moe import (DispatchInfo, assign_positions, combine,
-                              dispatch, expert_capacity, expert_ffn)
 
 Array = jax.Array
 
@@ -44,26 +42,9 @@ def _shared_ffn(xf: Array, p: dict, activation: str) -> Array:
     return matmul(h, p["wd"])
 
 
-def _routed_exact(xf: Array, routed: dict, activation: str) -> Array:
-    """(T, N_r, d): every routed expert's output for every token."""
-    if activation in ("swiglu", "geglu"):
-        g = jnp.einsum("td,ndm->tnm", xf, routed["wg"].astype(xf.dtype),
-                       preferred_element_type=jnp.float32)
-        u = jnp.einsum("td,ndm->tnm", xf, routed["wu"].astype(xf.dtype),
-                       preferred_element_type=jnp.float32)
-        act = (lambda v: v * jax.nn.sigmoid(v)) if activation == "swiglu" \
-            else jax.nn.gelu
-        h = (act(g) * u).astype(xf.dtype)
-    else:
-        g = jnp.einsum("td,ndm->tnm", xf, routed["wi"].astype(xf.dtype),
-                       preferred_element_type=jnp.float32)
-        h = jax.nn.gelu(g).astype(xf.dtype)
-    return jnp.einsum("tnm,nmd->tnd", h, routed["wd"].astype(xf.dtype),
-                      preferred_element_type=jnp.float32).astype(xf.dtype)
-
-
 def cmoe_ffn(x: Array, p: dict, cfg, *, use_kernel: bool = False,
-             exact: bool = False, capacity_factor: float = 1.25):
+             capacity_factor: float = 1.25,
+             backend: str | None = None, phase: str = "prefill"):
     """x: (B, S, d) or (T, d). Returns (out, aux{load, router_probs_mean})."""
     cm = cfg.cmoe
     squeeze = x.ndim == 2
@@ -72,7 +53,6 @@ def cmoe_ffn(x: Array, p: dict, cfg, *, use_kernel: bool = False,
     else:
         b, s, d = x.shape
         xf = x.reshape(b * s, d)
-    t = xf.shape[0]
     n_r = cm.num_routed
 
     scores = router_scores(xf, p["router"], cfg.activation)
@@ -81,31 +61,10 @@ def cmoe_ffn(x: Array, p: dict, cfg, *, use_kernel: bool = False,
         u=p.get("u") if cm.learnable_scaling else None,
         bias=p.get("bias"))
 
-    if exact:
-        y_all = _routed_exact(xf, p["routed"], cfg.activation)  # (T,Nr,d)
-        gmask = jnp.zeros((t, n_r), y_all.dtype).at[
-            jnp.arange(t)[:, None], idx].set(gates.astype(y_all.dtype))
-        out = jnp.einsum("tnd,tn->td", y_all, gmask)
-        keep = jnp.ones_like(idx, bool)
-    else:
-        capacity = expert_capacity(t, n_r, cm.top_k, capacity_factor)
-        position, keep = assign_positions(idx, n_r, capacity)
-        info = DispatchInfo(idx, position, keep, gates.astype(xf.dtype))
-        xbuf = dispatch(xf, info, n_r, capacity)
-        if cfg.activation in ("swiglu", "geglu"):
-            ybuf = expert_ffn(xbuf, p["routed"]["wg"], p["routed"]["wu"],
-                              p["routed"]["wd"], cfg.activation,
-                              use_kernel=use_kernel)
-        else:
-            g = jnp.einsum("ecd,edm->ecm", xbuf,
-                           p["routed"]["wi"].astype(xbuf.dtype),
-                           preferred_element_type=jnp.float32)
-            h = jax.nn.gelu(g).astype(xbuf.dtype)
-            ybuf = jnp.einsum("ecm,emd->ecd", h,
-                              p["routed"]["wd"].astype(xbuf.dtype),
-                              preferred_element_type=jnp.float32
-                              ).astype(xbuf.dtype)
-        out = combine(ybuf, info)
+    out, keep = routed_experts(xf, p["routed"], gates, idx, cfg,
+                               backend=backend, phase=phase,
+                               capacity_factor=capacity_factor,
+                               use_kernel=use_kernel)
 
     out = out + _shared_ffn(xf, p["shared"], cfg.activation)
     aux = {"load": expert_load(idx, keep, n_r),
@@ -119,7 +78,9 @@ def cmoe_ffn(x: Array, p: dict, cfg, *, use_kernel: bool = False,
 
 def cmoe_ffn_local(x: Array, p: dict, cfg, mesh, *,
                    capacity_factor: float = 1.25,
-                   use_kernel: bool = False):
+                   use_kernel: bool = False,
+                   backend: str | None = None,
+                   phase: str = "prefill"):
     """Beyond-paper optimization (§Perf): shard_map DATA-LOCAL dispatch.
 
     The naive GSPMD lowering of the token->expert scatter materializes the
@@ -129,21 +90,22 @@ def cmoe_ffn_local(x: Array, p: dict, cfg, mesh, *,
 
       * expert weights are TP-sharded on the EXPERT WIDTH m (N_r is small
         and indivisible, so EP-over-experts cannot use a 16-wide axis);
-      * each device all-gathers its data-shard's sequence slice (SP), does
-        a purely LOCAL capacity dispatch, computes every expert's m-slice,
-        and reduce-scatters the partial outputs back to the SP layout;
+      * each device all-gathers its data-shard's sequence slice (SP), runs
+        a purely LOCAL engine dispatch (grouped for prefill, gather for
+        decode), computes every expert's m-slice, and reduce-scatters the
+        partial outputs back to the SP layout;
       * per-layer collective bytes drop from O(E·C·d) all-reduce to
         1.5x the dense FFN's own TP traffic (gather x + scatter y).
 
     x: (B, S, d). Requires B % dp == 0 (caller falls back otherwise).
     """
+    from repro.compat import shard_map
     from repro.distributed.policy import _dp  # local import, no cycle
     cm = cfg.cmoe
     n_r = cm.num_routed
     dp = _dp(mesh)
     msize = mesh.shape["model"] if "model" in mesh.axis_names else 1
     b, s, d = x.shape
-    glu = cfg.activation in ("swiglu", "geglu")
     seq_sharded = s % msize == 0 and msize > 1 and s > 1
 
     x_spec = P(dp, "model" if seq_sharded else None, None)
@@ -174,32 +136,17 @@ def cmoe_ffn_local(x: Array, p: dict, cfg, mesh, *,
             xg = x_loc
         bl, sl, _ = xg.shape
         xf = xg.reshape(bl * sl, d)
-        t_loc = xf.shape[0]
 
         scores = router_scores(xf, router, cfg.activation)
         gates, idx, probs = cmoe_gate(
             scores, cm.top_k,
             u=p_loc.get("u") if cm.learnable_scaling else None,
             bias=p_loc.get("bias"))
-        capacity = expert_capacity(t_loc, n_r, cm.top_k, capacity_factor)
-        position, keep = assign_positions(idx, n_r, capacity)
-        info = DispatchInfo(idx, position, keep, gates.astype(xf.dtype))
-        xbuf = dispatch(xf, info, n_r, capacity)          # local!
-        if glu:
-            ybuf = expert_ffn(xbuf, routed["wg"], routed["wu"],
-                              routed["wd"], cfg.activation,
-                              use_kernel=use_kernel)
-        else:
-            g = jnp.einsum("ecd,edm->ecm", xbuf,
-                           routed["wi"].astype(xbuf.dtype),
-                           preferred_element_type=jnp.float32)
-            h = jax.nn.gelu(g).astype(xbuf.dtype)
-            ybuf = jnp.einsum("ecm,emd->ecd", h,
-                              routed["wd"].astype(xbuf.dtype),
-                              preferred_element_type=jnp.float32
-                              ).astype(xbuf.dtype)
-        y = combine(ybuf, info)                            # partial (m-slice)
-        y = y + _shared_ffn(xf, shared, cfg.activation)    # partial too
+        y, keep = routed_experts(xf, routed, gates, idx, cfg,
+                                 backend=backend, phase=phase,
+                                 capacity_factor=capacity_factor,
+                                 use_kernel=use_kernel)  # local!
+        y = y + _shared_ffn(xf, shared, cfg.activation)    # partial (m-slice)
         y = y.reshape(bl, sl, d)
         if seq_sharded:
             y = jax.lax.psum_scatter(y, "model", scatter_dimension=1,
@@ -214,10 +161,10 @@ def cmoe_ffn_local(x: Array, p: dict, cfg, mesh, *,
         return y, load, pm
 
     out_specs = (x_spec, P(None), P(None))
-    y, load, pm = jax.shard_map(
+    y, load, pm = shard_map(
         local_ffn, mesh=mesh,
-        in_specs=(x_spec, p_specs), out_specs=out_specs,
-        check_vma=False)(x, {k: p[k] for k in
-                             ("shared", "routed", "router", "u", "bias")
-                             if k in p})
+        in_specs=(x_spec, p_specs), out_specs=out_specs)(
+            x, {k: p[k] for k in
+                ("shared", "routed", "router", "u", "bias")
+                if k in p})
     return y, {"load": load, "router_probs_mean": pm}

@@ -24,6 +24,22 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def on_tpu() -> bool:
+    """Single source of truth for hardware-driven kernel opt-in (inference
+    launchers key ``use_kernel`` off this; autodiff callers must not —
+    ``moe_gmm`` has no VJP)."""
+    return not _interpret()
+
+
+def _shrink_block(block: int, n: int, align: int = 8) -> int:
+    """In interpret mode the MXU tiling constraint is moot — shrink the
+    block to the (align-rounded) extent so decode-shaped capacity buffers
+    (C = 8) aren't padded 16x to a 128 tile."""
+    if not _interpret():
+        return block
+    return min(block, max(align, ((n + align - 1) // align) * align))
+
+
 def _pad_to(x: Array, axis: int, mult: int) -> tuple[Array, int]:
     n = x.shape[axis]
     pad = (-n) % mult
@@ -57,6 +73,7 @@ def swiglu_ffn(x: Array, wg: Array, wu: Array, wd: Array, *,
 def moe_gmm(xbuf: Array, wg: Array, wu: Array, wd: Array, *,
             activation: str = "swiglu", block_c: int = 128,
             block_m: int = 128) -> Array:
+    block_c = _shrink_block(block_c, xbuf.shape[1])
     xb, c0 = _pad_to(xbuf, 1, block_c)
     wg_p, m0 = _pad_to(wg, 2, block_m)
     wu_p, _ = _pad_to(wu, 2, block_m)

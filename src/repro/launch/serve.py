@@ -17,6 +17,7 @@ import numpy as np
 from repro.config import CMoEConfig, override
 from repro.configs import get_config, get_smoke_config
 from repro.core.convert import convert_dense_model
+from repro.core.experts import BACKENDS
 from repro.data import make_calibration_batch
 from repro.models import build_model
 
@@ -41,11 +42,21 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--backend", default=None,
+                    choices=list(BACKENDS) + ["auto", "all"],
+                    help="routed-expert engine backend (default: "
+                         "phase-driven auto — grouped prefill, gather "
+                         "decode); 'all' benchmarks decode tok/s per "
+                         "backend")
     args = ap.parse_args(argv)
 
+    backend = None if args.backend in (None, "auto", "all") else args.backend
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     cfg = override(cfg, dtype="float32") if args.smoke else cfg
-    model = build_model(cfg)
+    # inference-only: safe to opt into the Pallas kernels on TPU (they
+    # have no VJP, so training paths must leave use_kernel off)
+    from repro.kernels import ops as kops
+    model = build_model(cfg, use_kernel=kops.on_tpu(), backend=backend)
     params = model.init(jax.random.PRNGKey(args.seed))
 
     if args.cmoe:
@@ -75,27 +86,58 @@ def main(argv=None):
     logits, cache = prefill(params, batch)
     logits.block_until_ready()
     t_prefill = time.perf_counter() - t0
+    logits_p, cache0 = logits, cache   # pristine post-prefill state
 
-    tokens = [jnp.argmax(logits, -1)[:, None]]
-    t0 = time.perf_counter()
+    def run_decode(dec, first, cache, steps, pick):
+        """Warm up (compile) then run `steps` timed decode steps; returns
+        (generated tokens incl. `first`, seconds). The warm-up replays the
+        first step — an idempotent cache write — so every reported tok/s
+        is steady state."""
+        wl, _ = dec(params, first, cache, jnp.int32(args.prompt_len))
+        jax.block_until_ready(wl)
+        toks = [first]
+        t0 = time.perf_counter()
+        for i in range(steps):
+            pos = jnp.int32(args.prompt_len + i)
+            lg, cache = dec(params, toks[-1], cache, pos)
+            toks.append(pick(lg)[:, None])
+        jax.block_until_ready(toks[-1])
+        return toks, time.perf_counter() - t0
+
+    steps = args.gen - 1    # prefill's argmax supplies the first token
     key = jax.random.PRNGKey(args.seed)
-    for i in range(args.gen - 1):
-        pos = jnp.int32(args.prompt_len + i)
-        logits, cache = decode(params, tokens[-1], cache, pos)
+
+    def pick_sample(lg):
+        nonlocal key
         if args.temperature > 0:
             key, sub = jax.random.split(key)
-            nxt = jax.random.categorical(sub, logits / args.temperature, -1)
-        else:
-            nxt = jnp.argmax(logits, -1)
-        tokens.append(nxt[:, None])
-    jax.block_until_ready(tokens[-1])
-    t_decode = time.perf_counter() - t0
+            return jax.random.categorical(sub, lg / args.temperature, -1)
+        return jnp.argmax(lg, -1)
+
+    first = jnp.argmax(logits_p, -1)[:, None]
+    tokens, t_decode = run_decode(decode, first, cache, steps, pick_sample)
     out = jnp.concatenate(tokens, axis=1)
-    tput = args.batch * (args.gen - 1) / max(t_decode, 1e-9)
+    tput = args.batch * steps / max(t_decode, 1e-9)
     print(f"prefill: {t_prefill*1000:.1f} ms for "
           f"{args.batch}x{args.prompt_len} tokens")
-    print(f"decode: {tput:.1f} tok/s ({t_decode*1000:.1f} ms total)")
+    tag = model.backend or "auto"
+    print(f"decode[{tag}]: {tput:.1f} tok/s ({t_decode*1000:.1f} ms total)")
     print("sample:", np.asarray(out[0])[:16].tolist())
+
+    if args.backend == "all":
+        # decode tok/s per engine backend, same cache/prompt, steady state
+        for be in BACKENDS:
+            if be == "grouped_pallas" and \
+                    model.cfg.activation not in ("swiglu", "geglu"):
+                print(f"decode[{be}]: skipped (moe_gmm kernel is glu-only)")
+                continue
+            m_be = build_model(model.cfg, use_kernel=model.use_kernel,
+                               backend=be)
+            dec = jax.jit(m_be.decode_step)
+            _, dt = run_decode(dec, first, cache0, steps,
+                               lambda lg: jnp.argmax(lg, -1))
+            tput = args.batch * steps / max(dt, 1e-9)
+            print(f"decode[{be}]: {tput:.1f} tok/s ({dt*1000:.1f} ms total)")
     return 0
 
 

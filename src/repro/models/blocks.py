@@ -31,6 +31,8 @@ class BlockCtx(NamedTuple):
     use_kernel: bool
     cross_kv: Any = None             # whisper decoder cross K/V slice
     capture: bool = False            # add pre-FFN activations to aux
+    phase: str = "prefill"           # "prefill" | "decode" — expert engine
+    backend: Optional[str] = None    # routed-expert backend override
 
 
 def _lecun(key, shape, dtype, fan_in=None):
@@ -101,9 +103,11 @@ def _apply_ffn(x: Array, p: dict, cfg, ctx: BlockCtx):
         if mesh is not None:
             return cmoe_ffn_local(x, p["cmoe"], cfg, mesh,
                                   capacity_factor=cap,
-                                  use_kernel=ctx.use_kernel)
+                                  use_kernel=ctx.use_kernel,
+                                  backend=ctx.backend, phase=ctx.phase)
         return cmoe_ffn(x, p["cmoe"], cfg, capacity_factor=cap,
-                        use_kernel=ctx.use_kernel)
+                        use_kernel=ctx.use_kernel,
+                        backend=ctx.backend, phase=ctx.phase)
     if ctx.use_kernel and cfg.activation in ("swiglu", "geglu"):
         from repro.kernels import ops as kops
         y = kops.swiglu_ffn(x, p["ffn"]["wg"], p["ffn"]["wu"],
@@ -183,7 +187,8 @@ def _apply_moe(ffn_in: Array, p: dict, cfg, ctx: BlockCtx):
         msize = mesh.shape["model"]
         if cfg.moe.num_experts % msize == 0 and s % msize == 0 and s > 1:
             y, aux = moe_ffn_local(ffn_in, p["moe"], cfg, mesh,
-                                   use_kernel=ctx.use_kernel)
+                                   use_kernel=ctx.use_kernel,
+                                   backend=ctx.backend, phase=ctx.phase)
             if cfg.moe.num_shared > 0 and "shared_wg" in p["moe"]:
                 g = matmul(ffn_in, p["moe"]["shared_wg"])
                 u = matmul(ffn_in, p["moe"]["shared_wu"])
@@ -193,7 +198,8 @@ def _apply_moe(ffn_in: Array, p: dict, cfg, ctx: BlockCtx):
                      u.astype(jnp.float32)).astype(ffn_in.dtype)
                 y = y + matmul(h, p["moe"]["shared_wd"])
             return y, aux
-    return moe_ffn(ffn_in, p["moe"], cfg, use_kernel=ctx.use_kernel)
+    return moe_ffn(ffn_in, p["moe"], cfg, use_kernel=ctx.use_kernel,
+                   backend=ctx.backend, phase=ctx.phase)
 
 
 
@@ -215,7 +221,8 @@ def moe_block(x: Array, p: dict, cfg, ctx: BlockCtx):
     if cfg.cmoe is not None and "cmoe" in p:
         from repro.core.hierarchical import hierarchical_moe_ffn
         y, aux = hierarchical_moe_ffn(ffn_in, p, cfg,
-                                      use_kernel=ctx.use_kernel)
+                                      use_kernel=ctx.use_kernel,
+                                      backend=ctx.backend, phase=ctx.phase)
     else:
         y, aux = _apply_moe(ffn_in, p, cfg, ctx)
     if ctx.capture:
@@ -242,7 +249,8 @@ def mla_moe_block(x: Array, p: dict, cfg, ctx: BlockCtx):
     if cfg.cmoe is not None and "cmoe" in p:
         from repro.core.hierarchical import hierarchical_moe_ffn
         y, aux = hierarchical_moe_ffn(ffn_in, p, cfg,
-                                      use_kernel=ctx.use_kernel)
+                                      use_kernel=ctx.use_kernel,
+                                      backend=ctx.backend, phase=ctx.phase)
     else:
         y, aux = _apply_moe(ffn_in, p, cfg, ctx)
     if ctx.capture:

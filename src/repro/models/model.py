@@ -56,9 +56,13 @@ class Model:
     """Pure-functional model: params/caches are pytrees, methods are
     trace-friendly functions of (params, batch[, cache])."""
 
-    def __init__(self, cfg: ModelConfig, use_kernel: bool = False):
+    def __init__(self, cfg: ModelConfig, use_kernel: bool = False,
+                 backend: Optional[str] = None):
         self.cfg = cfg
         self.use_kernel = use_kernel
+        # routed-expert engine backend override (None = phase-driven auto;
+        # see repro.core.experts.select_backend)
+        self.backend = backend
         self.kind = block_kind(cfg)
 
     # ------------------------------------------------------------- init
@@ -145,7 +149,8 @@ class Model:
     # ------------------------------------------------------------ stack
 
     def _stack(self, params, x: Array, *, caches=None, cache_pos=None,
-               enc_out=None, remat: bool = False, capture: bool = False):
+               enc_out=None, remat: bool = False, capture: bool = False,
+               phase: str = "prefill"):
         """Run the layer stack. Returns (x, new_caches, aux)."""
         cfg = self.cfg
         seq = x.shape[1]
@@ -156,7 +161,8 @@ class Model:
         windows = layer_windows(cfg)
         base = BlockCtx(positions=positions, cache=None, cache_pos=cache_pos,
                         window=0, causal=True, use_rope=True,
-                        use_kernel=self.use_kernel, capture=capture)
+                        use_kernel=self.use_kernel, capture=capture,
+                        phase=phase, backend=self.backend)
         _, block_fn = B.BLOCKS[self.kind]
         moe_every = cfg.moe.moe_every if cfg.moe is not None else 1
 
@@ -407,7 +413,7 @@ class Model:
             new_cache = {"self": ncaches, "cross": cache["cross"]}
         else:
             x, ncaches, _ = self._stack(params, x, caches=caches,
-                                        cache_pos=pos)
+                                        cache_pos=pos, phase="decode")
             new_cache = ncaches
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
@@ -418,7 +424,8 @@ class Model:
         cfg = self.cfg
         base = BlockCtx(positions=pos + jnp.arange(1), cache=None,
                         cache_pos=pos, window=0, causal=True, use_rope=True,
-                        use_kernel=self.use_kernel)
+                        use_kernel=self.use_kernel, phase="decode",
+                        backend=self.backend)
 
         def body(x, inp):
             p, cache_sl, ck, cv = inp
@@ -504,8 +511,9 @@ def chunked_ce(x: Array, head: Array, tied: bool, targets: Array,
     return tot / jnp.maximum(cnt, 1.0)
 
 
-def build_model(cfg: ModelConfig, use_kernel: bool = False) -> Model:
-    return Model(cfg, use_kernel=use_kernel)
+def build_model(cfg: ModelConfig, use_kernel: bool = False,
+                backend: Optional[str] = None) -> Model:
+    return Model(cfg, use_kernel=use_kernel, backend=backend)
 
 
 def count_params(cfg: ModelConfig) -> int:

@@ -1,125 +1,51 @@
-"""Mixture-of-experts machinery: capacity-based grouped dispatch (GShard
-style, sort-free) + pretrained-MoE FFN blocks (llama4 / deepseek-v2).
+"""Pretrained-MoE FFN blocks (llama4 / deepseek-v2) on top of the unified
+routed-expert engine (`repro.core.experts`).
 
-The dispatch path is shared with the CMoE converted FFN (repro/core).
-Design notes (TPU):
-  * expert binning uses one-hot cumsum position assignment — no argsort, so
-    GSPMD can shard the token dim without a global sort;
-  * expert compute is a batched (E, C, d) x (E, d, m) GEMM — MXU-shaped,
-    with a Pallas kernel (`repro.kernels.moe_gmm`) as the accelerated path;
-  * capacity C is static: ceil(factor * T * k / E) rounded to 128.
+This module owns the pretrained-MoE *routing* (top-k softmax router,
+balance bias, shared experts) and the two-stage all-to-all EP layout;
+expert dispatch and compute live in the engine. The capacity machinery
+(`expert_capacity` / `assign_positions` / `dispatch` / `combine` /
+`DispatchInfo`) is re-exported from the engine for backward compatibility.
 """
 from __future__ import annotations
-
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+# Re-exports: the dispatch machinery moved to the engine; downstream code
+# (and tests) keep importing it from here.
+from repro.core.experts import (DispatchInfo, assign_positions,  # noqa: F401
+                                combine, dispatch, expert_capacity,
+                                grouped_expert_ffn, round_up, routed_experts)
 from repro.models.layers import matmul, swish
 
 Array = jax.Array
 
 
-def round_up(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m
-
-
-def expert_capacity(num_tokens: int, num_experts: int, top_k: int,
-                    factor: float) -> int:
-    cap = int(factor * num_tokens * top_k / num_experts) + 1
-    # upper clamp: one token can occupy a bin at most top_k times (relevant
-    # for shard-destination binning where k assignments share a bin)
-    return max(8, round_up(min(cap, num_tokens * top_k), 8))
-
-
-class DispatchInfo(NamedTuple):
-    expert_idx: Array    # (T, k) int32
-    position: Array      # (T, k) int32 position within expert buffer
-    keep: Array          # (T, k) bool — False if dropped (over capacity)
-    gates: Array         # (T, k) float combine weights
-
-
-def assign_positions(expert_idx: Array, num_experts: int,
-                     capacity: int, chunk: int = 4096) -> tuple[Array, Array]:
-    """Per-assignment position within its expert's buffer (priority: earlier
-    k-choice first, then token order).
-
-    Memory-safe: the one-hot cumsum is CHUNKED over tokens with running
-    per-expert counts carried through a scan — the (T, E) one-hot matrix
-    (0.5 TB for 1M tokens x 128 experts) never materializes.
-
-    expert_idx: (T, k) int32. Returns (position (T,k), keep (T,k))."""
-    t, k = expert_idx.shape
-    chunk = min(chunk, t)
-    pad = (-t) % chunk
-    # pad with an OUT-OF-RANGE id: its one-hot row is all-zero, so padding
-    # never consumes real expert slots (caught by hypothesis: in-range
-    # padding leaked phantom counts into later k-choices)
-    idx = jnp.pad(expert_idx, ((0, pad), (0, 0)),
-                  constant_values=num_experts) if pad else expert_idx
-    nc = (t + pad) // chunk
-    counts = jnp.zeros((num_experts,), jnp.int32)
-    positions = []
-    for j in range(k):
-        col = idx[:, j].reshape(nc, chunk)
-
-        def chunk_step(counts, ids):
-            onehot = jax.nn.one_hot(ids, num_experts, dtype=jnp.int32)
-            within = jnp.cumsum(onehot, axis=0) - onehot      # 0-based
-            pos = jnp.take_along_axis(within + counts[None, :],
-                                      ids[:, None], axis=1)[:, 0]
-            return counts + jnp.sum(onehot, axis=0), pos
-
-        counts, pos_j = jax.lax.scan(chunk_step, counts, col)
-        positions.append(pos_j.reshape(-1)[:t])
-    position = jnp.stack(positions, axis=1)
-    keep = position < capacity
-    return position, keep
-
-
-def dispatch(x: Array, info: DispatchInfo, num_experts: int,
-             capacity: int) -> Array:
-    """x: (T, d) -> expert buffers (E, C, d)."""
-    t, d = x.shape
-    k = info.expert_idx.shape[1]
-    flat_e = info.expert_idx.reshape(-1)
-    flat_p = jnp.where(info.keep.reshape(-1), info.position.reshape(-1), 0)
-    contrib = jnp.repeat(x, k, axis=0) * info.keep.reshape(-1, 1).astype(
-        x.dtype)
-    buf = jnp.zeros((num_experts, capacity, d), x.dtype)
-    return buf.at[flat_e, flat_p].add(contrib, mode="drop")
-
-
-def combine(ybuf: Array, info: DispatchInfo) -> Array:
-    """ybuf: (E, C, d) -> (T, d) weighted by gates."""
-    t, k = info.expert_idx.shape
-    flat_e = info.expert_idx.reshape(-1)
-    flat_p = jnp.where(info.keep.reshape(-1), info.position.reshape(-1), 0)
-    rows = ybuf[flat_e, flat_p]                         # (T*k, d)
-    w = (info.gates.reshape(-1, 1).astype(ybuf.dtype) *
-         info.keep.reshape(-1, 1).astype(ybuf.dtype))
-    rows = rows * w
-    return rows.reshape(t, k, -1).sum(axis=1)
-
-
 def expert_ffn(xbuf: Array, wg: Array, wu: Array, wd: Array,
                activation: str, use_kernel: bool = False) -> Array:
-    """Batched expert FFN: (E, C, d) with per-expert weights (E, d, m)."""
-    if use_kernel:
-        from repro.kernels import ops as kops
-        return kops.moe_gmm(xbuf, wg, wu, wd, activation=activation)
-    g = jnp.einsum("ecd,edm->ecm", xbuf, wg.astype(xbuf.dtype),
-                   preferred_element_type=jnp.float32)
-    u = jnp.einsum("ecd,edm->ecm", xbuf, wu.astype(xbuf.dtype),
-                   preferred_element_type=jnp.float32)
-    act = swish if activation == "swiglu" else jax.nn.gelu
-    h = (act(g) * u).astype(xbuf.dtype)
-    return jnp.einsum("ecm,emd->ecd", h, wd.astype(xbuf.dtype),
-                      preferred_element_type=jnp.float32).astype(xbuf.dtype)
+    """Batched expert FFN: (E, C, d) with per-expert weights (E, d, m).
+    Thin glu-schema wrapper over the engine's `grouped_expert_ffn`."""
+    return grouped_expert_ffn(xbuf, {"wg": wg, "wu": wu, "wd": wd},
+                              activation, use_kernel=use_kernel)
 
 
-def moe_ffn(x: Array, p: dict, cfg, *, use_kernel: bool = False):
+def moe_gate(xf: Array, p: dict, moe):
+    """Top-k softmax router with optional aux-loss-free balance bias.
+    Returns (gates (T,k), idx (T,k), probs (T,E))."""
+    scores = matmul(xf, p["router"]).astype(jnp.float32)     # (T, E)
+    probs = jax.nn.softmax(scores, axis=-1)
+    sel = probs
+    if moe.balance_bias and "balance_bias" in p:
+        sel = probs + p["balance_bias"][None, :]
+    gates, idx = jax.lax.top_k(sel, moe.top_k)
+    gates = jnp.take_along_axis(probs, idx, axis=1)          # true probs
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, idx, probs
+
+
+def moe_ffn(x: Array, p: dict, cfg, *, use_kernel: bool = False,
+            backend: str | None = None, phase: str = "prefill"):
     """Pretrained-MoE FFN block (top-k softmax router + shared experts).
 
     x: (B, S, d). Returns (out, aux) with aux = dict(load=per-expert counts
@@ -130,24 +56,11 @@ def moe_ffn(x: Array, p: dict, cfg, *, use_kernel: bool = False):
     xf = x.reshape(b * s, d)
     t = b * s
 
-    scores = matmul(xf, p["router"]).astype(jnp.float32)     # (T, E)
-    probs = jax.nn.softmax(scores, axis=-1)
-    sel = probs
-    if moe.balance_bias and "balance_bias" in p:
-        sel = probs + p["balance_bias"][None, :]
-    gates, idx = jax.lax.top_k(sel, moe.top_k)
-    gates = jnp.take_along_axis(probs, idx, axis=1)          # true probs
-    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
-
-    capacity = expert_capacity(t, moe.num_experts, moe.top_k,
-                               moe.capacity_factor)
-    position, keep = assign_positions(idx, moe.num_experts, capacity)
-    info = DispatchInfo(idx, position, keep, gates.astype(x.dtype))
-
-    xbuf = dispatch(xf, info, moe.num_experts, capacity)
-    ybuf = expert_ffn(xbuf, p["wg"], p["wu"], p["wd"], cfg.activation,
-                      use_kernel=use_kernel)
-    out = combine(ybuf, info)
+    gates, idx, probs = moe_gate(xf, p, moe)
+    out, keep = routed_experts(
+        xf, {"wg": p["wg"], "wu": p["wu"], "wd": p["wd"]}, gates, idx, cfg,
+        backend=backend, phase=phase,
+        capacity_factor=moe.capacity_factor, use_kernel=use_kernel)
 
     if moe.num_shared > 0:
         g = matmul(xf, p["shared_wg"])
@@ -164,7 +77,8 @@ def moe_ffn(x: Array, p: dict, cfg, *, use_kernel: bool = False):
 
 
 def moe_ffn_local(x: Array, p: dict, cfg, mesh, *,
-                  use_kernel: bool = False):
+                  use_kernel: bool = False, backend: str | None = None,
+                  phase: str = "prefill"):
     """Beyond-paper optimization (§Perf): two-stage shard_map EP dispatch
     for the ROUTED experts (shared experts stay on the dense GSPMD path).
 
@@ -176,14 +90,15 @@ def moe_ffn_local(x: Array, p: dict, cfg, mesh, *,
         routes ONLY its own sequence slice;
       * stage 1: bin by destination model-shard (e_loc = E/msize experts
         per shard) and move via ALL-TO-ALL (+int payload: local expert id);
-      * stage 2: local capacity dispatch to the shard's experts, batched
-        expert GEMM, all-to-all back, gate-weighted combine.
+      * stage 2: local capacity dispatch to the shard's experts via the
+        engine's grouped backend, all-to-all back, gate-weighted combine.
 
     Per-layer collective bytes: 2 x C_send x d all-to-all instead of the
     (E, C_global, d) all-reduce. Requires B %% dp == 0 and S %% msize == 0.
     x: (B, S, d). Returns (routed_out (B, S, d), aux).
     """
     from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
     from repro.distributed.policy import _dp
     moe = cfg.moe
     e, k = moe.num_experts, moe.top_k
@@ -211,13 +126,8 @@ def moe_ffn_local(x: Array, p: dict, cfg, mesh, *,
         xf = x_loc.reshape(bl * sl, d)
         t_loc = xf.shape[0]
 
-        scores = matmul(xf, router).astype(jnp.float32)
-        probs = jax.nn.softmax(scores, axis=-1)
-        sel = probs + pl["balance_bias"][None, :] if moe.balance_bias \
-            else probs
-        gates, idx = jax.lax.top_k(sel, k)
-        gates = jnp.take_along_axis(probs, idx, axis=1)
-        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+        gates, idx, probs = moe_gate(
+            xf, {"router": router, "balance_bias": pl["balance_bias"]}, moe)
 
         # ---- stage 1: all-to-all to expert-owning shards ----
         dest = idx // e_loc                                # (T_loc, k)
@@ -239,16 +149,17 @@ def moe_ffn_local(x: Array, p: dict, cfg, mesh, *,
         er = pay_r.reshape(-1) - 1                         # -1 = empty slot
         occ = er >= 0
         er = jnp.maximum(er, 0)
-        cap2 = expert_capacity(msize * cap_s, e_loc, 1,
-                               moe.capacity_factor)
-        pos2, keep2 = assign_positions(er[:, None], e_loc, cap2)
-        keep2 = keep2 & occ[:, None]
-        info2 = DispatchInfo(er[:, None], pos2, keep2,
-                             jnp.ones((msize * cap_s, 1), xr.dtype))
-        xbuf = dispatch(xr, info2, e_loc, cap2)            # (E_loc, C2, d)
-        ybuf = expert_ffn(xbuf, wg, wu, wd, cfg.activation,
-                          use_kernel=use_kernel)
-        yr = combine(ybuf, info2).reshape(msize, cap_s, d)
+        # decode must stay drop-free (gather); prefill keeps the grouped
+        # local dispatch the EP layout was built around
+        yr, _ = routed_experts(
+            xr, {"wg": wg, "wu": wu, "wd": wd},
+            jnp.ones((msize * cap_s, 1), xr.dtype), er[:, None], cfg,
+            backend=backend or
+            ("gather" if phase == "decode" else
+             "grouped_pallas" if use_kernel else "grouped_xla"),
+            capacity_factor=moe.capacity_factor, use_kernel=use_kernel,
+            valid=occ[:, None])
+        yr = yr.reshape(msize, cap_s, d)
         yback = jax.lax.all_to_all(yr, "model", 0, 0)      # home shards
         out = combine(yback,
                       DispatchInfo(dest, pos_s, keep_s,
@@ -264,9 +175,9 @@ def moe_ffn_local(x: Array, p: dict, cfg, mesh, *,
         pm = jax.lax.pmean(probs.mean(0), "data")
         return out.reshape(bl, sl, d), load, pm
 
-    y, load, pm = jax.shard_map(
+    y, load, pm = shard_map(
         local_moe, mesh=mesh, in_specs=(x_spec, p_specs),
-        out_specs=(x_spec, P(None), P(None)), check_vma=False)(x, p_in)
+        out_specs=(x_spec, P(None), P(None)))(x, p_in)
     return y, {"load": load, "router_probs_mean": pm}
 
 

@@ -1,0 +1,188 @@
+"""Unified routed-expert engine: backend parity + policy tests.
+
+The engine contract: with capacity high enough that the grouped backends
+drop nothing, every backend computes the same function. ``exact`` is the
+oracle; ``gather`` and the grouped paths must agree with it to fp
+tolerance for both the glu (swiglu) and non-glu (gelu) weight schemas.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.experts import (BACKENDS, GATHER_TOKEN_THRESHOLD,
+                                expert_capacity, routed_experts,
+                                select_backend)
+
+
+class _Cfg:
+    def __init__(self, activation):
+        self.activation = activation
+
+
+def _setup(activation, t=37, d=16, m=24, e=8, k=3, seed=0,
+           dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    glu = activation in ("swiglu", "geglu")
+    if glu:
+        w = {"wg": jax.random.normal(ks[0], (e, d, m), dtype),
+             "wu": jax.random.normal(ks[1], (e, d, m), dtype),
+             "wd": jax.random.normal(ks[2], (e, m, d), dtype)}
+    else:
+        w = {"wi": jax.random.normal(ks[0], (e, d, m), dtype),
+             "wd": jax.random.normal(ks[2], (e, m, d), dtype)}
+    xf = jax.random.normal(ks[3], (t, d), dtype)
+    idx = jax.random.randint(ks[4], (t, k), 0, e)
+    gates = jax.nn.softmax(jax.random.normal(ks[5], (t, k)))
+    return xf, w, gates, idx
+
+
+@pytest.mark.parametrize("activation", ["swiglu", "gelu"])
+@pytest.mark.parametrize("backend", ["gather", "grouped_xla",
+                                     "grouped_pallas"])
+def test_backend_matches_exact_oracle(activation, backend):
+    cfg = _Cfg(activation)
+    xf, w, gates, idx = _setup(activation)
+    if backend == "grouped_pallas" and "wg" not in w:
+        # the moe_gmm kernel is glu-only; explicit requests must fail
+        # loudly rather than silently run the XLA path mislabeled
+        with pytest.raises(ValueError, match="glu"):
+            routed_experts(xf, w, gates, idx, cfg, backend=backend,
+                           capacity_factor=8.0)
+        return
+    # capacity_factor 8 -> no grouped drops; all backends compute the
+    # same function
+    ref, keep = routed_experts(xf, w, gates, idx, cfg, backend="exact",
+                               capacity_factor=8.0)
+    assert bool(keep.all())
+    out, keep = routed_experts(xf, w, gates, idx, cfg, backend=backend,
+                               capacity_factor=8.0)
+    assert bool(keep.all()), f"{backend} dropped tokens at high capacity"
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
+                               atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("activation", ["swiglu", "gelu"])
+def test_gather_decode_shape_parity(activation):
+    """Decode-shaped call: T = batch, the gather backend's home turf."""
+    cfg = _Cfg(activation)
+    for t in (1, 4):
+        xf, w, gates, idx = _setup(activation, t=t, seed=t)
+        ref, _ = routed_experts(xf, w, gates, idx, cfg, backend="exact")
+        out, keep = routed_experts(xf, w, gates, idx, cfg,
+                                   backend="gather")
+        assert bool(keep.all())
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
+                                   atol=2e-4, rtol=2e-4)
+
+
+def test_valid_mask_zeroes_assignments():
+    """`valid=False` rows contribute nothing, on every backend."""
+    cfg = _Cfg("swiglu")
+    xf, w, gates, idx = _setup("swiglu", t=20)
+    valid = jnp.arange(20)[:, None] % 2 == 0           # (T, 1) broadcast
+    outs = {}
+    for be in ("exact", "gather", "grouped_xla"):
+        out, _ = routed_experts(xf, w, gates, idx, cfg, backend=be,
+                                capacity_factor=8.0, valid=valid)
+        outs[be] = np.asarray(out)
+        assert np.allclose(outs[be][1::2], 0.0), be    # masked rows -> 0
+    np.testing.assert_allclose(outs["exact"], outs["gather"],
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(outs["exact"], outs["grouped_xla"],
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_grouped_drops_marked_in_keep():
+    """At capacity_factor -> 0 the grouped path drops; keep reports it and
+    dropped assignments contribute nothing (they fall out of the combine)."""
+    cfg = _Cfg("swiglu")
+    # all tokens pick expert 0 -> guaranteed overflow past capacity
+    xf, w, gates, _ = _setup("swiglu", t=64, k=1)
+    idx = jnp.zeros((64, 1), jnp.int32)
+    out, keep = routed_experts(xf, w, gates, idx, cfg,
+                               backend="grouped_xla", capacity_factor=0.01)
+    cap = expert_capacity(64, 8, 1, 0.01)
+    assert int(keep.sum()) == cap < 64
+    # kept prefix matches the no-drop oracle, dropped suffix is zero
+    ref, _ = routed_experts(xf, w, gates, idx, cfg, backend="exact")
+    np.testing.assert_allclose(np.asarray(out[:cap]), np.asarray(ref[:cap]),
+                               atol=2e-4, rtol=2e-4)
+    assert np.allclose(np.asarray(out[cap:]), 0.0)
+
+
+def test_select_backend_policy():
+    assert select_backend(1, None, "decode") == "gather"
+    assert select_backend(4096, None, "decode") == "gather"
+    assert select_backend(GATHER_TOKEN_THRESHOLD, None, "prefill") == \
+        "gather"
+    big = GATHER_TOKEN_THRESHOLD + 1
+    assert select_backend(big, None, "prefill", use_kernel=True) == \
+        "grouped_pallas"
+    assert select_backend(4096, None, "prefill") in ("grouped_xla",
+                                                     "grouped_pallas")
+
+
+def test_unknown_backend_raises():
+    cfg = _Cfg("swiglu")
+    xf, w, gates, idx = _setup("swiglu", t=4)
+    with pytest.raises(ValueError, match="unknown backend"):
+        routed_experts(xf, w, gates, idx, cfg, backend="nope")
+    assert set(BACKENDS) == {"exact", "grouped_xla", "grouped_pallas",
+                             "gather"}
+
+
+def test_decode_step_uses_gather_end_to_end():
+    """A converted model's decode step (phase='decode' -> gather backend)
+    agrees with the teacher-forced forward (grouped prefill backend)."""
+    from conftest import make_batch
+    from repro.config import CMoEConfig, override
+    from repro.configs import get_smoke_config
+    from repro.core.convert import convert_dense_model
+    from repro.models import build_model
+    cfg = override(get_smoke_config("qwen1.5-0.5b"), dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    calib = make_batch(cfg, 2, 32, seed=3)
+    cm = CMoEConfig(num_experts=8, num_shared=3, top_k=3, k_activation=4,
+                    assignment="jv")
+    m2, p2, _ = convert_dense_model(model, params, calib, cm)
+    batch = make_batch(cfg, 2, 17, seed=9)
+    full = m2.forward(p2, {"tokens": batch["tokens"]})
+    _, cache = m2.prefill(p2, {"tokens": batch["tokens"][:, :16]},
+                          max_len=18)
+    logits, _ = m2.decode_step(p2, batch["tokens"][:, 16:17], cache,
+                               jnp.int32(16))
+    np.testing.assert_allclose(np.asarray(full[:, 16]), np.asarray(logits),
+                               atol=3e-4, rtol=3e-4)
+
+
+def test_hierarchical_decode_drop_free_parity():
+    """Hierarchical (MoE->CMoE) decode must be drop-free: with prefill
+    drops ruled out (high capacity factor), decode_step (phase='decode' ->
+    capacity >= t outer dispatch + gather sub-level) must agree with the
+    teacher-forced forward to fp tolerance."""
+    import dataclasses
+    from repro.config import CMoEConfig, override
+    from repro.configs import get_smoke_config
+    from repro.core.hierarchical import convert_moe_model
+    from repro.data import make_calibration_batch
+    from repro.models import build_model
+    cfg = override(get_smoke_config("deepseek-v2-236b"), dtype="float32")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cm = CMoEConfig(num_experts=4, num_shared=1, top_k=2, k_activation=2)
+    calib = {"tokens": jnp.asarray(make_calibration_batch(
+        cfg.vocab_size, 2, 32, seed=0)["tokens"])}
+    m2, p2, _ = convert_moe_model(model, params, calib, cm)
+
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 17)).astype(
+        np.int32))
+    full = m2.forward(p2, {"tokens": toks})
+    _, cache = m2.prefill(p2, {"tokens": toks[:, :16]}, max_len=18)
+    logits, _ = m2.decode_step(p2, toks[:, 16:17], cache, jnp.int32(16))
+    np.testing.assert_allclose(np.asarray(full[:, 16]), np.asarray(logits),
+                               atol=3e-4, rtol=3e-4)

@@ -31,7 +31,12 @@ def test_flash_decode_kernel(bh, t, d, pos, dtype):
 def test_mla_absorbed_decode_matches_forward():
     """DeepSeek-v2 decode uses the ABSORBED latent form; it must agree with
     the expanded teacher-forced forward."""
+    import dataclasses
     cfg = override(get_smoke_config("deepseek-v2-236b"), dtype="float32")
+    # high capacity isolates the MLA property under test: the t=34 forward
+    # must not drop MoE assignments the drop-free decode path computes
+    cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, capacity_factor=8.0))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     batch = make_batch(cfg, 2, 17, seed=3)
