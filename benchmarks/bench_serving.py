@@ -1,0 +1,117 @@
+"""Serving goodput: static batching vs continuous batching.
+
+Runs the SAME mixed-length request set through the serving engine twice —
+policy="static" (admit a full batch, drain it to the slowest request,
+repeat: the classic fixed-batch loop) and policy="continuous" (a freed
+slot is re-prefilled on the next engine step while its neighbors keep
+decoding). Both policies execute identical compiled step functions, so
+the measured gap is pure scheduling: static wastes decode lanes on
+finished requests, continuous refills them.
+
+    PYTHONPATH=src python benchmarks/bench_serving.py
+    PYTHONPATH=src python benchmarks/bench_serving.py --slots 4 \
+        --requests 12 --no-gate
+
+Arrivals are all-at-0 for both sides (static batching cannot admit
+mid-flight, so staggered arrivals would only penalize it further);
+the goodput gap comes from the generation-length spread.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+
+
+def run_policy(model, params, policy, reqs, args):
+    from repro.serving import ServingEngine
+    engine = ServingEngine(model, params, max_slots=args.slots,
+                           max_len=args.prompt_len + args.gen,
+                           policy=policy,
+                           prefill_bucket=args.prompt_len)
+    engine.run(reqs)                       # warm-up: compiles every shape
+    # best-of-samples: the standard noise-robust estimator on a shared box
+    best = None
+    for _ in range(args.samples):
+        rep = engine.run(reqs)
+        if best is None or rep.wall_s < best.wall_s:
+            best = rep
+    return best
+
+
+def main(argv=None):
+    from repro.config import CMoEConfig, override
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+    from repro.serving import make_requests
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=48,
+                    help="max generation length; per-request lengths are "
+                         "uniform over [gen/4, gen] — the spread static "
+                         "batching drains at the slowest of")
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4,
+                    help="bench model size: big enough that per-step "
+                         "compute, not dispatch overhead, dominates — the "
+                         "policies run IDENTICAL step shapes, so the "
+                         "measured gap is step count (scheduling)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--samples", type=int, default=5,
+                    help="timed runs per policy; best is reported")
+    ap.add_argument("--cmoe", action="store_true",
+                    help="use a random-init CMoE-layout model so the "
+                         "per-micro-batch backend split is exercised")
+    ap.add_argument("--no-gate", action="store_true",
+                    help="report only; don't exit nonzero when continuous "
+                         "fails to beat static (timings are noisy on "
+                         "shared runners)")
+    args = ap.parse_args(argv)
+
+    cfg = override(get_smoke_config(args.arch), dtype="float32",
+                   d_model=args.d_model, num_layers=args.layers,
+                   d_ff=args.d_model * 3)
+    if args.cmoe:
+        cfg = override(cfg, cmoe=CMoEConfig(num_experts=8, num_shared=2,
+                                            top_k=2, k_activation=4))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+
+    reqs = make_requests(
+        args.requests, cfg.vocab_size,
+        prompt_range=(min(max(4, args.prompt_len // 2), args.prompt_len),
+                      args.prompt_len),
+        gen_range=(max(1, args.gen // 4), args.gen),
+        rate=0.0, seed=args.seed)          # all due at t=0 (see module doc)
+
+    print(f"# serving goodput — {cfg.name} slots={args.slots} "
+          f"requests={args.requests} prompt<= {args.prompt_len} "
+          f"gen in [{max(1, args.gen // 4)}, {args.gen}]"
+          f"{' cmoe' if args.cmoe else ''}")
+    reports = {}
+    for policy in ("static", "continuous"):
+        reports[policy] = run_policy(model, params, policy, reqs, args)
+        r = reports[policy]
+        print(f"{policy:>11}: {r.goodput:8.1f} tok/s  "
+              f"({r.total_new_tokens} tok / {r.wall_s:.2f}s, "
+              f"{r.steps} steps, slot busy {r.slot_busy_frac * 100:.0f}%, "
+              f"reuse {r.slot_reuse})")
+    assert (reports["static"].total_new_tokens ==
+            reports["continuous"].total_new_tokens), "unequal work"
+
+    speedup = reports["continuous"].goodput / max(
+        reports["static"].goodput, 1e-9)
+    print(f"RESULT: continuous/static goodput = {speedup:.2f}x")
+    if speedup > 1.0:
+        return 0
+    print("RESULT: FAIL — continuous batching did not beat static")
+    return 0 if args.no_gate else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

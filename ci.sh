@@ -14,11 +14,18 @@ python -m pytest -x -q
 if [[ "${1:-}" != "--fast" ]]; then
     echo "== smoke: convert + serve (CMoE S3A3E8) =="
     python -m repro.launch.serve --smoke --cmoe S3A3E8 --gen 4
+    echo "== smoke: continuous-batching serve (staggered arrivals) =="
+    # asserts the phase policy inside serve: prefill micro-batches grouped,
+    # decode micro-batches gather, all slots recycled to completion
+    python -m repro.launch.serve --smoke --continuous --batch 4 \
+        --requests 8 --rate 0.5 --prompt-len 32 --gen 8
     echo "== smoke: decode backend bench (gather vs grouped) =="
     # --no-gate: CI asserts the bench RUNS; the speedup gate is timing-based
     # and too noisy to fail CI on a loaded runner (run without the flag to
     # enforce it)
     python benchmarks/bench_decode_backends.py --iters 5 --batches 1 4 8 \
         --no-gate
+    echo "== smoke: serving goodput bench (static vs continuous) =="
+    python benchmarks/bench_serving.py --requests 8 --no-gate
 fi
 echo "CI OK"

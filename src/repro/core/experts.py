@@ -247,6 +247,13 @@ def _grouped(xf, weights, gates, idx, activation, valid, *,
     k = idx.shape[1]
     n_e = weights["wd"].shape[0]
     capacity = expert_capacity(t, n_e, k, capacity_factor)
+    if valid is not None:
+        # invalid assignments are re-aimed at the out-of-range expert id
+        # BEFORE position assignment (its one-hot row is all-zero), so a
+        # padded token can never occupy a capacity slot a real token
+        # needs — and real tokens' positions are independent of whatever
+        # the padding happens to route to
+        idx = jnp.where(valid, idx, n_e)
     position, keep = assign_positions(idx, n_e, capacity)
     if valid is not None:
         keep = keep & valid
@@ -290,6 +297,48 @@ def select_backend(t: int, cfg, phase: str, *, use_kernel: bool = False,
     if phase == "decode" or t <= threshold:
         return "gather"
     return "grouped_pallas" if use_kernel else "grouped_xla"
+
+
+def microbatch_backend(cfg, num_tokens: int, phase: str, *,
+                       use_kernel: bool = False,
+                       override: Optional[str] = None) -> Optional[str]:
+    """The backend ``routed_experts`` will run for a (phase, num_tokens)
+    micro-batch of this model — the serving engine's reporting seam, so
+    what the step executor logs per micro-batch is the same policy the
+    engine executes (``select_backend`` + the glu-only Pallas fallback).
+
+    Returns None when the model has no routed experts (nothing to select),
+    the explicit override when one is pinned, else the auto choice.
+
+    For a hierarchical model (cfg.moe AND cfg.cmoe set) the engine-visible
+    call is the INNER sub-expert pass: ``hierarchical_moe_ffn`` runs
+    ``routed_experts`` over E*capacity buffer rows against the flattened
+    E*num_routed sub-expert bank, so the report is computed on those
+    extents, not the raw token count. The shard_map-local EP layouts pick
+    per-shard (multi-device serving is a ROADMAP item); this reports the
+    single-device global paths the serving engine runs.
+    """
+    cm = getattr(cfg, "cmoe", None)
+    moe = getattr(cfg, "moe", None)
+    if cm is None and moe is None:
+        return None
+    if override not in (None, "auto"):
+        return override
+    if cm is not None and moe is not None:
+        # mirror hierarchical_moe_ffn's outer capacity + inner bank shape
+        e = moe.num_experts
+        if phase == "decode":
+            capacity = max(8, round_up(num_tokens, 8))
+        else:
+            capacity = expert_capacity(num_tokens, e, moe.top_k,
+                                       moe.capacity_factor)
+        be = select_backend(e * capacity, cfg, phase, use_kernel=use_kernel,
+                            num_experts=e * cm.num_routed, top_k=cm.top_k)
+    else:
+        be = select_backend(num_tokens, cfg, phase, use_kernel=use_kernel)
+    if be == "grouped_pallas" and cfg.activation not in ("swiglu", "geglu"):
+        be = "grouped_xla"           # mirrors the auto fallback below
+    return be
 
 
 def routed_experts(xf: Array, weights: dict, gates: Array, idx: Array,

@@ -103,8 +103,13 @@ def convert_moe_model(model: Model, params: dict, calib_batch: dict,
 
 def hierarchical_moe_ffn(x: Array, p: dict, cfg, *, use_kernel: bool = False,
                          backend: str | None = None,
-                         phase: str = "prefill"):
-    """Two-level MoE forward on a converted block. x: (B, S, d)."""
+                         phase: str = "prefill",
+                         valid: Array | None = None):
+    """Two-level MoE forward on a converted block. x: (B, S, d).
+
+    valid: optional (B*S, 1) bool — False rows (padded serving prompts)
+    are dropped from the outer capacity dispatch, so they cannot displace
+    real tokens or leak into the occupancy/load stats."""
     moe = cfg.moe
     cm = cfg.cmoe
     b, s, d = x.shape
@@ -123,7 +128,15 @@ def hierarchical_moe_ffn(x: Array, p: dict, cfg, *, use_kernel: bool = False,
     else:
         capacity = expert_capacity(t, moe.num_experts, moe.top_k,
                                    moe.capacity_factor)
+    if valid is not None:
+        # re-aim padded tokens at the out-of-range expert id BEFORE
+        # position assignment: they take no capacity slot and real
+        # tokens' positions don't depend on what padding routed to
+        # (scatter drops the id; combine weights are zeroed via keep)
+        idx = jnp.where(valid, idx, moe.num_experts)
     position, keep = assign_positions(idx, moe.num_experts, capacity)
+    if valid is not None:
+        keep = keep & valid
     info = DispatchInfo(idx, position, keep, gates.astype(x.dtype))
     xbuf = dispatch(xf, info, moe.num_experts, capacity)     # (E, C, d)
     occupancy = jnp.zeros((moe.num_experts, capacity), jnp.int32).at[

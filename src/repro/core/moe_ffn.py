@@ -44,8 +44,14 @@ def _shared_ffn(xf: Array, p: dict, activation: str) -> Array:
 
 def cmoe_ffn(x: Array, p: dict, cfg, *, use_kernel: bool = False,
              capacity_factor: float = 1.25,
-             backend: str | None = None, phase: str = "prefill"):
-    """x: (B, S, d) or (T, d). Returns (out, aux{load, router_probs_mean})."""
+             backend: str | None = None, phase: str = "prefill",
+             valid: Array | None = None):
+    """x: (B, S, d) or (T, d). Returns (out, aux{load, router_probs_mean}).
+
+    valid: optional (T, 1) bool — False rows (right-padded serving
+    prompts) contribute nothing: they neither occupy grouped-backend
+    expert capacity nor count toward the load stats.
+    """
     cm = cfg.cmoe
     squeeze = x.ndim == 2
     if squeeze:
@@ -64,7 +70,7 @@ def cmoe_ffn(x: Array, p: dict, cfg, *, use_kernel: bool = False,
     out, keep = routed_experts(xf, p["routed"], gates, idx, cfg,
                                backend=backend, phase=phase,
                                capacity_factor=capacity_factor,
-                               use_kernel=use_kernel)
+                               use_kernel=use_kernel, valid=valid)
 
     out = out + _shared_ffn(xf, p["shared"], cfg.activation)
     aux = {"load": expert_load(idx, keep, n_r),
@@ -80,7 +86,8 @@ def cmoe_ffn_local(x: Array, p: dict, cfg, mesh, *,
                    capacity_factor: float = 1.25,
                    use_kernel: bool = False,
                    backend: str | None = None,
-                   phase: str = "prefill"):
+                   phase: str = "prefill",
+                   valid: Array | None = None):
     """Beyond-paper optimization (§Perf): shard_map DATA-LOCAL dispatch.
 
     The naive GSPMD lowering of the token->expert scatter materializes the
@@ -109,6 +116,9 @@ def cmoe_ffn_local(x: Array, p: dict, cfg, mesh, *,
     seq_sharded = s % msize == 0 and msize > 1 and s > 1
 
     x_spec = P(dp, "model" if seq_sharded else None, None)
+    v_spec = P(dp, "model" if seq_sharded else None)
+    if valid is None:
+        valid = jnp.ones((b, s), bool)
     routed_specs = {k: P(None, "data", "model") if k != "wd"
                     else P(None, "model", "data")
                     for k in p["routed"]}
@@ -118,7 +128,7 @@ def cmoe_ffn_local(x: Array, p: dict, cfg, mesh, *,
     p_specs = {"shared": shared_specs, "routed": routed_specs,
                "router": router_specs, "u": P(None), "bias": P(None)}
 
-    def local_ffn(x_loc, p_loc):
+    def local_ffn(x_loc, p_loc, v_loc):
         # ZeRO-style param regather (FSDP over data)
         routed = {k: jax.lax.all_gather(v, "data", axis=1, tiled=True)
                   if k != "wd" else
@@ -132,10 +142,12 @@ def cmoe_ffn_local(x: Array, p: dict, cfg, mesh, *,
                   for k, v in p_loc["router"].items()}
         if seq_sharded:
             xg = jax.lax.all_gather(x_loc, "model", axis=1, tiled=True)
+            vg = jax.lax.all_gather(v_loc, "model", axis=1, tiled=True)
         else:
-            xg = x_loc
+            xg, vg = x_loc, v_loc
         bl, sl, _ = xg.shape
         xf = xg.reshape(bl * sl, d)
+        vf = vg.reshape(bl * sl, 1)
 
         scores = router_scores(xf, router, cfg.activation)
         gates, idx, probs = cmoe_gate(
@@ -145,7 +157,8 @@ def cmoe_ffn_local(x: Array, p: dict, cfg, mesh, *,
         y, keep = routed_experts(xf, routed, gates, idx, cfg,
                                  backend=backend, phase=phase,
                                  capacity_factor=capacity_factor,
-                                 use_kernel=use_kernel)  # local!
+                                 use_kernel=use_kernel,
+                                 valid=vf)  # local!
         y = y + _shared_ffn(xf, shared, cfg.activation)    # partial (m-slice)
         y = y.reshape(bl, sl, d)
         if seq_sharded:
@@ -163,8 +176,8 @@ def cmoe_ffn_local(x: Array, p: dict, cfg, mesh, *,
     out_specs = (x_spec, P(None), P(None))
     y, load, pm = shard_map(
         local_ffn, mesh=mesh,
-        in_specs=(x_spec, p_specs), out_specs=out_specs)(
+        in_specs=(x_spec, p_specs, v_spec), out_specs=out_specs)(
             x, {k: p[k] for k in
                 ("shared", "routed", "router", "u", "bias")
-                if k in p})
+                if k in p}, valid)
     return y, {"load": load, "router_probs_mean": pm}

@@ -1,8 +1,16 @@
-"""Batched serving driver: prefill + decode loop with continuous batch
-slots, CMoE-converted models supported via --cmoe.
+"""Serving CLI: a thin shell over `repro.serving`.
+
+Static mode (default) keeps the classic fixed-batch prefill + decode
+timing loop. `--continuous` runs the continuous-batching engine on a
+staggered-arrival mixed-length request set: prompts prefill into freed
+slots while other slots keep decoding, prefill micro-batches run the
+grouped routed-expert backend and decode micro-batches the drop-free
+gather path.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
         --cmoe S3A3E8 --batch 4 --prompt-len 32 --gen 16
+    PYTHONPATH=src python -m repro.launch.serve --smoke --continuous \
+        --batch 4 --requests 8 --rate 0.5 --gen 8
 """
 from __future__ import annotations
 
@@ -20,6 +28,7 @@ from repro.core.convert import convert_dense_model
 from repro.core.experts import BACKENDS
 from repro.data import make_calibration_batch
 from repro.models import build_model
+from repro.serving import ServingEngine, make_requests, make_sampler
 
 
 def parse_sxayez(tag: str) -> CMoEConfig:
@@ -32,12 +41,55 @@ def parse_sxayez(tag: str) -> CMoEConfig:
     return CMoEConfig(num_experts=e, num_shared=s, top_k=a)
 
 
+def serve_continuous(model, params, args) -> int:
+    """Continuous-batching mode: Poisson arrivals, per-request lengths."""
+    cfg = model.cfg
+    max_len = args.prompt_len + args.gen
+    lo_p = min(max(4, args.prompt_len // 2), args.prompt_len)
+    reqs = make_requests(args.requests, cfg.vocab_size,
+                         prompt_range=(lo_p, args.prompt_len),
+                         gen_range=(max(1, args.gen // 2), args.gen),
+                         rate=args.rate, seed=args.seed)
+    engine = ServingEngine(model, params, max_slots=args.batch,
+                           max_len=max_len,
+                           temperature=args.temperature, seed=args.seed)
+    report = engine.run(reqs)
+    print(f"[continuous] {report.summary()}")
+    assert all(r.done for r in report.requests), "unfinished requests"
+
+    # the acceptance contract: decode micro-batches on the gather path,
+    # prefill micro-batches above the gather break-even on a grouped path.
+    # Only meaningful under the auto policy — a pinned --backend is the
+    # user's own (bench-mode) choice, reported but not asserted.
+    bc = report.backend_counts
+    has_experts = any(b != "-" for c in bc.values() for b in c)
+    if has_experts and args.backend in (None, "auto", "all"):
+        # ("all" is a static-mode flag; the engine itself ran auto)
+        decode_b = set(bc["decode"])
+        prefill_b = set(bc["prefill"])
+        assert decode_b == {"gather"}, f"decode ran {decode_b}"
+        assert prefill_b <= {"grouped_xla", "grouped_pallas", "gather"} and \
+            prefill_b & {"grouped_xla", "grouped_pallas"}, \
+            f"prefill ran {prefill_b}"
+        print(f"[continuous] backend policy OK: prefill={sorted(prefill_b)} "
+              f"decode={sorted(decode_b)}")
+    elif has_experts:
+        print(f"[continuous] backend pinned to {args.backend!r} "
+              f"(phase policy not asserted; grouped decode may drop "
+              f"generated tokens' routed output)")
+    if report.slot_reuse == 0 and args.requests > args.batch:
+        print("[continuous] warning: no slot was recycled (arrivals too "
+              "spread out?)")
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-0.5b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--cmoe", default=None, help="SxAyEz conversion tag")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="batch width; in --continuous mode, the slot count")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
@@ -48,7 +100,21 @@ def main(argv=None):
                          "phase-driven auto — grouped prefill, gather "
                          "decode); 'all' benchmarks decode tok/s per "
                          "backend")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching engine: staggered arrivals, "
+                         "mixed lengths, slot recycling")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="[--continuous] number of requests")
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="[--continuous] Poisson arrival rate "
+                         "(requests per engine step; 0 = all at once)")
     args = ap.parse_args(argv)
+
+    if args.continuous and args.smoke and not args.cmoe:
+        # exercise the per-micro-batch backend policy by default: without
+        # routed experts there is nothing for the phase split to select
+        args.cmoe = "S2A2E8"
+        print("[continuous] defaulting --cmoe S2A2E8 (smoke)")
 
     backend = None if args.backend in (None, "auto", "all") else args.backend
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -69,9 +135,24 @@ def main(argv=None):
                                        seed=args.seed)
         calib = {"tokens": jnp.asarray(calib["tokens"])}
         t0 = time.perf_counter()
-        model, params, report = convert_dense_model(model, params, calib, cm)
+        if cfg.family == "moe":
+            from repro.core.hierarchical import convert_moe_model
+            model, params, report = convert_moe_model(model, params, calib,
+                                                      cm)
+        else:
+            model, params, report = convert_dense_model(model, params,
+                                                        calib, cm)
+        t_conv = time.perf_counter() - t0
         print(f"[cmoe] converted {report.num_layers} layers "
-              f"({cm.tag()}) in {report.seconds_total:.2f}s")
+              f"({cm.tag()}) in {report.seconds_total:.2f}s "
+              f"({t_conv:.2f}s wall incl. tracing)")
+
+    if args.continuous:
+        if args.backend == "all":
+            print("[continuous] note: --backend all (per-backend decode "
+                  "tok/s table) is a static-mode feature; the engine runs "
+                  "the auto phase policy")
+        return serve_continuous(model, params, args)
 
     rng = np.random.default_rng(args.seed)
     prompts = rng.integers(0, cfg.vocab_size,
@@ -95,6 +176,9 @@ def main(argv=None):
         is steady state."""
         wl, _ = dec(params, first, cache, jnp.int32(args.prompt_len))
         jax.block_until_ready(wl)
+        # warm the sampler too (one pick per run keeps the PRNG streams of
+        # the main and per-backend runs aligned)
+        jax.block_until_ready(pick(wl))
         toks = [first]
         t0 = time.perf_counter()
         for i in range(steps):
@@ -105,17 +189,12 @@ def main(argv=None):
         return toks, time.perf_counter() - t0
 
     steps = args.gen - 1    # prefill's argmax supplies the first token
-    key = jax.random.PRNGKey(args.seed)
-
-    def pick_sample(lg):
-        nonlocal key
-        if args.temperature > 0:
-            key, sub = jax.random.split(key)
-            return jax.random.categorical(sub, lg / args.temperature, -1)
-        return jnp.argmax(lg, -1)
 
     first = jnp.argmax(logits_p, -1)[:, None]
-    tokens, t_decode = run_decode(decode, first, cache, steps, pick_sample)
+    # ONE sampling rule (repro.serving.sampling) for the main run and the
+    # per-backend comparisons below, so tok/s rows decode identically
+    pick = make_sampler(args.temperature, args.seed)
+    tokens, t_decode = run_decode(decode, first, cache, steps, pick)
     out = jnp.concatenate(tokens, axis=1)
     tput = args.batch * steps / max(t_decode, 1e-9)
     print(f"prefill: {t_prefill*1000:.1f} ms for "
@@ -125,7 +204,8 @@ def main(argv=None):
     print("sample:", np.asarray(out[0])[:16].tolist())
 
     if args.backend == "all":
-        # decode tok/s per engine backend, same cache/prompt, steady state
+        # decode tok/s per engine backend, same cache/prompt, same
+        # sampling rule (fresh sampler per backend replays the stream)
         for be in BACKENDS:
             if be == "grouped_pallas" and \
                     model.cfg.activation not in ("swiglu", "geglu"):
@@ -135,7 +215,7 @@ def main(argv=None):
                                backend=be)
             dec = jax.jit(m_be.decode_step)
             _, dt = run_decode(dec, first, cache0, steps,
-                               lambda lg: jnp.argmax(lg, -1))
+                               make_sampler(args.temperature, args.seed))
             tput = args.batch * steps / max(dt, 1e-9)
             print(f"decode[{be}]: {tput:.1f} tok/s ({dt*1000:.1f} ms total)")
     return 0

@@ -242,26 +242,72 @@ def decode_attention(q: Array, k_cache: Array, v_cache: Array, *,
                      scale: Optional[float] = None) -> Array:
     """Single-step attention against a cache.
 
-    q: (B, 1, H, D); caches: (B, T, KH, D); pos: scalar current position
+    q: (B, 1, H, D); caches: (B, T, KH, D); pos: current position — a
+    scalar, or per-slot (B,) so every batch lane can sit at its own depth
     (entries at index > pos are invalid). Returns (B, 1, H, D).
+
+    The S=1 case of `ragged_attention` (query 0's absolute position IS
+    pos) — one implementation of the mask/window/softmax math to keep in
+    sync."""
+    return ragged_attention(q, k_cache, v_cache, pos=pos, window=window,
+                            scale=scale)
+
+
+def ragged_attention(q: Array, k_cache: Array, v_cache: Array, *,
+                     pos: Array, window: Array | int = 0,
+                     scale: Optional[float] = None) -> Array:
+    """Multi-token attention against a cache with PER-SLOT query offsets.
+
+    The serving prefill path: each batch lane b holds a different request
+    whose queries start at absolute position pos[b] (0 for a freshly
+    recycled slot), so one mask cannot be shared across the batch the way
+    the flash kernel's block mask is. Scores are materialized as
+    (B, H, S, T) — serving prefill micro-batches are short (a few prompts
+    x a prompt length), so this stays far below the flash crossover; long
+    uniform-offset prefill keeps using `chunked_attention`.
+
+    q: (B, S, H, D); caches: (B, T, KH, Dk/Dv); pos: (B,) or scalar offset
+    of q[:, 0]. Query i of lane b attends cache entries <= pos[b] + i.
+    Returns (B, S, H, Dv).
     """
-    b, _, h, d = q.shape
+    b, s, h, d = q.shape
     t = k_cache.shape[1]
     scale = scale if scale is not None else d ** -0.5
     k = _repeat_kv(k_cache, h)
     v = _repeat_kv(v_cache, h)
-    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
-                   preferred_element_type=jnp.float32) * scale
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
     kv_pos = jnp.arange(t)
-    mask = kv_pos[None, None, None, :] <= pos
+    q_abs = (jnp.broadcast_to(jnp.asarray(pos), (b,))[:, None]
+             + jnp.arange(s))                         # (B, S)
+    mask = kv_pos[None, None, None, :] <= q_abs[:, None, :, None]
     window = jnp.asarray(window)
-    in_win = jnp.where(window > 0, kv_pos[None, None, None, :] > pos - window,
-                       True)
-    s = jnp.where(mask & in_win, s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    in_win = jnp.where(
+        window > 0,
+        kv_pos[None, None, None, :] > q_abs[:, None, :, None] - window, True)
+    scores = jnp.where(mask & in_win, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
     out = jnp.einsum("bhqk,bkhd->bqhd", p, v,
                      preferred_element_type=jnp.float32)
     return out.astype(v.dtype)
+
+
+def is_per_slot(pos) -> bool:
+    """True when a cache position is a per-slot (B,) vector rather than a
+    scalar shared by the whole batch."""
+    return pos is not None and getattr(jnp.asarray(pos), "ndim", 0) == 1
+
+
+def slot_cache_update(cache: Array, vals: Array, pos: Array) -> Array:
+    """Write vals (B, S, ...) into cache (B, T, ...) at per-slot offsets.
+
+    Row b lands at cache[b, pos[b] : pos[b] + S]. Out-of-range writes are
+    dropped (a padded prefill row may spill past max_len; those entries are
+    never attended — masks stop at the slot's valid length)."""
+    b, s = vals.shape[0], vals.shape[1]
+    rows = jnp.arange(b)[:, None]
+    cols = jnp.broadcast_to(jnp.asarray(pos), (b,))[:, None] + jnp.arange(s)
+    return cache.at[rows, cols].set(vals.astype(cache.dtype), mode="drop")
 
 
 # ------------------------------------------------------------------ GQA
@@ -321,6 +367,18 @@ def gqa_attention(x: Array, p: dict, cfg, *,
     if kv_cache is not None:
         ck, cv = kv_cache
         start = cache_pos if cache_pos is not None else 0
+        if is_per_slot(start):
+            # slot-aware path: each batch lane writes/reads at its own depth
+            ck = slot_cache_update(ck, k, start)
+            cv = slot_cache_update(cv, v, start)
+            new_kv = (ck, cv)
+            if s == 1:
+                out = decode_attention(q, ck, cv, pos=start, window=window)
+            else:
+                out = ragged_attention(q, ck, cv, pos=start, window=window)
+            out = matmul(out.reshape(b, s, -1),
+                         p["wo"].reshape(-1, cfg.d_model))
+            return out, new_kv
         ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
                                           (0, start, 0, 0))
         cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
@@ -376,10 +434,14 @@ def mla_attention(x: Array, p: dict, cfg, *,
     if kv_cache is not None:
         cc, cp = kv_cache
         start = cache_pos if cache_pos is not None else 0
-        cc = jax.lax.dynamic_update_slice(cc, c_kv.astype(cc.dtype),
-                                          (0, start, 0))
-        cp = jax.lax.dynamic_update_slice(cp, k_pe.astype(cp.dtype),
-                                          (0, start, 0))
+        if is_per_slot(start):
+            cc = slot_cache_update(cc, c_kv, start)
+            cp = slot_cache_update(cp, k_pe, start)
+        else:
+            cc = jax.lax.dynamic_update_slice(cc, c_kv.astype(cc.dtype),
+                                              (0, start, 0))
+            cp = jax.lax.dynamic_update_slice(cp, k_pe.astype(cp.dtype),
+                                              (0, start, 0))
         new_cache = (cc, cp)
     else:
         cc, cp, start = c_kv, k_pe, 0
@@ -398,7 +460,9 @@ def mla_attention(x: Array, p: dict, cfg, *,
                           preferred_element_type=jnp.float32)
         scores = (s_lat + s_pe) * scale
         t = cc.shape[1]
-        mask = jnp.arange(t)[None, None, None, :] <= start
+        start_b = jnp.broadcast_to(jnp.asarray(start),
+                                   (b,))[:, None, None, None]
+        mask = jnp.arange(t)[None, None, None, :] <= start_b
         scores = jnp.where(mask, scores, NEG_INF)
         probs = jax.nn.softmax(scores, axis=-1)
         # value in latent space, then expand: (B,H,q,r) @ (r,H,dv)
@@ -407,6 +471,19 @@ def mla_attention(x: Array, p: dict, cfg, *,
         out = jnp.einsum("bhqr,rhd->bqhd", o_lat.astype(x.dtype),
                          wv.astype(x.dtype),
                          preferred_element_type=jnp.float32).astype(x.dtype)
+    elif kv_cache is not None and is_per_slot(start):
+        # slot-aware prefill: per-lane query offsets cannot share the flash
+        # block mask, so expand K/V from the cached latent and run the
+        # ragged mask (serving prefill micro-batches are short)
+        kv = jnp.einsum("btr,rhd->bthd", cc, wkv.astype(cc.dtype),
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+        k_nope, v_exp = kv[..., :dn], kv[..., dn:]
+        kfull = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(cp[:, :, None, :],
+                                      (*cp.shape[:2], h, dr)).astype(x.dtype)],
+            axis=-1)
+        qfull = jnp.concatenate([q_nope, q_pe], axis=-1)
+        out = ragged_attention(qfull, kfull, v_exp, pos=start, scale=scale)
     elif kv_cache is not None:
         # LAZY-EXPANSION prefill (flash-MLA style, §Perf iteration): the
         # per-head K/V are expanded from the latent PER KV-BLOCK inside the

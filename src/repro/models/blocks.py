@@ -22,9 +22,13 @@ Array = jax.Array
 
 
 class BlockCtx(NamedTuple):
-    positions: Array                 # rope positions for this call
+    positions: Array                 # rope positions: (S,) or per-slot (B, S)
     cache: Any                       # this layer's cache slice (or None)
-    cache_pos: Optional[Array]       # write offset into cache
+    cache_pos: Optional[Array]       # write offset into cache: a scalar
+    #   shared by the batch, or per-slot (B,) — the serving engine's
+    #   slot-aware step, where each lane reads/writes at its own depth
+    #   (attention routes through ragged/per-slot masks; see
+    #   repro.models.attention.is_per_slot)
     window: Array | int              # sliding window (0 = full)
     causal: bool
     use_rope: bool
@@ -33,6 +37,10 @@ class BlockCtx(NamedTuple):
     capture: bool = False            # add pre-FFN activations to aux
     phase: str = "prefill"           # "prefill" | "decode" — expert engine
     backend: Optional[str] = None    # routed-expert backend override
+    token_valid: Optional[Array] = None   # (B, S) bool: False = padding.
+    #   Threaded to the routed-expert engine as its `valid` mask so
+    #   right-padded serving prompts neither consume grouped-backend
+    #   expert capacity nor pollute load stats.
 
 
 def _lecun(key, shape, dtype, fan_in=None):
@@ -92,6 +100,13 @@ def init_ffn(key, cfg, dtype, d_ff: Optional[int] = None) -> dict:
             "wd": _lecun(ks[2], (d_ff, d), dtype, d_ff)}
 
 
+def _token_valid_flat(x: Array, ctx: BlockCtx):
+    """ctx.token_valid (B, S) -> (B*S, 1) matching x's token flattening."""
+    if ctx.token_valid is None:
+        return None
+    return ctx.token_valid.reshape(-1, 1)
+
+
 def _apply_ffn(x: Array, p: dict, cfg, ctx: BlockCtx):
     """Dense FFN or (if converted) the CMoE sparse FFN. Returns (y, aux)."""
     if cfg.cmoe is not None and "cmoe" in p:
@@ -99,15 +114,18 @@ def _apply_ffn(x: Array, p: dict, cfg, ctx: BlockCtx):
         from repro.distributed.policy import (local_dispatch_mesh,
                                               policy_capacity_factor)
         cap = policy_capacity_factor()
+        valid = _token_valid_flat(x, ctx) if x.ndim == 3 else None
         mesh = local_dispatch_mesh(x.shape[0]) if x.ndim == 3 else None
         if mesh is not None:
             return cmoe_ffn_local(x, p["cmoe"], cfg, mesh,
                                   capacity_factor=cap,
                                   use_kernel=ctx.use_kernel,
-                                  backend=ctx.backend, phase=ctx.phase)
+                                  backend=ctx.backend, phase=ctx.phase,
+                                  valid=ctx.token_valid)
         return cmoe_ffn(x, p["cmoe"], cfg, capacity_factor=cap,
                         use_kernel=ctx.use_kernel,
-                        backend=ctx.backend, phase=ctx.phase)
+                        backend=ctx.backend, phase=ctx.phase,
+                        valid=valid)
     if ctx.use_kernel and cfg.activation in ("swiglu", "geglu"):
         from repro.kernels import ops as kops
         y = kops.swiglu_ffn(x, p["ffn"]["wg"], p["ffn"]["wu"],
@@ -188,7 +206,8 @@ def _apply_moe(ffn_in: Array, p: dict, cfg, ctx: BlockCtx):
         if cfg.moe.num_experts % msize == 0 and s % msize == 0 and s > 1:
             y, aux = moe_ffn_local(ffn_in, p["moe"], cfg, mesh,
                                    use_kernel=ctx.use_kernel,
-                                   backend=ctx.backend, phase=ctx.phase)
+                                   backend=ctx.backend, phase=ctx.phase,
+                                   valid=ctx.token_valid)
             if cfg.moe.num_shared > 0 and "shared_wg" in p["moe"]:
                 g = matmul(ffn_in, p["moe"]["shared_wg"])
                 u = matmul(ffn_in, p["moe"]["shared_wu"])
@@ -199,7 +218,8 @@ def _apply_moe(ffn_in: Array, p: dict, cfg, ctx: BlockCtx):
                 y = y + matmul(h, p["moe"]["shared_wd"])
             return y, aux
     return moe_ffn(ffn_in, p["moe"], cfg, use_kernel=ctx.use_kernel,
-                   backend=ctx.backend, phase=ctx.phase)
+                   backend=ctx.backend, phase=ctx.phase,
+                   valid=_token_valid_flat(ffn_in, ctx))
 
 
 
@@ -222,7 +242,8 @@ def moe_block(x: Array, p: dict, cfg, ctx: BlockCtx):
         from repro.core.hierarchical import hierarchical_moe_ffn
         y, aux = hierarchical_moe_ffn(ffn_in, p, cfg,
                                       use_kernel=ctx.use_kernel,
-                                      backend=ctx.backend, phase=ctx.phase)
+                                      backend=ctx.backend, phase=ctx.phase,
+                                      valid=_token_valid_flat(ffn_in, ctx))
     else:
         y, aux = _apply_moe(ffn_in, p, cfg, ctx)
     if ctx.capture:
@@ -250,7 +271,8 @@ def mla_moe_block(x: Array, p: dict, cfg, ctx: BlockCtx):
         from repro.core.hierarchical import hierarchical_moe_ffn
         y, aux = hierarchical_moe_ffn(ffn_in, p, cfg,
                                       use_kernel=ctx.use_kernel,
-                                      backend=ctx.backend, phase=ctx.phase)
+                                      backend=ctx.backend, phase=ctx.phase,
+                                      valid=_token_valid_flat(ffn_in, ctx))
     else:
         y, aux = _apply_moe(ffn_in, p, cfg, ctx)
     if ctx.capture:

@@ -150,19 +150,24 @@ class Model:
 
     def _stack(self, params, x: Array, *, caches=None, cache_pos=None,
                enc_out=None, remat: bool = False, capture: bool = False,
-               phase: str = "prefill"):
+               phase: str = "prefill", token_valid=None):
         """Run the layer stack. Returns (x, new_caches, aux)."""
         cfg = self.cfg
         seq = x.shape[1]
         if cache_pos is not None:
-            positions = cache_pos + jnp.arange(seq)
+            cp = jnp.asarray(cache_pos)
+            if cp.ndim == 1:        # per-slot offsets -> (B, S) positions
+                positions = cp[:, None] + jnp.arange(seq)
+            else:
+                positions = cp + jnp.arange(seq)
         else:
             positions = jnp.arange(seq)
         windows = layer_windows(cfg)
         base = BlockCtx(positions=positions, cache=None, cache_pos=cache_pos,
                         window=0, causal=True, use_rope=True,
                         use_kernel=self.use_kernel, capture=capture,
-                        phase=phase, backend=self.backend)
+                        phase=phase, backend=self.backend,
+                        token_valid=token_valid)
         _, block_fn = B.BLOCKS[self.kind]
         moe_every = cfg.moe.moe_every if cfg.moe is not None else 1
 
@@ -363,62 +368,111 @@ class Model:
             return (attn_cache(L - n_per), attn_cache(n_per))
         return attn_cache(L)
 
+    def step(self, params, tokens: Array, cache, slot_pos, *,
+             phase: Optional[str] = None,
+             lengths: Optional[Array] = None,
+             extras: Optional[dict] = None):
+        """Unified slot-aware step — the serving engine's one entry point.
+
+        Runs `tokens` (B, S) against `cache`, writing K/V at per-slot
+        offsets `slot_pos`: a (B,) int32 vector giving each batch lane its
+        own write position (a freshly recycled slot prefills at 0 while
+        its neighbors keep decoding at their own depths), or a scalar
+        shared by the whole batch — the scalar form lowers to the original
+        chunked-flash / dynamic-slice path, so `prefill` and `decode_step`
+        are thin views over this method with zero cost.
+
+        `phase` ("prefill" | "decode", default by S) is threaded to the
+        routed-expert engine so every micro-batch picks its own backend
+        (grouped for prefill chunks, drop-free gather for decode).
+        `lengths` (B,) marks each row's valid token count when prompts are
+        right-padded: logits are taken at position lengths-1 and padded
+        keys land beyond the valid range where masks never look (they are
+        overwritten as the slot decodes forward). `extras` carries
+        non-token inputs (e.g. vlm patches) through to the embedder.
+
+        Returns (logits (B, V) at each row's last valid position,
+        new_cache). Audio keeps its enc-dec paths (`prefill`/
+        `decode_step` dispatch there before reaching here).
+        """
+        cfg = self.cfg
+        if cfg.family == "audio":
+            raise NotImplementedError(
+                "step() serves the KV-cache families; audio prefill/decode "
+                "keep their enc-dec cross-attention paths")
+        s = tokens.shape[1]
+        if phase is None:
+            phase = "decode" if s == 1 else "prefill"
+        batch = {"tokens": tokens} if not extras else \
+            {**extras, "tokens": tokens}
+        x = self._embed(params, batch)
+        token_valid = None
+        if lengths is not None:
+            # (B, S) mask: padding beyond each row's prompt must not
+            # consume routed-expert capacity (threaded to the engine)
+            token_valid = (jnp.arange(s)[None, :] <
+                           jnp.asarray(lengths, jnp.int32)[:, None])
+        x, ncaches, _ = self._stack(params, x, caches=cache,
+                                    cache_pos=slot_pos, phase=phase,
+                                    token_valid=token_valid)
+        if lengths is None:
+            xl = x[:, -1:]
+        else:
+            idx = (jnp.asarray(lengths, jnp.int32) - 1)[:, None, None]
+            xl = jnp.take_along_axis(
+                x, jnp.broadcast_to(idx, (x.shape[0], 1, x.shape[2])),
+                axis=1)
+        xl = rms_norm(xl, params["final_norm"], cfg.norm_eps)
+        head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        logits = unembed(xl, head, cfg.tie_embeddings)[:, 0]
+        return logits, ncaches
+
     def prefill(self, params, batch, *, max_len: Optional[int] = None):
         """Teacher-less forward filling a fresh cache. Returns
-        (last-token logits (B, V), cache)."""
+        (last-token logits (B, V), cache). A view over `step` (scalar
+        position 0 keeps the chunked-flash path) for every family but
+        audio, which fills its cross-attn cache here."""
         cfg = self.cfg
         tokens = batch["tokens"]
         bsz, seq = tokens.shape[0], tokens.shape[1]
         max_len = max_len or seq
         cache = self.init_cache(bsz, max_len)
-        x = self._embed(params, batch)
-        enc_out = None
         if cfg.family == "audio":
+            x = self._embed(params, batch)
             enc_out = self._encode(params, batch["frames"])
             # fill cross-attn cache
             def xkv(carry, p_block):
                 return carry, B.cross_kv_project(enc_out, p_block["xattn"],
                                                  cfg)
             _, cross = jax.lax.scan(xkv, None, params["blocks"])
-            cache = {**cache, "cross": cross}
-            caches = cache["self"]
-        else:
-            caches = cache
-        x, ncaches, _ = self._stack(params, x, caches=caches,
-                                    cache_pos=jnp.int32(0), enc_out=enc_out)
-        x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
-        head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
-        logits = unembed(x, head, cfg.tie_embeddings)[:, 0]
-        if cfg.family == "audio":
-            cache = {"self": ncaches, "cross": cache["cross"]}
-        else:
-            cache = ncaches
-        return logits, cache
+            x, ncaches, _ = self._stack(params, x, caches=cache["self"],
+                                        cache_pos=jnp.int32(0),
+                                        enc_out=enc_out)
+            x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+            head = params["embed"] if cfg.tie_embeddings \
+                else params["lm_head"]
+            logits = unembed(x, head, cfg.tie_embeddings)[:, 0]
+            return logits, {"self": ncaches, "cross": cross}
+        extras = {k: v for k, v in batch.items() if k not in
+                  ("tokens", "token")}
+        return self.step(params, tokens, cache, jnp.int32(0),
+                         phase="prefill", extras=extras or None)
 
     def decode_step(self, params, token: Array, cache, pos: Array):
-        """One decode step. token: (B, 1) int32; pos: () int32 — the index
-        the new token is written at. Returns (logits (B, V), new_cache)."""
+        """One decode step. token: (B, 1) int32; pos: () or per-slot (B,)
+        int32 — the index the new token is written at. A view over `step`
+        for every family but audio. Returns (logits (B, V), new_cache)."""
         cfg = self.cfg
-        x = self._embed(params, {"tokens": token})
-        enc_out = None
         if cfg.family == "audio":
-            caches = cache["self"]
-        else:
-            caches = cache
-        # cross-attn K/V comes straight from the cache for enc-dec decode
-        if cfg.family == "audio":
-            base_cross = cache["cross"]
-            x, ncaches, _ = self._stack_audio_decode(params, x, caches,
-                                                     base_cross, pos)
-            new_cache = {"self": ncaches, "cross": cache["cross"]}
-        else:
-            x, ncaches, _ = self._stack(params, x, caches=caches,
-                                        cache_pos=pos, phase="decode")
-            new_cache = ncaches
-        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-        head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
-        logits = unembed(x, head, cfg.tie_embeddings)[:, 0]
-        return logits, new_cache
+            x = self._embed(params, {"tokens": token})
+            x, ncaches, _ = self._stack_audio_decode(
+                params, x, cache["self"], cache["cross"], pos)
+            x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+            head = params["embed"] if cfg.tie_embeddings \
+                else params["lm_head"]
+            logits = unembed(x, head, cfg.tie_embeddings)[:, 0]
+            return logits, {"self": ncaches, "cross": cache["cross"]}
+        return self.step(params, token, cache, pos, phase="decode")
 
     def _stack_audio_decode(self, params, x, caches, cross, pos):
         cfg = self.cfg

@@ -45,10 +45,13 @@ def moe_gate(xf: Array, p: dict, moe):
 
 
 def moe_ffn(x: Array, p: dict, cfg, *, use_kernel: bool = False,
-            backend: str | None = None, phase: str = "prefill"):
+            backend: str | None = None, phase: str = "prefill",
+            valid: Array | None = None):
     """Pretrained-MoE FFN block (top-k softmax router + shared experts).
 
-    x: (B, S, d). Returns (out, aux) with aux = dict(load=per-expert counts
+    x: (B, S, d). valid: optional (B*S, 1) bool — False rows (padded
+    serving prompts) take no expert capacity and no load share.
+    Returns (out, aux) with aux = dict(load=per-expert counts
     fraction, router_probs_mean=mean prob per expert) for balancing metrics.
     """
     moe = cfg.moe
@@ -60,7 +63,8 @@ def moe_ffn(x: Array, p: dict, cfg, *, use_kernel: bool = False,
     out, keep = routed_experts(
         xf, {"wg": p["wg"], "wu": p["wu"], "wd": p["wd"]}, gates, idx, cfg,
         backend=backend, phase=phase,
-        capacity_factor=moe.capacity_factor, use_kernel=use_kernel)
+        capacity_factor=moe.capacity_factor, use_kernel=use_kernel,
+        valid=valid)
 
     if moe.num_shared > 0:
         g = matmul(xf, p["shared_wg"])
@@ -78,7 +82,7 @@ def moe_ffn(x: Array, p: dict, cfg, *, use_kernel: bool = False,
 
 def moe_ffn_local(x: Array, p: dict, cfg, mesh, *,
                   use_kernel: bool = False, backend: str | None = None,
-                  phase: str = "prefill"):
+                  phase: str = "prefill", valid: Array | None = None):
     """Beyond-paper optimization (§Perf): two-stage shard_map EP dispatch
     for the ROUTED experts (shared experts stay on the dense GSPMD path).
 
@@ -109,6 +113,11 @@ def moe_ffn_local(x: Array, p: dict, cfg, mesh, *,
     b, s, d = x.shape
     seq_sharded = s % msize == 0 and msize > 1 and s > 1
     x_spec = P(dp, "model" if seq_sharded else None, None)
+    v_spec = P(dp, "model" if seq_sharded else None)
+    if valid is None:
+        valid = jnp.ones((b, s), bool)
+    else:
+        valid = valid.reshape(b, s)
     p_specs = {"router": P("data", None),
                "balance_bias": P(None),
                "wg": P("model", "data", None),
@@ -116,7 +125,7 @@ def moe_ffn_local(x: Array, p: dict, cfg, mesh, *,
                "wd": P("model", None, "data")}
     p_in = {kk: p[kk] for kk in p_specs}
 
-    def local_moe(x_loc, pl):
+    def local_moe(x_loc, pl, v_loc):
         ag = jax.lax.all_gather
         wg = ag(pl["wg"], "data", axis=1, tiled=True)      # (E_loc, d, m)
         wu = ag(pl["wu"], "data", axis=1, tiled=True)
@@ -124,15 +133,20 @@ def moe_ffn_local(x: Array, p: dict, cfg, mesh, *,
         router = ag(pl["router"], "data", axis=0, tiled=True)
         bl, sl, _ = x_loc.shape
         xf = x_loc.reshape(bl * sl, d)
+        vf = v_loc.reshape(bl * sl, 1)
         t_loc = xf.shape[0]
 
         gates, idx, probs = moe_gate(
             xf, {"router": router, "balance_bias": pl["balance_bias"]}, moe)
 
         # ---- stage 1: all-to-all to expert-owning shards ----
-        dest = idx // e_loc                                # (T_loc, k)
+        # padded tokens are re-aimed at the out-of-range shard id before
+        # binning: they occupy no send-capacity slot, ship nowhere, and
+        # real tokens' bin positions don't depend on padding content
+        dest = jnp.where(vf, idx // e_loc, msize)          # (T_loc, k)
         cap_s = expert_capacity(t_loc, msize, k, moe.capacity_factor)
         pos_s, keep_s = assign_positions(dest, msize, cap_s)
+        keep_s = keep_s & vf
         info_s = DispatchInfo(dest, pos_s, keep_s,
                               jnp.ones_like(gates).astype(xf.dtype))
         send = dispatch(xf, info_s, msize, cap_s)          # (msize, C_s, d)
@@ -176,8 +190,8 @@ def moe_ffn_local(x: Array, p: dict, cfg, mesh, *,
         return out.reshape(bl, sl, d), load, pm
 
     y, load, pm = shard_map(
-        local_moe, mesh=mesh, in_specs=(x_spec, p_specs),
-        out_specs=(x_spec, P(None), P(None)))(x, p_in)
+        local_moe, mesh=mesh, in_specs=(x_spec, p_specs, v_spec),
+        out_specs=(x_spec, P(None), P(None)))(x, p_in, valid)
     return y, {"load": load, "router_probs_mean": pm}
 
 

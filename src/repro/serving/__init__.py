@@ -1,0 +1,64 @@
+"""Continuous-batching serving engine: scheduler + slot KV cache + step
+executor.
+
+CMoE's payoff is serving-time efficiency, so this package turns the
+fixed-batch prefill-then-decode script into an engine that keeps every
+batch lane busy on mixed traffic. Three pieces, three contracts:
+
+``Scheduler`` (`scheduler.py`)
+    Owns the admission queue and the slot table. Requests are submitted
+    with an arrival time (engine steps); ``admit(now)`` assigns free slots
+    to due requests (FIFO), ``finish(req)`` recycles the slot. Policy
+    "continuous" refills slots the moment they free; policy "static"
+    models the classic baseline — it only admits when *all* slots are
+    free, so a batch drains fully before the next one starts.
+
+``SlotKVCache`` (`cache.py`)
+    The model KV cache (leaves stacked (L, B, T, ...), batch axis 1) plus
+    per-slot valid lengths. Each slot carries its own position, so a new
+    prompt prefills into a freed slot at position 0 while neighboring
+    slots keep decoding at their own depths. Recycling a slot is just a
+    length reset: every cache entry a mask can reach is written by the
+    current request before it is read, so stale K/V from the previous
+    occupant is never attended (proved by the parity tests).
+
+``StepExecutor`` (`executor.py`)
+    jit-compiled step functions over ``Model.step``. Prefill micro-batches
+    gather the admitted slots' cache rows, run the slot-aware step
+    (per-slot position 0, right-padded prompts with per-row lengths), and
+    scatter back; decode micro-batches run full-width over all slots with
+    per-slot positions. Each call reports the routed-expert backend the
+    engine ran (``core.experts.microbatch_backend`` — the same policy
+    ``routed_experts`` executes): grouped for prefill chunks, drop-free
+    gather for decode.
+
+``ServingEngine`` (`engine.py`)
+    The loop: each iteration admits due requests, prefills them as one
+    micro-batch, then decodes every active slot; finished requests
+    (EOS / max_new / max_len) free their slots. Returns an
+    ``EngineReport`` with goodput, TTFT, slot utilization, slot-reuse
+    count, and the per-micro-batch backend log.
+
+CLI usage (``repro.launch.serve`` is a thin shell over this package)::
+
+    # staggered Poisson arrivals, mixed prompt/gen lengths, slot recycling
+    PYTHONPATH=src python -m repro.launch.serve --smoke --continuous \
+        --batch 4 --requests 8 --rate 0.5 --gen 8
+
+    # static-vs-continuous goodput on the same request mix
+    PYTHONPATH=src python benchmarks/bench_serving.py --slots 4 \
+        --requests 8 --no-gate
+"""
+from repro.serving.cache import SlotKVCache, gather_slots, scatter_slots
+from repro.serving.engine import EngineReport, ServingEngine
+from repro.serving.executor import StepExecutor
+from repro.serving.request import Request
+from repro.serving.sampling import make_sampler
+from repro.serving.scheduler import Scheduler
+from repro.serving.workload import make_requests, poisson_arrivals
+
+__all__ = [
+    "EngineReport", "Request", "Scheduler", "ServingEngine", "SlotKVCache",
+    "StepExecutor", "gather_slots", "make_requests", "make_sampler",
+    "poisson_arrivals", "scatter_slots",
+]

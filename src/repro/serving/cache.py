@@ -1,0 +1,68 @@
+"""Slot-based KV cache: the model cache pytree + per-slot lengths.
+
+Every cache layout this engine serves (GQA K/V, MLA latent) stacks layers
+at axis 0 and the batch at axis 1 — a "slot" is one batch lane. Gather /
+scatter over axis 1 move a micro-batch's slot rows in and out of the
+global cache inside the jitted step functions.
+
+Recycling is a LENGTH RESET, not a wipe: attention masks stop at each
+slot's valid depth, and a slot's decode loop writes position p before any
+query can attend it, so K/V left behind by the previous occupant is never
+read. (tests/test_serving.py proves prefill-into-dirty-slot parity.)
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+Array = jax.Array
+
+
+def gather_slots(cache, slot_idx: Array, width: int | None = None):
+    """Pull slot rows out of every cache leaf: (L, B, ...) -> (L, n, ...).
+
+    width limits the sequence axis (axis 2 for every layout the engine
+    serves: GQA (L, B, T, KH, hd), MLA latents (L, B, T, r)) to the first
+    `width` entries — a prefill at per-slot position 0 provably never
+    reads or writes beyond its padded prompt length, so gathering the
+    full max_len column range would only waste attention compute."""
+    if width is None:
+        return jax.tree.map(lambda a: a[:, slot_idx], cache)
+    return jax.tree.map(lambda a: a[:, slot_idx, :width], cache)
+
+
+def scatter_slots(cache, slot_idx: Array, sub, width: int | None = None):
+    """Write gathered rows back: the functional inverse of gather_slots."""
+    if width is None:
+        return jax.tree.map(lambda a, s: a.at[:, slot_idx].set(s),
+                            cache, sub)
+    return jax.tree.map(lambda a, s: a.at[:, slot_idx, :width].set(s),
+                        cache, sub)
+
+
+class SlotKVCache:
+    """The global cache plus host-side per-slot bookkeeping.
+
+    ``lengths[i]`` is slot i's valid depth — the next write position. The
+    engine advances it after each prefill/decode write; ``free`` resets it
+    to recycle the slot.
+
+    CAUTION: never pass ``lengths`` itself into a jitted step —
+    ``jnp.asarray`` of a numpy array can ZERO-COPY alias the host buffer
+    on CPU, and mutating it (``lengths += 1``) races the asynchronously
+    dispatched computation (observed: decode writes landing at stale
+    positions). ``positions()`` returns the copy to hand to jax.
+    """
+
+    def __init__(self, model, max_slots: int, max_len: int):
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.cache = model.init_cache(max_slots, max_len)
+        self.lengths = np.zeros(max_slots, np.int32)
+
+    def free(self, slot: int) -> None:
+        self.lengths[slot] = 0
+
+    def positions(self) -> np.ndarray:
+        """Per-slot write positions for a full-width decode step."""
+        return self.lengths.copy()

@@ -1,0 +1,214 @@
+"""The continuous-batching serving loop.
+
+Each engine iteration:
+  1. admit due requests into free slots and prefill them as ONE
+     micro-batch (right-padded to a length bucket, per-row valid lengths,
+     per-slot position 0 — recycled slots restart at the bottom of their
+     lane);
+  2. decode every active slot full-width with per-slot positions;
+  3. finish requests on EOS / max_new / max_len and recycle their slots.
+
+The phase is threaded per micro-batch down to the routed-expert engine,
+so prefill chunks run the grouped backend while decode steps run the
+drop-free gather path — `backend_log` records what each micro-batch ran.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import Counter
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.cache import SlotKVCache
+from repro.serving.executor import StepExecutor
+from repro.serving.request import Request
+from repro.serving.sampling import make_sampler
+from repro.serving.scheduler import Scheduler
+
+
+@dataclasses.dataclass
+class EngineReport:
+    num_requests: int
+    steps: int
+    wall_s: float
+    total_new_tokens: int
+    mean_ttft_steps: float          # arrival -> first token, in steps
+    slot_busy_frac: float           # busy lanes / (steps * max_slots)
+    slot_reuse: int                 # admissions that recycled a used slot
+    backend_counts: dict            # phase -> Counter of backends run
+    requests: list[Request]         # SNAPSHOTS of end-of-run state — a
+    #   later engine.run() on the same request list resets/mutates the
+    #   live objects, but not these copies
+
+    @property
+    def goodput(self) -> float:
+        """Generated tokens per wall-clock second."""
+        return self.total_new_tokens / max(self.wall_s, 1e-9)
+
+    def summary(self) -> str:
+        bc = {ph: dict(c) for ph, c in self.backend_counts.items()}
+        return (f"{self.num_requests} requests in {self.steps} steps / "
+                f"{self.wall_s:.2f}s: {self.total_new_tokens} tokens, "
+                f"goodput {self.goodput:.1f} tok/s, mean TTFT "
+                f"{self.mean_ttft_steps:.1f} steps, slot busy "
+                f"{self.slot_busy_frac * 100:.0f}%, slot reuse "
+                f"{self.slot_reuse}, backends {bc}")
+
+
+class ServingEngine:
+    """Continuous-batching engine over a slot KV cache.
+
+    model/params: any KV-cache family (dense / vlm text-only / moe /
+    mla_moe). max_slots is the batch width (one slot = one lane of the
+    cache); max_len bounds prompt + generation per request.
+    policy="static" turns the same machinery into the fixed-batch
+    baseline (admit only when all slots are free) — used by the goodput
+    benchmark so both sides run identical compiled steps.
+    """
+
+    def __init__(self, model, params, *, max_slots: int, max_len: int,
+                 policy: str = "continuous",
+                 prefill_bucket: int = 16,
+                 max_prefill_tokens: Optional[int] = None,
+                 temperature: float = 0.0, seed: int = 0):
+        kind = getattr(model, "kind", None)
+        if model.cfg.family in ("ssm", "hybrid", "audio") or kind not in (
+                "dense", "moe", "mla_moe"):
+            raise NotImplementedError(
+                f"serving engine needs a positional KV cache; family="
+                f"{model.cfg.family!r} kind={kind!r} is not slot-addressable")
+        self.model = model
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.prefill_bucket = max(1, prefill_bucket)
+        self.temperature = temperature
+        self.seed = seed
+        self.executor = StepExecutor(model)
+        self.scheduler = Scheduler(max_slots, policy=policy,
+                                   max_prefill_tokens=max_prefill_tokens)
+        self.kv: Optional[SlotKVCache] = None
+        self.backend_log: list[tuple[int, str, int, Optional[str]]] = []
+
+    # ------------------------------------------------------------- loop
+
+    def run(self, requests: list[Request], *,
+            max_steps: Optional[int] = None) -> EngineReport:
+        """Serve `requests` to completion; reusable (state resets here)."""
+        for r in requests:
+            if r.prompt_len < 1 or r.max_new < 1:
+                raise ValueError(f"request {r.rid}: empty prompt or gen")
+            if r.prompt_len + r.max_new > self.max_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt {r.prompt_len} + max_new "
+                    f"{r.max_new} exceeds max_len {self.max_len}")
+            r.reset()
+        self.scheduler.reset()
+        self.kv = SlotKVCache(self.model, self.max_slots, self.max_len)
+        self.backend_log = []
+        self._sampler = make_sampler(self.temperature, self.seed)
+        if max_steps is None:
+            # every iteration with an active slot emits >= 1 token, so the
+            # loop is bounded by total work + the arrival horizon
+            horizon = max((r.arrival for r in requests), default=0.0)
+            max_steps = int(horizon) + sum(
+                r.prompt_len + r.max_new for r in requests) + 16
+        self.scheduler.submit(requests)
+
+        step = 0
+        busy = 0
+        t0 = time.perf_counter()
+        while not self.scheduler.all_done():
+            admitted = self.scheduler.admit(step)
+            if admitted:
+                self._prefill_microbatch(admitted, step)
+            active = self.scheduler.active()
+            busy += len(active)
+            if active:
+                self._decode_microbatch(step)
+            step += 1
+            if step > max_steps:
+                raise RuntimeError(f"engine made no progress in "
+                                   f"{max_steps} steps")
+        wall = time.perf_counter() - t0
+
+        ttft = [r.admit_step - r.arrival for r in requests]
+        return EngineReport(
+            num_requests=len(requests),
+            steps=step,
+            wall_s=wall,
+            total_new_tokens=sum(len(r.generated) for r in requests),
+            mean_ttft_steps=float(np.mean(ttft)) if ttft else 0.0,
+            slot_busy_frac=busy / max(step * self.max_slots, 1),
+            slot_reuse=self.scheduler.slot_reuse,
+            backend_counts=self.backend_counts(),
+            requests=[dataclasses.replace(r, generated=list(r.generated))
+                      for r in requests],
+        )
+
+    def backend_counts(self) -> dict:
+        out: dict[str, Counter] = {"prefill": Counter(), "decode": Counter()}
+        for _, phase, _, backend in self.backend_log:
+            out[phase][backend or "-"] += 1
+        return out
+
+    # ------------------------------------------------------ micro-batches
+
+    def _bucket(self, n: int) -> int:
+        b = self.prefill_bucket
+        return min(((n + b - 1) // b) * b, self.max_len)
+
+    def _prefill_microbatch(self, admitted: list[Request],
+                            step: int) -> None:
+        n = len(admitted)
+        s_pad = self._bucket(max(r.prompt_len for r in admitted))
+        tokens = np.zeros((n, s_pad), np.int32)
+        lengths = np.zeros(n, np.int32)
+        slots = np.zeros(n, np.int32)
+        for i, r in enumerate(admitted):
+            tokens[i, :r.prompt_len] = r.prompt
+            lengths[i] = r.prompt_len
+            slots[i] = r.slot
+            r.admit_step = step
+        logits, cache, backend = self.executor.prefill(
+            self.params, self.kv.cache, jnp.asarray(tokens),
+            jnp.asarray(slots), jnp.asarray(lengths))
+        self.kv.cache = cache
+        self.kv.lengths[slots] = lengths
+        self.backend_log.append((step, "prefill", n * s_pad, backend))
+        first = np.asarray(self._sampler(logits))
+        for i, r in enumerate(admitted):
+            self._emit(r, int(first[i]), step)
+
+    def _decode_microbatch(self, step: int) -> None:
+        tokens = np.zeros((self.max_slots, 1), np.int32)
+        for slot, r in enumerate(self.scheduler.slots):
+            if r is not None:
+                tokens[slot, 0] = r.generated[-1]
+        positions = self.kv.positions()
+        logits, cache, backend = self.executor.decode(
+            self.params, self.kv.cache, jnp.asarray(tokens),
+            jnp.asarray(positions))
+        self.kv.cache = cache
+        self.backend_log.append((step, "decode", self.max_slots, backend))
+        nxt = np.asarray(self._sampler(logits))
+        for slot, r in enumerate(self.scheduler.slots):
+            if r is None:
+                continue
+            self.kv.lengths[slot] += 1      # the input token's K/V landed
+            self._emit(r, int(nxt[slot]), step)
+
+    def _emit(self, req: Request, token: int, step: int) -> None:
+        req.generated.append(token)
+        hit_eos = req.eos_id is not None and token == req.eos_id
+        # the next decode would write this token's K/V at position
+        # lengths[slot]; finish when that write would fall off the cache
+        slot_len = int(self.kv.lengths[req.slot])
+        if hit_eos or len(req.generated) >= req.max_new or \
+                slot_len >= self.max_len:
+            slot = req.slot
+            self.scheduler.finish(req, step)
+            self.kv.free(slot)

@@ -1,0 +1,77 @@
+"""Step executor: jitted prefill / decode micro-batch steps over Model.step.
+
+Two compiled shapes do all the work:
+
+  prefill(tokens (n, S), slots (n,), lengths (n,))
+      gathers the admitted slots' cache rows, runs the slot-aware step at
+      per-slot position 0 (fresh or recycled slots both start there), and
+      scatters the filled rows back. Compiled once per (n, S) bucket — the
+      engine right-pads prompts to a length bucket to bound recompiles.
+
+  decode(tokens (B, 1), positions (B,))
+      full-width over ALL slots with per-slot positions: one compiled
+      shape for the whole run. Free lanes decode a dummy token whose
+      write lands in a free slot and is overwritten by the next prefill
+      before anything can attend it.
+
+Each call also returns the routed-expert backend this micro-batch runs
+(``microbatch_backend`` — the same policy ``routed_experts`` applies, with
+the phase threaded through model -> blocks -> engine), so the serving loop
+can report/assert grouped-prefill + gather-decode without instrumenting
+jitted code. None means the model has no routed experts.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.experts import microbatch_backend
+from repro.serving.cache import gather_slots, scatter_slots
+
+Array = jax.Array
+
+
+class StepExecutor:
+    def __init__(self, model):
+        self.model = model
+        # note: the cache is NOT donated — measured slower on CPU (the
+        # functional update already fuses; donation forced a layout copy)
+        self._prefill = jax.jit(self._prefill_impl)
+        self._decode = jax.jit(self._decode_impl)
+
+    def _backend(self, num_tokens: int, phase: str):
+        m = self.model
+        return microbatch_backend(m.cfg, num_tokens, phase,
+                                  use_kernel=m.use_kernel,
+                                  override=m.backend)
+
+    # ----------------------------------------------------------- prefill
+
+    def _prefill_impl(self, params, cache, tokens, slots, lengths):
+        # a fresh-slot prefill lives entirely in cache columns [0, S):
+        # gathering only that window keeps prefill attention O(S^2)
+        # instead of O(S * max_len)
+        s_pad = tokens.shape[1]
+        sub = gather_slots(cache, slots, width=s_pad)
+        logits, nsub = self.model.step(
+            params, tokens, sub, jnp.zeros_like(lengths),
+            lengths=lengths, phase="prefill")
+        return logits, scatter_slots(cache, slots, nsub, width=s_pad)
+
+    def prefill(self, params, cache, tokens: Array, slots: Array,
+                lengths: Array):
+        """Returns (logits (n, V) at each prompt's last valid token,
+        new_cache, backend)."""
+        logits, cache = self._prefill(params, cache, tokens, slots, lengths)
+        return logits, cache, self._backend(int(tokens.size), "prefill")
+
+    # ------------------------------------------------------------ decode
+
+    def _decode_impl(self, params, cache, tokens, positions):
+        return self.model.step(params, tokens, cache, positions,
+                               phase="decode")
+
+    def decode(self, params, cache, tokens: Array, positions: Array):
+        """Returns (logits (B, V), new_cache, backend)."""
+        logits, cache = self._decode(params, cache, tokens, positions)
+        return logits, cache, self._backend(int(tokens.shape[0]), "decode")

@@ -1,0 +1,46 @@
+"""Per-request state for the serving engine."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+QUEUED = "queued"
+RUNNING = "running"
+FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    The caller fills the first block (identity + workload); the engine
+    owns the runtime block and resets it at the start of every run, so a
+    request list can be replayed (benchmark warm-up reruns).
+    """
+    rid: int
+    prompt: list[int]
+    max_new: int                      # tokens to generate (incl. the first)
+    arrival: float = 0.0              # due time, in engine steps
+    eos_id: Optional[int] = None
+
+    # --- runtime (engine-owned) ---
+    state: str = QUEUED
+    slot: int = -1
+    generated: list[int] = dataclasses.field(default_factory=list)
+    admit_step: int = -1              # step the prompt was prefilled
+    finish_step: int = -1
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def done(self) -> bool:
+        return self.state == FINISHED
+
+    def reset(self) -> None:
+        self.state = QUEUED
+        self.slot = -1
+        self.generated = []
+        self.admit_step = -1
+        self.finish_step = -1

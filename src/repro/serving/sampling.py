@@ -1,0 +1,30 @@
+"""One sampling rule for every consumer.
+
+`launch.serve`'s main decode loop, its per-backend comparison runs, and
+the serving engine all build their pick-next-token fn here, so a
+per-backend tok/s comparison decodes under exactly the same rule (and,
+for temperature > 0, the same PRNG stream per seed) as the main run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_sampler(temperature: float = 0.0, seed: int = 0):
+    """Returns pick(logits (B, V)) -> (B,) int tokens.
+
+    temperature <= 0 is greedy argmax; otherwise temperature-scaled
+    categorical sampling with an internal key split per call — two
+    samplers built with the same (temperature, seed) replay the same
+    stream, which is what makes per-backend runs comparable.
+    """
+    if temperature <= 0:
+        return lambda logits: jnp.argmax(logits, axis=-1)
+    state = {"key": jax.random.PRNGKey(seed)}
+
+    def pick(logits):
+        state["key"], sub = jax.random.split(state["key"])
+        return jax.random.categorical(sub, logits / temperature, axis=-1)
+
+    return pick

@@ -1,0 +1,105 @@
+"""Request scheduler: admission queue, slot table, recycling.
+
+Pure host-side bookkeeping — no jax. The engine drives it with an integer
+step clock: ``admit(now)`` hands out free slots to requests whose arrival
+is due (FIFO by arrival, then rid), ``finish(req, step)`` recycles the
+slot for the next admission.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.serving.request import FINISHED, QUEUED, RUNNING, Request
+
+POLICIES = ("continuous", "static")
+
+
+class Scheduler:
+    """Slot-table scheduler.
+
+    policy:
+      continuous — a freed slot is reusable at the very next admission
+          (the engine's normal mode).
+      static     — admit only when ALL slots are free: the fixed-batch
+          baseline, where a batch drains fully (its slowest request)
+          before the next batch starts. Same machinery, same compiled
+          step functions — the honest comparison for the goodput bench.
+    max_prefill_tokens caps the summed prompt length admitted per step
+    (chunks a thundering herd of arrivals into successive micro-batches).
+    """
+
+    def __init__(self, max_slots: int, *, policy: str = "continuous",
+                 max_prefill_tokens: Optional[int] = None):
+        if policy not in POLICIES:
+            raise ValueError(f"policy {policy!r} not in {POLICIES}")
+        if max_slots < 1:
+            raise ValueError("max_slots must be >= 1")
+        self.max_slots = max_slots
+        self.policy = policy
+        self.max_prefill_tokens = max_prefill_tokens
+        self.reset()
+
+    def reset(self) -> None:
+        self.pending: list[Request] = []
+        self.slots: list[Optional[Request]] = [None] * self.max_slots
+        self.num_admitted = 0
+        self.slot_reuse = 0            # admissions into a previously-used slot
+        self._slot_used = [False] * self.max_slots
+
+    # ------------------------------------------------------------- queue
+
+    def submit(self, requests) -> None:
+        for r in requests:
+            if r.state != QUEUED:
+                raise ValueError(f"request {r.rid} already {r.state}")
+        self.pending.extend(requests)
+        self.pending.sort(key=lambda r: (r.arrival, r.rid))
+
+    @property
+    def free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.slots) if r is None]
+
+    def active(self) -> list[Request]:
+        return [r for r in self.slots if r is not None]
+
+    def all_done(self) -> bool:
+        return not self.pending and not self.active()
+
+    # --------------------------------------------------------- admission
+
+    def admit(self, now: float) -> list[Request]:
+        """Assign free slots to due requests; returns the admitted batch
+        (the step's prefill micro-batch), possibly empty."""
+        if self.policy == "static" and self.active():
+            return []
+        admitted: list[Request] = []
+        budget = self.max_prefill_tokens
+        tokens = 0
+        while self.pending and self.pending[0].arrival <= now:
+            free = self.free_slots
+            if not free:
+                break
+            req = self.pending[0]
+            if budget is not None and admitted and \
+                    tokens + req.prompt_len > budget:
+                break
+            self.pending.pop(0)
+            slot = free[0]
+            req.slot = slot
+            req.state = RUNNING
+            self.slots[slot] = req
+            if self._slot_used[slot]:
+                self.slot_reuse += 1
+            self._slot_used[slot] = True
+            self.num_admitted += 1
+            tokens += req.prompt_len
+            admitted.append(req)
+        return admitted
+
+    def finish(self, req: Request, step: int) -> None:
+        if self.slots[req.slot] is not req:
+            raise ValueError(f"request {req.rid} does not own slot "
+                             f"{req.slot}")
+        self.slots[req.slot] = None
+        req.state = FINISHED
+        req.finish_step = step

@@ -1,0 +1,48 @@
+"""Synthetic serving workloads: Poisson arrivals, mixed request lengths."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import numpy as np
+
+from repro.serving.request import Request
+
+
+def poisson_arrivals(n: int, rate: float, seed: int = 0) -> np.ndarray:
+    """n arrival times (engine steps, float) of a Poisson process with
+    `rate` arrivals per step. rate <= 0 or inf means all at t=0."""
+    if n <= 0:
+        return np.zeros(0)
+    if rate <= 0 or math.isinf(rate):
+        return np.zeros(n)
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate, size=n))
+
+
+def make_requests(n: int, vocab_size: int, *,
+                  prompt_range: tuple[int, int] = (16, 32),
+                  gen_range: tuple[int, int] = (4, 16),
+                  rate: float = 0.5,
+                  seed: int = 0,
+                  eos_id: Optional[int] = None) -> list[Request]:
+    """A mixed-length request set with staggered Poisson arrivals.
+
+    Prompt and generation lengths are uniform over the given inclusive
+    ranges — the length spread is what separates continuous from static
+    batching (static drains at the slowest request of each batch).
+    """
+    rng = np.random.default_rng(seed)
+    arrivals = poisson_arrivals(n, rate, seed=seed + 1)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(prompt_range[0], prompt_range[1] + 1))
+        gen = int(rng.integers(gen_range[0], gen_range[1] + 1))
+        prompt = rng.integers(0, vocab_size, size=plen).astype(np.int32)
+        if eos_id is not None:
+            prompt = np.where(prompt == eos_id, (eos_id + 1) % vocab_size,
+                              prompt)
+        reqs.append(Request(rid=i, prompt=[int(t) for t in prompt],
+                            max_new=gen, arrival=float(arrivals[i]),
+                            eos_id=eos_id))
+    return reqs
