@@ -1,27 +1,43 @@
-"""Serving goodput: static batching vs continuous batching.
+"""Serving benchmarks: goodput (static vs continuous batching) and
+decode-stall latency (unchunked vs chunked prefill).
 
-Runs the SAME mixed-length request set through the serving engine twice —
-policy="static" (admit a full batch, drain it to the slowest request,
-repeat: the classic fixed-batch loop) and policy="continuous" (a freed
-slot is re-prefilled on the next engine step while its neighbors keep
-decoding). Both policies execute identical compiled step functions, so
-the measured gap is pure scheduling: static wastes decode lanes on
-finished requests, continuous refills them.
+Section 1 — goodput. Runs the SAME mixed-length request set through the
+serving engine twice — policy="static" (admit a full batch, drain it to
+the slowest request, repeat) and policy="continuous" (a freed slot is
+re-prefilled on the next engine step while its neighbors keep decoding).
+Both policies execute identical compiled step functions, so the measured
+gap is pure scheduling.
+
+Section 2 — head-of-line blocking. Decode lanes run long generations
+while several LONG prompts (8x the prefill budget) arrive mid-flight.
+Unchunked, each long prompt's whole-prompt prefill is one O(S^2)
+micro-batch every decode lane waits on; chunked, it is split into
+budget-bounded per-step chunks interleaved with decode. Both runs serve
+identical requests with identical greedy streams — the comparison is
+p95 inter-token latency (the stall tail) at equal work. Token identity
+is gated for the dense default model; under --cmoe it additionally
+requires the grouped capacity policy not to drop (grouped drops are
+micro-batch-width-dependent, so a drop in ONE of the two runs
+legitimately forks the streams — see test_padded_prefill_takes_no_
+expert_capacity's note), which holds at the default smoke sizes.
 
     PYTHONPATH=src python benchmarks/bench_serving.py
     PYTHONPATH=src python benchmarks/bench_serving.py --slots 4 \
         --requests 12 --no-gate
+    PYTHONPATH=src python benchmarks/bench_serving.py --cmoe   # + backend split
 
-Arrivals are all-at-0 for both sides (static batching cannot admit
-mid-flight, so staggered arrivals would only penalize it further);
+Arrivals in section 1 are all-at-0 for both sides (static batching cannot
+admit mid-flight, so staggered arrivals would only penalize it further);
 the goodput gap comes from the generation-length spread.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import sys
 
 import jax
+import numpy as np
 
 
 def run_policy(model, params, policy, reqs, args):
@@ -40,38 +56,11 @@ def run_policy(model, params, policy, reqs, args):
     return best
 
 
-def main(argv=None):
+def bench_goodput(args) -> int:
     from repro.config import CMoEConfig, override
     from repro.configs import get_smoke_config
     from repro.models import build_model
     from repro.serving import make_requests
-
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen1.5-0.5b")
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=48,
-                    help="max generation length; per-request lengths are "
-                         "uniform over [gen/4, gen] — the spread static "
-                         "batching drains at the slowest of")
-    ap.add_argument("--d-model", type=int, default=256)
-    ap.add_argument("--layers", type=int, default=4,
-                    help="bench model size: big enough that per-step "
-                         "compute, not dispatch overhead, dominates — the "
-                         "policies run IDENTICAL step shapes, so the "
-                         "measured gap is step count (scheduling)")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--samples", type=int, default=5,
-                    help="timed runs per policy; best is reported")
-    ap.add_argument("--cmoe", action="store_true",
-                    help="use a random-init CMoE-layout model so the "
-                         "per-micro-batch backend split is exercised")
-    ap.add_argument("--no-gate", action="store_true",
-                    help="report only; don't exit nonzero when continuous "
-                         "fails to beat static (timings are noisy on "
-                         "shared runners)")
-    args = ap.parse_args(argv)
 
     cfg = override(get_smoke_config(args.arch), dtype="float32",
                    d_model=args.d_model, num_layers=args.layers,
@@ -81,7 +70,6 @@ def main(argv=None):
                                             top_k=2, k_activation=4))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
-
     reqs = make_requests(
         args.requests, cfg.vocab_size,
         prompt_range=(min(max(4, args.prompt_len // 2), args.prompt_len),
@@ -111,6 +99,166 @@ def main(argv=None):
         return 0
     print("RESULT: FAIL — continuous batching did not beat static")
     return 0 if args.no_gate else 1
+
+
+def bench_hol(args) -> int:
+    """Chunked vs unchunked prefill on a long-prompt-mixed-with-decode
+    workload; equal requests, token-identical greedy streams, the gap is
+    the decode-stall tail (TPOT p95).
+
+    Builds its own model at --hol-d-model (default 512): the stall signal
+    needs prefill COMPUTE to dominate per-step dispatch overhead, which
+    the tiny goodput-bench model does not at smoke scale. Under --cmoe
+    the two runs execute inside an activation-sharding policy whose
+    capacity_factor equals num_experts — a capacity the grouped backend
+    provably cannot overflow — because grouped capacity DROPS are
+    micro-batch-width-dependent (a 256-token prefill and a 32-token chunk
+    legitimately drop different tokens), and a drop in one run forks the
+    greedy streams for reasons orthogonal to the scheduling under test.
+    """
+    from repro.config import CMoEConfig, override
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+    from repro.serving import Request, ServingEngine
+
+    cfg = override(get_smoke_config(args.arch), dtype="float32",
+                   d_model=args.hol_d_model, num_layers=args.layers,
+                   d_ff=args.hol_d_model * 3)
+    if args.cmoe:
+        cfg = override(cfg, cmoe=CMoEConfig(num_experts=8, num_shared=2,
+                                            top_k=2, k_activation=4))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    budget = args.budget
+    long_len = 8 * budget
+    rng = np.random.default_rng(args.seed)
+    # short decode lanes: prompts small enough that their admission
+    # micro-batch stays on the drop-free gather path even under --cmoe,
+    # with long generations so they decode for the whole run
+    reqs = []
+    for i in range(args.slots):
+        prompt = rng.integers(0, cfg.vocab_size, 4).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=[int(t) for t in prompt],
+                            max_new=args.hol_gen, arrival=0.0))
+    # several long prompts spaced so each fully prefills before the next
+    # (one spare slot hosts them); >= 5% of decode gaps see a prefill, so
+    # p95 captures the stall in BOTH runs
+    n_long = max(2, args.hol_gen // 14)
+    for j in range(n_long):
+        prompt = rng.integers(0, cfg.vocab_size, long_len).astype(np.int32)
+        reqs.append(Request(rid=args.slots + j,
+                            prompt=[int(t) for t in prompt],
+                            max_new=4, arrival=4.0 + 14.0 * j))
+    max_len = long_len + args.hol_gen
+
+    def once(mpt):
+        # bucket at half the budget: short admissions share a step at the
+        # finer width class while long chunks still span the full budget
+        engine = ServingEngine(model, params, max_slots=args.slots + 1,
+                               max_len=max_len,
+                               prefill_bucket=max(8, budget // 2),
+                               max_prefill_tokens=mpt)
+        engine.run(reqs)                   # warm-up: compiles every shape
+        best = None
+        for _ in range(args.samples):
+            rep = engine.run(reqs)
+            if best is None or rep.wall_s < best.wall_s:
+                best = rep
+        return best
+
+    print(f"# head-of-line — {cfg.name} d={args.hol_d_model} "
+          f"slots={args.slots}+1 decode lanes, {n_long} long prompts of "
+          f"{long_len} tok (8x budget {budget}) mid-decode"
+          f"{' cmoe' if args.cmoe else ''}")
+    ctx = contextlib.nullcontext()
+    if args.cmoe:
+        # drop-free grouped capacity (see docstring): cap = min(cf*t*k/E+1,
+        # t*k) with cf=E can never overflow, so both runs keep identical
+        # streams while the chunks still exercise the grouped backend
+        from jax.sharding import Mesh
+        from repro.distributed.policy import activation_sharding
+        mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+        ctx = activation_sharding(mesh, seq_shard=False,
+                                  capacity_factor=float(
+                                      cfg.cmoe.num_experts))
+    with ctx:
+        un = once(None)
+        ch = once(budget)
+    for tag, r in (("unchunked", un), ("chunked", ch)):
+        print(f"{tag:>11}: TPOT p50/p95 {r.tpot_p50_s * 1e3:7.1f}/"
+              f"{r.tpot_p95_s * 1e3:7.1f} ms, max gap "
+              f"{max(r.decode_gaps_s) * 1e3:7.1f} ms, goodput "
+              f"{r.goodput:7.1f} tok/s, {r.steps} steps, mean TTFT "
+              f"{r.mean_ttft_steps:.1f}")
+
+    toks_un = {r.rid: tuple(r.generated) for r in un.requests}
+    toks_ch = {r.rid: tuple(r.generated) for r in ch.requests}
+    identical = toks_un == toks_ch
+    p95_cut = ch.tpot_p95_s < un.tpot_p95_s
+    goodput_held = ch.goodput >= 0.7 * un.goodput
+    ok = identical and p95_cut and goodput_held
+    print(f"RESULT: chunked p95 {'cut' if p95_cut else 'DID NOT cut'} "
+          f"({un.tpot_p95_s * 1e3:.1f} -> {ch.tpot_p95_s * 1e3:.1f} ms), "
+          f"tokens {'identical' if identical else 'DIVERGED'}, goodput "
+          f"{'held' if goodput_held else 'DROPPED'} "
+          f"({ch.goodput / max(un.goodput, 1e-9):.2f}x)")
+    if args.cmoe:
+        bc = ch.backend_counts
+        grouped_chunks = {"grouped_xla", "grouped_pallas"} & set(bc["prefill"])
+        decode_gather = set(bc["decode"]) == {"gather"}
+        print(f"RESULT: chunked backends prefill={dict(bc['prefill'])} "
+              f"decode={dict(bc['decode'])}")
+        ok = ok and bool(grouped_chunks) and decode_gather
+    if ok:
+        return 0
+    print("RESULT: FAIL — chunked prefill gate (see above)")
+    return 0 if args.no_gate else 1
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=48,
+                    help="max generation length; per-request lengths are "
+                         "uniform over [gen/4, gen] — the spread static "
+                         "batching drains at the slowest of")
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4,
+                    help="bench model size: big enough that per-step "
+                         "compute, not dispatch overhead, dominates — the "
+                         "policies run IDENTICAL step shapes, so the "
+                         "measured gap is step count (scheduling)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--samples", type=int, default=5,
+                    help="timed runs per policy; best is reported")
+    ap.add_argument("--budget", type=int, default=32,
+                    help="[hol] chunked-prefill token budget; long prompts "
+                         "are 8x this")
+    ap.add_argument("--hol-gen", type=int, default=56,
+                    help="[hol] decode-lane generation length")
+    ap.add_argument("--hol-d-model", type=int, default=512,
+                    help="[hol] model width for the head-of-line section "
+                         "(bigger than the goodput bench so prefill "
+                         "compute, not dispatch, dominates the stall)")
+    ap.add_argument("--cmoe", action="store_true",
+                    help="use a random-init CMoE-layout model so the "
+                         "per-micro-batch backend split is exercised")
+    ap.add_argument("--skip-goodput", action="store_true")
+    ap.add_argument("--skip-hol", action="store_true")
+    ap.add_argument("--no-gate", action="store_true",
+                    help="report only; don't exit nonzero when a gate "
+                         "fails (timings are noisy on shared runners)")
+    args = ap.parse_args(argv)
+
+    rc = 0
+    if not args.skip_goodput:
+        rc |= bench_goodput(args)
+    if not args.skip_hol:
+        rc |= bench_hol(args)
+    return rc
 
 
 if __name__ == "__main__":

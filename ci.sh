@@ -19,13 +19,22 @@ if [[ "${1:-}" != "--fast" ]]; then
     # decode micro-batches gather, all slots recycled to completion
     python -m repro.launch.serve --smoke --continuous --batch 4 \
         --requests 8 --rate 0.5 --prompt-len 32 --gen 8
+    echo "== smoke: chunked-prefill serve (long prompts, 16-token budget) =="
+    # long-prompt mix: prompts up to 32 tokens against a 16-token per-step
+    # prefill budget, so every long prompt prefills as interleaved chunks
+    # (grouped backend) while decode lanes keep stepping (gather backend)
+    python -m repro.launch.serve --smoke --continuous --batch 4 \
+        --requests 8 --rate 0.5 --prompt-len 32 --gen 8 \
+        --max-prefill-tokens 16
     echo "== smoke: decode backend bench (gather vs grouped) =="
     # --no-gate: CI asserts the bench RUNS; the speedup gate is timing-based
     # and too noisy to fail CI on a loaded runner (run without the flag to
     # enforce it)
     python benchmarks/bench_decode_backends.py --iters 5 --batches 1 4 8 \
         --no-gate
-    echo "== smoke: serving goodput bench (static vs continuous) =="
-    python benchmarks/bench_serving.py --requests 8 --no-gate
+    echo "== smoke: serving goodput + chunked-prefill HOL bench (cmoe) =="
+    # --cmoe exercises the per-micro-batch backend split in both sections
+    python benchmarks/bench_serving.py --requests 8 --cmoe --samples 2 \
+        --no-gate
 fi
 echo "CI OK"

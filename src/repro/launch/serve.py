@@ -5,12 +5,15 @@ timing loop. `--continuous` runs the continuous-batching engine on a
 staggered-arrival mixed-length request set: prompts prefill into freed
 slots while other slots keep decoding, prefill micro-batches run the
 grouped routed-expert backend and decode micro-batches the drop-free
-gather path.
+gather path. `--max-prefill-tokens` chunks long prompts across steps so
+prefill cannot stall decode lanes (head-of-line fix).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
         --cmoe S3A3E8 --batch 4 --prompt-len 32 --gen 16
     PYTHONPATH=src python -m repro.launch.serve --smoke --continuous \
         --batch 4 --requests 8 --rate 0.5 --gen 8
+    PYTHONPATH=src python -m repro.launch.serve --smoke --continuous \
+        --batch 4 --prompt-len 32 --gen 8 --max-prefill-tokens 16
 """
 from __future__ import annotations
 
@@ -42,7 +45,10 @@ def parse_sxayez(tag: str) -> CMoEConfig:
 
 
 def serve_continuous(model, params, args) -> int:
-    """Continuous-batching mode: Poisson arrivals, per-request lengths."""
+    """Continuous-batching mode: Poisson arrivals, per-request lengths.
+    --max-prefill-tokens bounds each step's prefill compute: prompts
+    longer than the budget are split into per-step chunks interleaved
+    with decode (the head-of-line fix; see serving.scheduler)."""
     cfg = model.cfg
     max_len = args.prompt_len + args.gen
     lo_p = min(max(4, args.prompt_len // 2), args.prompt_len)
@@ -52,10 +58,18 @@ def serve_continuous(model, params, args) -> int:
                          rate=args.rate, seed=args.seed)
     engine = ServingEngine(model, params, max_slots=args.batch,
                            max_len=max_len,
+                           max_prefill_tokens=args.max_prefill_tokens,
                            temperature=args.temperature, seed=args.seed)
     report = engine.run(reqs)
     print(f"[continuous] {report.summary()}")
     assert all(r.done for r in report.requests), "unfinished requests"
+    if args.max_prefill_tokens is not None:
+        n_chunks = len([1 for _, ph, _, _ in engine.backend_log
+                        if ph == "prefill"])
+        longest = max(r.prompt_len for r in report.requests)
+        print(f"[continuous] chunked prefill: budget "
+              f"{args.max_prefill_tokens} tok/step, longest prompt "
+              f"{longest}, {n_chunks} prefill micro-batches")
 
     # the acceptance contract: decode micro-batches on the gather path,
     # prefill micro-batches above the gather break-even on a grouped path.
@@ -108,6 +122,11 @@ def main(argv=None):
     ap.add_argument("--rate", type=float, default=0.5,
                     help="[--continuous] Poisson arrival rate "
                          "(requests per engine step; 0 = all at once)")
+    ap.add_argument("--max-prefill-tokens", type=int, default=None,
+                    help="[--continuous] per-step prefill token budget: "
+                         "longer prompts are chunked across steps so a "
+                         "long prompt cannot stall decode lanes "
+                         "(default: unlimited)")
     args = ap.parse_args(argv)
 
     if args.continuous and args.smoke and not args.cmoe:

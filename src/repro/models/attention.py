@@ -259,12 +259,16 @@ def ragged_attention(q: Array, k_cache: Array, v_cache: Array, *,
     """Multi-token attention against a cache with PER-SLOT query offsets.
 
     The serving prefill path: each batch lane b holds a different request
-    whose queries start at absolute position pos[b] (0 for a freshly
-    recycled slot), so one mask cannot be shared across the batch the way
-    the flash kernel's block mask is. Scores are materialized as
-    (B, H, S, T) — serving prefill micro-batches are short (a few prompts
-    x a prompt length), so this stays far below the flash crossover; long
-    uniform-offset prefill keeps using `chunked_attention`.
+    whose queries start at absolute position pos[b] — 0 for a freshly
+    recycled slot, the prefill cursor for a CHUNKED prefill resuming
+    mid-prompt (query i attends the already-filled cache prefix
+    [0, pos[b] + i], so a chunk sees exactly what the whole prompt would
+    have) — so one mask cannot be shared across the batch the way the
+    flash kernel's block mask is. Scores are materialized as
+    (B, H, S, T) — serving prefill micro-batches are short (a few chunks
+    x a budget-bounded width vs the gathered prefix window), so this
+    stays far below the flash crossover; long uniform-offset prefill
+    keeps using `chunked_attention`.
 
     q: (B, S, H, D); caches: (B, T, KH, Dk/Dv); pos: (B,) or scalar offset
     of q[:, 0]. Query i of lane b attends cache entries <= pos[b] + i.

@@ -26,8 +26,10 @@ class BlockCtx(NamedTuple):
     cache: Any                       # this layer's cache slice (or None)
     cache_pos: Optional[Array]       # write offset into cache: a scalar
     #   shared by the batch, or per-slot (B,) — the serving engine's
-    #   slot-aware step, where each lane reads/writes at its own depth
-    #   (attention routes through ragged/per-slot masks; see
+    #   slot-aware step, where each lane reads/writes at its own depth:
+    #   0 for a fresh prefill, the chunk cursor for a resumed chunked
+    #   prefill, the decode depth for a generation step (attention
+    #   routes through ragged/per-slot masks; see
     #   repro.models.attention.is_per_slot)
     window: Array | int              # sliding window (0 = full)
     causal: bool

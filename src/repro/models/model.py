@@ -376,11 +376,15 @@ class Model:
 
         Runs `tokens` (B, S) against `cache`, writing K/V at per-slot
         offsets `slot_pos`: a (B,) int32 vector giving each batch lane its
-        own write position (a freshly recycled slot prefills at 0 while
-        its neighbors keep decoding at their own depths), or a scalar
-        shared by the whole batch — the scalar form lowers to the original
-        chunked-flash / dynamic-slice path, so `prefill` and `decode_step`
-        are thin views over this method with zero cost.
+        own write position — a freshly recycled slot prefills at 0 while
+        its neighbors keep decoding at their own depths, and a CHUNKED
+        prefill resumes mid-prompt at its cursor (rope positions, ragged
+        attention masks, and cache writes all follow slot_pos + i, so a
+        chunk attends the slot's already-filled prefix exactly as the
+        whole prompt would have) — or a scalar shared by the whole batch:
+        the scalar form lowers to the original chunked-flash /
+        dynamic-slice path, so `prefill` and `decode_step` are thin views
+        over this method with zero cost.
 
         `phase` ("prefill" | "decode", default by S) is threaded to the
         routed-expert engine so every micro-batch picks its own backend

@@ -6,12 +6,17 @@ fixed-batch prefill-then-decode script into an engine that keeps every
 batch lane busy on mixed traffic. Three pieces, three contracts:
 
 ``Scheduler`` (`scheduler.py`)
-    Owns the admission queue and the slot table. Requests are submitted
-    with an arrival time (engine steps); ``admit(now)`` assigns free slots
-    to due requests (FIFO), ``finish(req)`` recycles the slot. Policy
-    "continuous" refills slots the moment they free; policy "static"
-    models the classic baseline — it only admits when *all* slots are
-    free, so a batch drains fully before the next one starts.
+    Owns the admission queue (arrival-sorted deque), the slot table, and
+    a free-slot min-heap. Requests are submitted with an arrival time
+    (engine steps); ``plan_prefill(now)`` builds the step's prefill plan
+    — resume partially-prefilled prompts, then admit due requests (FIFO)
+    into free slots — under the ``max_prefill_tokens`` budget, a TRUE
+    per-step cap (first admission included): longer prompts become
+    per-step chunks tracked by the ``PREFILLING`` state and the
+    ``Request.prefill_pos`` cursor. ``finish(req)`` recycles the slot.
+    Policy "continuous" refills slots the moment they free; policy
+    "static" models the classic baseline — it only admits when *all*
+    slots are free, so a batch drains fully before the next one starts.
 
 ``SlotKVCache`` (`cache.py`)
     The model KV cache (leaves stacked (L, B, T, ...), batch axis 1) plus
@@ -23,21 +28,28 @@ batch lane busy on mixed traffic. Three pieces, three contracts:
     occupant is never attended (proved by the parity tests).
 
 ``StepExecutor`` (`executor.py`)
-    jit-compiled step functions over ``Model.step``. Prefill micro-batches
-    gather the admitted slots' cache rows, run the slot-aware step
-    (per-slot position 0, right-padded prompts with per-row lengths), and
-    scatter back; decode micro-batches run full-width over all slots with
-    per-slot positions. Each call reports the routed-expert backend the
-    engine ran (``core.experts.microbatch_backend`` — the same policy
+    jit-compiled step functions over ``Model.step``. A prefill
+    micro-batch is one CHUNK per row: it gathers the slots' prefix
+    window [0, hist), runs the slot-aware step at per-slot START
+    positions (0 for a fresh or recycled slot, the cursor for a resumed
+    chunk; right-padded with per-row lengths), and scatters back only
+    each row's write window [start, start+width). Decode micro-batches
+    run full-width over all slots with per-slot positions. Each call
+    reports the routed-expert backend the engine ran
+    (``core.experts.microbatch_backend`` — the same policy
     ``routed_experts`` executes): grouped for prefill chunks, drop-free
     gather for decode.
 
 ``ServingEngine`` (`engine.py`)
-    The loop: each iteration admits due requests, prefills them as one
-    micro-batch, then decodes every active slot; finished requests
+    The loop: each iteration takes the scheduler's prefill plan (resume
+    chunks + new admissions, budget-bounded), runs it as one prefill
+    micro-batch — width-1 chunks piggyback on the decode dispatch
+    instead — then decodes every RUNNING slot; finished requests
     (EOS / max_new / max_len) free their slots. Returns an
-    ``EngineReport`` with goodput, TTFT, slot utilization, slot-reuse
-    count, and the per-micro-batch backend log.
+    ``EngineReport`` with goodput, TTFT (arrival to first token), TPOT
+    p50/p95 decode-gap percentiles (the head-of-line stall signal
+    chunked prefill bounds), slot utilization, slot-reuse count, and the
+    per-micro-batch backend log.
 
 CLI usage (``repro.launch.serve`` is a thin shell over this package)::
 

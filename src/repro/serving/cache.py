@@ -13,31 +13,53 @@ read. (tests/test_serving.py proves prefill-into-dirty-slot parity.)
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 Array = jax.Array
 
 
-def gather_slots(cache, slot_idx: Array, width: int | None = None):
+def gather_slots(cache, slot_idx: Array, width: int | None = None,
+                 start: Array | None = None):
     """Pull slot rows out of every cache leaf: (L, B, ...) -> (L, n, ...).
 
     width limits the sequence axis (axis 2 for every layout the engine
-    serves: GQA (L, B, T, KH, hd), MLA latents (L, B, T, r)) to the first
-    `width` entries — a prefill at per-slot position 0 provably never
-    reads or writes beyond its padded prompt length, so gathering the
-    full max_len column range would only waste attention compute."""
+    serves: GQA (L, B, T, KH, hd), MLA latents (L, B, T, r)) to `width`
+    entries. With start=None that is the PREFIX window [0, width): a
+    prefill chunk at per-slot positions p attends the whole already-filled
+    prefix, so the executor gathers [0, hist) with hist >= max(p) + chunk
+    width instead of the full max_len column range. `start` (n,) int32
+    shifts each row's window to [start[i], start[i] + width) — the
+    chunked-prefill WRITE window, used to slice a chunk's freshly written
+    columns out of the updated sub-cache (out-of-range columns clamp; the
+    engine only reads windows it wrote)."""
     if width is None:
         return jax.tree.map(lambda a: a[:, slot_idx], cache)
-    return jax.tree.map(lambda a: a[:, slot_idx, :width], cache)
+    if start is None:
+        return jax.tree.map(lambda a: a[:, slot_idx, :width], cache)
+    rows = jnp.asarray(slot_idx)[:, None]                    # (n, 1)
+    cols = jnp.asarray(start)[:, None] + jnp.arange(width)   # (n, w)
+    return jax.tree.map(lambda a: a[:, rows, cols], cache)
 
 
-def scatter_slots(cache, slot_idx: Array, sub, width: int | None = None):
-    """Write gathered rows back: the functional inverse of gather_slots."""
+def scatter_slots(cache, slot_idx: Array, sub, width: int | None = None,
+                  start: Array | None = None):
+    """Write gathered rows back: the functional inverse of gather_slots.
+
+    With `start`, row i of `sub` lands in columns [start[i], start[i] +
+    width) of its slot lane; columns past max_len are dropped (a padded
+    chunk tail may spill — those entries are rewritten by the slot's next
+    chunk or decode step before any mask can reach them)."""
     if width is None:
         return jax.tree.map(lambda a, s: a.at[:, slot_idx].set(s),
                             cache, sub)
-    return jax.tree.map(lambda a, s: a.at[:, slot_idx, :width].set(s),
-                        cache, sub)
+    if start is None:
+        return jax.tree.map(lambda a, s: a.at[:, slot_idx, :width].set(s),
+                            cache, sub)
+    rows = jnp.asarray(slot_idx)[:, None]
+    cols = jnp.asarray(start)[:, None] + jnp.arange(width)
+    return jax.tree.map(
+        lambda a, s: a.at[:, rows, cols].set(s, mode="drop"), cache, sub)
 
 
 class SlotKVCache:

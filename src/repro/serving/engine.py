@@ -1,16 +1,26 @@
-"""The continuous-batching serving loop.
+"""The continuous-batching serving loop, with chunked prefill.
 
 Each engine iteration:
-  1. admit due requests into free slots and prefill them as ONE
-     micro-batch (right-padded to a length bucket, per-row valid lengths,
-     per-slot position 0 — recycled slots restart at the bottom of their
-     lane);
-  2. decode every active slot full-width with per-slot positions;
-  3. finish requests on EOS / max_new / max_len and recycle their slots.
+  1. plan prefill work under the `max_prefill_tokens` budget: resume
+     partially-prefilled prompts (state PREFILLING, cursor
+     `Request.prefill_pos`), then admit due requests into free slots while
+     budget remains — a long prompt becomes a sequence of per-step chunks
+     instead of one O(S^2) stall;
+  2. run the planned chunks as ONE prefill micro-batch (right-padded to a
+     width bucket, per-row valid lengths, per-slot START positions — a
+     resumed chunk lands at its cursor, a fresh or recycled slot at 0);
+     width-1 chunks piggyback on the decode micro-batch instead (same
+     (B, 1) shape — their compute rides a dispatch that runs anyway);
+  3. decode every RUNNING slot full-width with per-slot positions;
+  4. finish requests on EOS / max_new / max_len and recycle their slots.
 
 The phase is threaded per micro-batch down to the routed-expert engine,
 so prefill chunks run the grouped backend while decode steps run the
 drop-free gather path — `backend_log` records what each micro-batch ran.
+Decode-stall telemetry: the wall gap between consecutive decode steps is
+the inter-token latency every decode lane paid that step (a prefill chunk
+dispatched between them lands inside the gap — the head-of-line signal
+chunking bounds); `EngineReport` summarizes the gaps as TPOT p50/p95.
 """
 from __future__ import annotations
 
@@ -24,7 +34,7 @@ import numpy as np
 
 from repro.serving.cache import SlotKVCache
 from repro.serving.executor import StepExecutor
-from repro.serving.request import Request
+from repro.serving.request import RUNNING, Request
 from repro.serving.sampling import make_sampler
 from repro.serving.scheduler import Scheduler
 
@@ -36,9 +46,14 @@ class EngineReport:
     wall_s: float
     total_new_tokens: int
     mean_ttft_steps: float          # arrival -> first token, in steps
-    slot_busy_frac: float           # busy lanes / (steps * max_slots)
+    slot_busy_frac: float           # occupied lanes / (steps * max_slots)
     slot_reuse: int                 # admissions that recycled a used slot
     backend_counts: dict            # phase -> Counter of backends run
+    decode_gaps_s: list             # wall gap between consecutive decode
+    #   steps — the inter-token latency every decode lane paid that step
+    #   (prefill chunks dispatched between two decode steps are inside
+    #   the gap: the head-of-line stall chunked prefill bounds). The
+    #   chain breaks across idle periods, so arrival gaps don't count.
     requests: list[Request]         # SNAPSHOTS of end-of-run state — a
     #   later engine.run() on the same request list resets/mutates the
     #   live objects, but not these copies
@@ -48,14 +63,28 @@ class EngineReport:
         """Generated tokens per wall-clock second."""
         return self.total_new_tokens / max(self.wall_s, 1e-9)
 
+    @property
+    def tpot_p50_s(self) -> float:
+        """Median time-per-output-token (decode-step gap)."""
+        return float(np.percentile(self.decode_gaps_s, 50)) \
+            if self.decode_gaps_s else 0.0
+
+    @property
+    def tpot_p95_s(self) -> float:
+        """p95 inter-token latency — the decode-stall tail a long
+        prompt's unchunked prefill inflates."""
+        return float(np.percentile(self.decode_gaps_s, 95)) \
+            if self.decode_gaps_s else 0.0
+
     def summary(self) -> str:
         bc = {ph: dict(c) for ph, c in self.backend_counts.items()}
         return (f"{self.num_requests} requests in {self.steps} steps / "
                 f"{self.wall_s:.2f}s: {self.total_new_tokens} tokens, "
                 f"goodput {self.goodput:.1f} tok/s, mean TTFT "
-                f"{self.mean_ttft_steps:.1f} steps, slot busy "
-                f"{self.slot_busy_frac * 100:.0f}%, slot reuse "
-                f"{self.slot_reuse}, backends {bc}")
+                f"{self.mean_ttft_steps:.1f} steps, TPOT p50/p95 "
+                f"{self.tpot_p50_s * 1e3:.1f}/{self.tpot_p95_s * 1e3:.1f} "
+                f"ms, slot busy {self.slot_busy_frac * 100:.0f}%, slot "
+                f"reuse {self.slot_reuse}, backends {bc}")
 
 
 class ServingEngine:
@@ -67,6 +96,9 @@ class ServingEngine:
     policy="static" turns the same machinery into the fixed-batch
     baseline (admit only when all slots are free) — used by the goodput
     benchmark so both sides run identical compiled steps.
+    max_prefill_tokens is a true per-step prefill token budget: prompts
+    longer than it are split into per-step chunks interleaved with decode
+    (None = whole prompts in one micro-batch).
     """
 
     def __init__(self, model, params, *, max_slots: int, max_len: int,
@@ -88,8 +120,18 @@ class ServingEngine:
         self.temperature = temperature
         self.seed = seed
         self.executor = StepExecutor(model)
+        # one padding granule shared with the scheduler, so the planner's
+        # padded-compute budget accounting matches what actually runs
+        self._granule = self.prefill_bucket if max_prefill_tokens is None \
+            else min(self.prefill_bucket, max_prefill_tokens)
         self.scheduler = Scheduler(max_slots, policy=policy,
-                                   max_prefill_tokens=max_prefill_tokens)
+                                   max_prefill_tokens=max_prefill_tokens,
+                                   prefill_granule=self._granule)
+        # built once: at temperature>0 the keyed sampler is a jitted
+        # closure, and rebuilding it per run() would retrace inside the
+        # timed window (the engine always samples in keyed mode, which is
+        # stateless, so reuse across runs is exact)
+        self._sampler = make_sampler(temperature, seed)
         self.kv: Optional[SlotKVCache] = None
         self.backend_log: list[tuple[int, str, int, Optional[str]]] = []
 
@@ -109,10 +151,12 @@ class ServingEngine:
         self.scheduler.reset()
         self.kv = SlotKVCache(self.model, self.max_slots, self.max_len)
         self.backend_log = []
-        self._sampler = make_sampler(self.temperature, self.seed)
+        self._decode_gaps: list[float] = []
+        self._last_decode_t: Optional[float] = None
         if max_steps is None:
-            # every iteration with an active slot emits >= 1 token, so the
-            # loop is bounded by total work + the arrival horizon
+            # every iteration with occupied slots prefills >= 1 prompt
+            # token or decodes >= 1 token, so the loop is bounded by
+            # total work + the arrival horizon
             horizon = max((r.arrival for r in requests), default=0.0)
             max_steps = int(horizon) + sum(
                 r.prompt_len + r.max_new for r in requests) + 16
@@ -122,20 +166,29 @@ class ServingEngine:
         busy = 0
         t0 = time.perf_counter()
         while not self.scheduler.all_done():
-            admitted = self.scheduler.admit(step)
-            if admitted:
-                self._prefill_microbatch(admitted, step)
-            active = self.scheduler.active()
-            busy += len(active)
-            if active:
-                self._decode_microbatch(step)
+            plan = self.scheduler.plan_prefill(step)
+            # width-1 chunks ride the decode micro-batch (same (B, 1)
+            # shape) when decode lanes are live — no extra dispatch
+            decode_live = bool(self.scheduler.active())
+            piggy = [(r, c) for r, c in plan if c == 1 and decode_live]
+            chunks = [(r, c) for r, c in plan if not (c == 1 and
+                                                      decode_live)]
+            if chunks:
+                self._prefill_microbatch(chunks, step)
+            busy += len(self.scheduler.occupied())
+            if self.scheduler.active() or piggy:
+                self._decode_microbatch(step, piggy)
+            else:
+                # no decode lanes this step: an idle/arrival or pure-
+                # prefill-rampup gap, not a stall any token waited on
+                self._last_decode_t = None
             step += 1
             if step > max_steps:
                 raise RuntimeError(f"engine made no progress in "
                                    f"{max_steps} steps")
         wall = time.perf_counter() - t0
 
-        ttft = [r.admit_step - r.arrival for r in requests]
+        ttft = [r.first_token_step - r.arrival for r in requests]
         return EngineReport(
             num_requests=len(requests),
             steps=step,
@@ -145,6 +198,7 @@ class ServingEngine:
             slot_busy_frac=busy / max(step * self.max_slots, 1),
             slot_reuse=self.scheduler.slot_reuse,
             backend_counts=self.backend_counts(),
+            decode_gaps_s=list(self._decode_gaps),
             requests=[dataclasses.replace(r, generated=list(r.generated))
                       for r in requests],
         )
@@ -157,49 +211,105 @@ class ServingEngine:
 
     # ------------------------------------------------------ micro-batches
 
-    def _bucket(self, n: int) -> int:
-        b = self.prefill_bucket
-        return min(((n + b - 1) // b) * b, self.max_len)
+    def _chunk_width(self, w: int) -> int:
+        """Pad a chunk micro-batch to the shared planning granule. The
+        scheduler charges every planned row this padded width against the
+        granule-rounded budget (see Scheduler.plan_prefill), so
+        n_rows x padded width never exceeds one budget of compute."""
+        g = self._granule
+        return min(((w + g - 1) // g) * g, self.max_len)
 
-    def _prefill_microbatch(self, admitted: list[Request],
+    def _hist_width(self, start_max: int, w_pad: int) -> int:
+        """Gathered prefix window for a chunk micro-batch. All-fresh rows
+        (start 0) need exactly the chunk width — the classic whole-prompt
+        prefill. Resumed chunks need [0, start + width); that is bucket-
+        rounded then grown in powers of two so a long prompt's cursor
+        positions compile O(log S) prefill shapes instead of one each."""
+        if start_max == 0:
+            return w_pad
+        b = self.prefill_bucket
+        h = ((start_max + w_pad + b - 1) // b) * b
+        p = b
+        while p < h:
+            p *= 2
+        return min(p, self.max_len)
+
+    def _prefill_microbatch(self, chunks: list[tuple[Request, int]],
                             step: int) -> None:
-        n = len(admitted)
-        s_pad = self._bucket(max(r.prompt_len for r in admitted))
-        tokens = np.zeros((n, s_pad), np.int32)
+        n = len(chunks)
+        w_pad = self._chunk_width(max(c for _, c in chunks))
+        tokens = np.zeros((n, w_pad), np.int32)
         lengths = np.zeros(n, np.int32)
         slots = np.zeros(n, np.int32)
-        for i, r in enumerate(admitted):
-            tokens[i, :r.prompt_len] = r.prompt
-            lengths[i] = r.prompt_len
+        starts = np.zeros(n, np.int32)
+        rids = np.zeros(n, np.int32)
+        tidx = np.zeros(n, np.int32)
+        for i, (r, c) in enumerate(chunks):
+            tokens[i, :c] = r.prompt[r.prefill_pos:r.prefill_pos + c]
+            lengths[i] = c
             slots[i] = r.slot
-            r.admit_step = step
+            starts[i] = r.prefill_pos
+            rids[i] = r.rid
+            if r.admit_step < 0:
+                r.admit_step = step
+        hist = self._hist_width(int(starts.max()), w_pad)
         logits, cache, backend = self.executor.prefill(
             self.params, self.kv.cache, jnp.asarray(tokens),
-            jnp.asarray(slots), jnp.asarray(lengths))
+            jnp.asarray(slots), jnp.asarray(lengths), jnp.asarray(starts),
+            hist=hist)
         self.kv.cache = cache
-        self.kv.lengths[slots] = lengths
-        self.backend_log.append((step, "prefill", n * s_pad, backend))
-        first = np.asarray(self._sampler(logits))
-        for i, r in enumerate(admitted):
-            self._emit(r, int(first[i]), step)
+        self.backend_log.append((step, "prefill", n * w_pad, backend))
+        first = np.asarray(self._sampler(logits, rids, tidx))
+        for i, (r, c) in enumerate(chunks):
+            r.prefill_pos += c
+            self.kv.lengths[r.slot] = r.prefill_pos
+            if r.prefill_pos == r.prompt_len:
+                self.scheduler.prefill_done(r)
+                r.first_token_step = step
+                self._emit(r, int(first[i]), step)
 
-    def _decode_microbatch(self, step: int) -> None:
+    def _decode_microbatch(self, step: int,
+                           piggy: list[tuple[Request, int]]) -> None:
         tokens = np.zeros((self.max_slots, 1), np.int32)
+        rids = np.zeros(self.max_slots, np.int32)
+        tidx = np.zeros(self.max_slots, np.int32)
         for slot, r in enumerate(self.scheduler.slots):
-            if r is not None:
+            if r is not None and r.state == RUNNING:
                 tokens[slot, 0] = r.generated[-1]
+                rids[slot] = r.rid
+                tidx[slot] = len(r.generated)
+        for r, _ in piggy:
+            # a width-1 prefill chunk riding the decode dispatch: feed the
+            # next prompt token at the slot's cursor; its logits row is
+            # the request's FIRST sampled token when the prompt completes
+            tokens[r.slot, 0] = r.prompt[r.prefill_pos]
+            rids[r.slot] = r.rid
+            tidx[r.slot] = 0
+            if r.admit_step < 0:
+                r.admit_step = step
         positions = self.kv.positions()
         logits, cache, backend = self.executor.decode(
             self.params, self.kv.cache, jnp.asarray(tokens),
             jnp.asarray(positions))
         self.kv.cache = cache
         self.backend_log.append((step, "decode", self.max_slots, backend))
-        nxt = np.asarray(self._sampler(logits))
+        nxt = np.asarray(self._sampler(logits, rids, tidx))
+        now = time.perf_counter()
+        if self._last_decode_t is not None:
+            self._decode_gaps.append(now - self._last_decode_t)
+        self._last_decode_t = now
         for slot, r in enumerate(self.scheduler.slots):
-            if r is None:
+            if r is None or r.state != RUNNING:
                 continue
             self.kv.lengths[slot] += 1      # the input token's K/V landed
             self._emit(r, int(nxt[slot]), step)
+        for r, _ in piggy:
+            self.kv.lengths[r.slot] += 1
+            r.prefill_pos += 1
+            if r.prefill_pos == r.prompt_len:
+                self.scheduler.prefill_done(r)
+                r.first_token_step = step
+                self._emit(r, int(nxt[r.slot]), step)
 
     def _emit(self, req: Request, token: int, step: int) -> None:
         req.generated.append(token)

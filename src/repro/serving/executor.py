@@ -2,17 +2,24 @@
 
 Two compiled shapes do all the work:
 
-  prefill(tokens (n, S), slots (n,), lengths (n,))
-      gathers the admitted slots' cache rows, runs the slot-aware step at
-      per-slot position 0 (fresh or recycled slots both start there), and
-      scatters the filled rows back. Compiled once per (n, S) bucket — the
-      engine right-pads prompts to a length bucket to bound recompiles.
+  prefill(tokens (n, W), slots (n,), lengths (n,), starts (n,), hist)
+      one prefill CHUNK per row: row i covers prompt positions
+      [starts[i], starts[i] + lengths[i]) of its slot (0 for a fresh or
+      freshly recycled slot — the classic whole-prompt prefill is the
+      starts==0 special case). The executor gathers the first `hist`
+      cache columns of the admitted slots (hist >= max(starts) + W, so a
+      chunk's queries see the whole already-filled prefix), runs the
+      slot-aware step at per-slot start positions, and scatters back ONLY
+      the chunk's write window [start, start+W) per row. Compiled once
+      per (n, W, hist) bucket — the engine rounds W and hist to bound
+      recompiles.
 
   decode(tokens (B, 1), positions (B,))
       full-width over ALL slots with per-slot positions: one compiled
       shape for the whole run. Free lanes decode a dummy token whose
       write lands in a free slot and is overwritten by the next prefill
-      before anything can attend it.
+      before anything can attend it; a PREFILLING lane idling this step
+      likewise has its dummy write overwritten by its own next chunk.
 
 Each call also returns the routed-expert backend this micro-batch runs
 (``microbatch_backend`` — the same policy ``routed_experts`` applies, with
@@ -21,6 +28,8 @@ can report/assert grouped-prefill + gather-decode without instrumenting
 jitted code. None means the model has no routed experts.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +45,8 @@ class StepExecutor:
         self.model = model
         # note: the cache is NOT donated — measured slower on CPU (the
         # functional update already fuses; donation forced a layout copy)
-        self._prefill = jax.jit(self._prefill_impl)
+        self._prefill = jax.jit(self._prefill_impl,
+                                static_argnames=("hist",))
         self._decode = jax.jit(self._decode_impl)
 
     def _backend(self, num_tokens: int, phase: str):
@@ -47,22 +57,39 @@ class StepExecutor:
 
     # ----------------------------------------------------------- prefill
 
-    def _prefill_impl(self, params, cache, tokens, slots, lengths):
-        # a fresh-slot prefill lives entirely in cache columns [0, S):
-        # gathering only that window keeps prefill attention O(S^2)
-        # instead of O(S * max_len)
-        s_pad = tokens.shape[1]
-        sub = gather_slots(cache, slots, width=s_pad)
-        logits, nsub = self.model.step(
-            params, tokens, sub, jnp.zeros_like(lengths),
-            lengths=lengths, phase="prefill")
-        return logits, scatter_slots(cache, slots, nsub, width=s_pad)
+    def _prefill_impl(self, params, cache, tokens, slots, lengths, starts,
+                      hist):
+        # gather the prefix window [0, hist): a chunk at per-slot start
+        # positions attends everything its slot already holds, and hist
+        # covers max(starts) + chunk width — O(W * hist) attention
+        # instead of O(W * max_len)
+        w = tokens.shape[1]
+        sub = gather_slots(cache, slots, width=hist)
+        logits, nsub = self.model.step(params, tokens, sub, starts,
+                                       lengths=lengths, phase="prefill")
+        # only the chunk's write window changed: slice it back out of the
+        # updated sub-cache and scatter just those columns
+        chunk = gather_slots(nsub, jnp.arange(tokens.shape[0]), width=w,
+                             start=starts)
+        return logits, scatter_slots(cache, slots, chunk, width=w,
+                                     start=starts)
 
     def prefill(self, params, cache, tokens: Array, slots: Array,
-                lengths: Array):
-        """Returns (logits (n, V) at each prompt's last valid token,
-        new_cache, backend)."""
-        logits, cache = self._prefill(params, cache, tokens, slots, lengths)
+                lengths: Array, starts: Optional[Array] = None,
+                hist: Optional[int] = None):
+        """Run one prefill-chunk micro-batch.
+
+        starts (n,) are each row's absolute cache start position (default
+        all-zero: the whole-prompt case); `hist` is the static gathered
+        prefix width (default: the chunk width — correct only when all
+        starts are 0). Returns (logits (n, V) at each row's last valid
+        chunk token, new_cache, backend)."""
+        if starts is None:
+            starts = jnp.zeros_like(lengths)
+        if hist is None:
+            hist = tokens.shape[1]
+        logits, cache = self._prefill(params, cache, tokens, slots,
+                                      lengths, starts, hist=hist)
         return logits, cache, self._backend(int(tokens.size), "prefill")
 
     # ------------------------------------------------------------ decode

@@ -5,7 +5,8 @@ import dataclasses
 from typing import Optional
 
 QUEUED = "queued"
-RUNNING = "running"
+PREFILLING = "prefilling"     # admitted to a slot, prompt partially in cache
+RUNNING = "running"           # prompt fully prefilled, decoding
 FINISHED = "finished"
 
 
@@ -16,6 +17,14 @@ class Request:
     The caller fills the first block (identity + workload); the engine
     owns the runtime block and resets it at the start of every run, so a
     request list can be replayed (benchmark warm-up reruns).
+
+    Lifecycle: QUEUED -> PREFILLING -> RUNNING -> FINISHED. A request
+    sits in PREFILLING while its prompt is fed to the cache in per-step
+    chunks bounded by the scheduler's ``max_prefill_tokens`` budget;
+    ``prefill_pos`` is the progress cursor (prompt tokens already written
+    to the KV cache). When the budget is unlimited the whole prompt is
+    one chunk and the state passes through PREFILLING within a single
+    engine step.
     """
     rid: int
     prompt: list[int]
@@ -27,7 +36,9 @@ class Request:
     state: str = QUEUED
     slot: int = -1
     generated: list[int] = dataclasses.field(default_factory=list)
-    admit_step: int = -1              # step the prompt was prefilled
+    prefill_pos: int = 0              # prompt tokens already in the cache
+    admit_step: int = -1              # step the request got its slot
+    first_token_step: int = -1        # step the first token was sampled
     finish_step: int = -1
 
     @property
@@ -42,5 +53,7 @@ class Request:
         self.state = QUEUED
         self.slot = -1
         self.generated = []
+        self.prefill_pos = 0
         self.admit_step = -1
+        self.first_token_step = -1
         self.finish_step = -1

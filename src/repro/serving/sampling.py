@@ -12,19 +12,45 @@ import jax.numpy as jnp
 
 
 def make_sampler(temperature: float = 0.0, seed: int = 0):
-    """Returns pick(logits (B, V)) -> (B,) int tokens.
+    """Returns pick(logits (B, V)[, rids (B,), token_idx (B,)]) -> (B,).
 
-    temperature <= 0 is greedy argmax; otherwise temperature-scaled
-    categorical sampling with an internal key split per call — two
-    samplers built with the same (temperature, seed) replay the same
-    stream, which is what makes per-backend runs comparable.
+    temperature <= 0 is greedy argmax. For temperature > 0 two keying
+    modes share the same base key:
+
+      pick(logits) — stream mode: an internal key split per call. Two
+        samplers built with the same (temperature, seed) replay the same
+        stream — what makes `launch.serve`'s per-backend decode loops
+        comparable, where every call sees the same fixed batch.
+
+      pick(logits, rids, token_idx) — SCHEDULE-INVARIANT mode (the
+        serving engine): row i draws with
+        fold_in(fold_in(key, rids[i]), token_idx[i]), so a request's
+        sampled stream depends only on (rid, token index) — never on
+        which step, slot, or micro-batch composition the token was
+        sampled under. That is what makes continuous==static and
+        chunked==unchunked token parity hold beyond greedy. Rows the
+        caller discards (free/dummy lanes) may carry any key.
     """
     if temperature <= 0:
-        return lambda logits: jnp.argmax(logits, axis=-1)
-    state = {"key": jax.random.PRNGKey(seed)}
+        def greedy(logits, rids=None, token_idx=None):
+            return jnp.argmax(logits, axis=-1)
+        return greedy
 
-    def pick(logits):
-        state["key"], sub = jax.random.split(state["key"])
-        return jax.random.categorical(sub, logits / temperature, axis=-1)
+    base = jax.random.PRNGKey(seed)
+    state = {"key": base}
+
+    @jax.jit
+    def keyed(logits, rids, token_idx):
+        def row(lg, rid, ti):
+            k = jax.random.fold_in(jax.random.fold_in(base, rid), ti)
+            return jax.random.categorical(k, lg / temperature, axis=-1)
+        return jax.vmap(row)(logits, rids, token_idx)
+
+    def pick(logits, rids=None, token_idx=None):
+        if rids is None:
+            state["key"], sub = jax.random.split(state["key"])
+            return jax.random.categorical(sub, logits / temperature, axis=-1)
+        return keyed(logits, jnp.asarray(rids, jnp.uint32),
+                     jnp.asarray(token_idx, jnp.uint32))
 
     return pick

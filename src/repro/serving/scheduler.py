@@ -1,21 +1,30 @@
-"""Request scheduler: admission queue, slot table, recycling.
+"""Request scheduler: admission queue, slot table, chunked-prefill plan.
 
 Pure host-side bookkeeping — no jax. The engine drives it with an integer
-step clock: ``admit(now)`` hands out free slots to requests whose arrival
-is due (FIFO by arrival, then rid), ``finish(req, step)`` recycles the
-slot for the next admission.
+step clock: ``plan_prefill(now)`` resumes partially-prefilled requests and
+hands out free slots to due requests (FIFO by arrival, then rid), splitting
+prompts into per-step chunks bounded by ``max_prefill_tokens``;
+``prefill_done(req)`` promotes a fully-prefilled request to a decode lane;
+``finish(req, step)`` recycles the slot for the next admission.
+
+Data structures are O(log max_slots) per admission: free slots live in a
+min-heap (lowest slot index first, matching the historical fill order) and
+the pending queue is an arrival-sorted deque popped from the left.
 """
 from __future__ import annotations
 
+import heapq
+from collections import deque
 from typing import Optional
 
-from repro.serving.request import FINISHED, QUEUED, RUNNING, Request
+from repro.serving.request import (FINISHED, PREFILLING, QUEUED, RUNNING,
+                                   Request)
 
 POLICIES = ("continuous", "static")
 
 
 class Scheduler:
-    """Slot-table scheduler.
+    """Slot-table scheduler with a chunked-prefill planner.
 
     policy:
       continuous — a freed slot is reusable at the very next admission
@@ -24,24 +33,51 @@ class Scheduler:
           baseline, where a batch drains fully (its slowest request)
           before the next batch starts. Same machinery, same compiled
           step functions — the honest comparison for the goodput bench.
-    max_prefill_tokens caps the summed prompt length admitted per step
-    (chunks a thundering herd of arrivals into successive micro-batches).
+
+    max_prefill_tokens is a TRUE per-step budget on prefill COMPUTE, the
+    first admitted request included. A prompt longer than the budget is
+    split into per-step chunks (request state PREFILLING, progress cursor
+    ``Request.prefill_pos``) which the engine interleaves with decode —
+    so a long prompt can never stall decode lanes for more than one
+    budget's worth of prefill compute, yet every step with pending work
+    still makes progress (the first planned chunk is never empty).
+    Partially-prefilled requests are resumed, in admission order, before
+    any new request is admitted. None = unlimited (whole prompts are
+    planned as single chunks).
+
+    prefill_granule is the engine's micro-batch padding unit: every
+    planned row is padded to the widest chunk's granule-rounded width, so
+    the plan charges each row that PADDED width and caps the total at the
+    granule-rounded budget — n_rows x padded_width never exceeds
+    round_up(max_prefill_tokens, granule), which is exactly the budget
+    whenever the budget is a granule multiple (sum of REAL chunk tokens
+    is capped by the same bound). The first chunk sets the step's width
+    class (up to the whole budget — a resumed long prompt comes first and
+    gets full throughput); later rows are capped at that width.
     """
 
     def __init__(self, max_slots: int, *, policy: str = "continuous",
-                 max_prefill_tokens: Optional[int] = None):
+                 max_prefill_tokens: Optional[int] = None,
+                 prefill_granule: int = 1):
         if policy not in POLICIES:
             raise ValueError(f"policy {policy!r} not in {POLICIES}")
         if max_slots < 1:
             raise ValueError("max_slots must be >= 1")
+        if max_prefill_tokens is not None and max_prefill_tokens < 1:
+            raise ValueError("max_prefill_tokens must be >= 1")
+        if prefill_granule < 1:
+            raise ValueError("prefill_granule must be >= 1")
         self.max_slots = max_slots
         self.policy = policy
         self.max_prefill_tokens = max_prefill_tokens
+        self.prefill_granule = prefill_granule
         self.reset()
 
     def reset(self) -> None:
-        self.pending: list[Request] = []
+        self.pending: deque[Request] = deque()
         self.slots: list[Optional[Request]] = [None] * self.max_slots
+        self._free_heap = list(range(self.max_slots))   # sorted == heapified
+        self.prefilling: list[Request] = []             # admission order
         self.num_admitted = 0
         self.slot_reuse = 0            # admissions into a previously-used slot
         self._slot_used = [False] * self.max_slots
@@ -52,54 +88,103 @@ class Scheduler:
         for r in requests:
             if r.state != QUEUED:
                 raise ValueError(f"request {r.rid} already {r.state}")
-        self.pending.extend(requests)
-        self.pending.sort(key=lambda r: (r.arrival, r.rid))
+        merged = sorted([*self.pending, *requests],
+                        key=lambda r: (r.arrival, r.rid))
+        self.pending = deque(merged)
 
     @property
     def free_slots(self) -> list[int]:
-        return [i for i, r in enumerate(self.slots) if r is None]
+        return sorted(self._free_heap)
 
-    def active(self) -> list[Request]:
+    def occupied(self) -> list[Request]:
+        """Requests holding a slot (PREFILLING or RUNNING)."""
         return [r for r in self.slots if r is not None]
 
+    def active(self) -> list[Request]:
+        """Decode lanes: slot-holding requests whose prompt is fully in
+        the cache."""
+        return [r for r in self.slots
+                if r is not None and r.state == RUNNING]
+
     def all_done(self) -> bool:
-        return not self.pending and not self.active()
+        return not self.pending and not self.occupied()
 
     # --------------------------------------------------------- admission
 
-    def admit(self, now: float) -> list[Request]:
-        """Assign free slots to due requests; returns the admitted batch
-        (the step's prefill micro-batch), possibly empty."""
-        if self.policy == "static" and self.active():
-            return []
-        admitted: list[Request] = []
+    def plan_prefill(self, now: float) -> list[tuple[Request, int]]:
+        """This step's prefill plan: [(request, chunk_len)]. Each chunk
+        covers prompt positions [r.prefill_pos, r.prefill_pos +
+        chunk_len); the engine advances the cursor after executing it.
+        Partially-prefilled requests come first (admission order), then
+        due pending requests are admitted into free slots while budget
+        remains.
+
+        Budget accounting charges PADDED compute (see class docstring):
+        the first chunk may span up to the whole budget and fixes the
+        step's row width w = round_up(chunk, granule); every further row
+        is capped at w tokens and charged w, and rows stop when the
+        charges reach round_up(budget, granule) — so the executed
+        micro-batch (n rows right-padded to w) never exceeds one
+        granule-rounded budget of tokens."""
         budget = self.max_prefill_tokens
-        tokens = 0
-        while self.pending and self.pending[0].arrival <= now:
-            free = self.free_slots
-            if not free:
+        g = self.prefill_granule
+        budget_pad = None if budget is None else ((budget + g - 1) // g) * g
+        state = {"w_cap": 0, "used": 0}
+
+        def take(remaining: int) -> int:
+            """Chunk length for a row with `remaining` prompt tokens, or
+            0 when the step's padded budget is exhausted."""
+            if budget is None:
+                return remaining
+            if state["w_cap"] == 0:                    # first row: sets w
+                chunk = min(remaining, budget)
+                state["w_cap"] = ((chunk + g - 1) // g) * g
+            else:
+                chunk = min(remaining, state["w_cap"])
+            if state["used"] + state["w_cap"] > budget_pad:
+                return 0
+            state["used"] += state["w_cap"]
+            return chunk
+
+        plan: list[tuple[Request, int]] = []
+        for r in self.prefilling:
+            chunk = take(r.prompt_len - r.prefill_pos)
+            if chunk == 0:
                 break
-            req = self.pending[0]
-            if budget is not None and admitted and \
-                    tokens + req.prompt_len > budget:
+            plan.append((r, chunk))
+        if self.policy == "static" and self.occupied():
+            return plan
+        while (self.pending and self.pending[0].arrival <= now
+               and self._free_heap):
+            chunk = take(self.pending[0].prompt_len)
+            if chunk == 0:
                 break
-            self.pending.pop(0)
-            slot = free[0]
+            req = self.pending.popleft()
+            slot = heapq.heappop(self._free_heap)
             req.slot = slot
-            req.state = RUNNING
+            req.state = PREFILLING
+            req.prefill_pos = 0
             self.slots[slot] = req
+            self.prefilling.append(req)
             if self._slot_used[slot]:
                 self.slot_reuse += 1
             self._slot_used[slot] = True
             self.num_admitted += 1
-            tokens += req.prompt_len
-            admitted.append(req)
-        return admitted
+            plan.append((req, chunk))
+        return plan
+
+    def prefill_done(self, req: Request) -> None:
+        """Prompt fully in the cache: PREFILLING -> RUNNING decode lane."""
+        if req.state != PREFILLING:
+            raise ValueError(f"request {req.rid} is {req.state}")
+        self.prefilling.remove(req)
+        req.state = RUNNING
 
     def finish(self, req: Request, step: int) -> None:
         if self.slots[req.slot] is not req:
             raise ValueError(f"request {req.rid} does not own slot "
                              f"{req.slot}")
         self.slots[req.slot] = None
+        heapq.heappush(self._free_heap, req.slot)
         req.state = FINISHED
         req.finish_step = step
