@@ -2,8 +2,9 @@
 
 Measures the unified engine (`repro.core.experts.routed_experts`) at
 decode shapes — T = batch tokens per step, the regime where the grouped
-backends pay the full prefill-shaped capacity-dispatch cost (zero-init +
-scatter into an (E, C, d) buffer) while `gather` runs only the selected
+backends pay the ragged-dispatch overhead (argsort + block-aligned
+segment layout whose padded extent floors at ~E row-tiles, so every
+touched expert's weights are read) while `gather` runs only the selected
 experts through (T*k)-batched GEMMs.
 
     PYTHONPATH=src python benchmarks/bench_decode_backends.py

@@ -15,11 +15,14 @@ micro-batch every decode lane waits on; chunked, it is split into
 budget-bounded per-step chunks interleaved with decode. Both runs serve
 identical requests with identical greedy streams — the comparison is
 p95 inter-token latency (the stall tail) at equal work. Token identity
-is gated for the dense default model; under --cmoe it additionally
-requires the grouped capacity policy not to drop (grouped drops are
-micro-batch-width-dependent, so a drop in ONE of the two runs
-legitimately forks the streams — see test_padded_prefill_takes_no_
-expert_capacity's note), which holds at the default smoke sizes.
+is gated for the dense default model AND under --cmoe at the REAL
+default capacity factor: the grouped backends run a ragged segment
+dispatch with a per-token capacity contract, so a 256-token prefill and
+a 32-token chunk compute bitwise-identical routed outputs and neither
+run can drop (both reports are additionally gated on zero dropped
+pairs). The can't-overflow capacity_factor context this section used to
+hide width-dependent drops behind is gone — the invariance is now the
+engine's, not the workload's.
 
     PYTHONPATH=src python benchmarks/bench_serving.py
     PYTHONPATH=src python benchmarks/bench_serving.py --slots 4 \
@@ -33,7 +36,6 @@ the goodput gap comes from the generation-length spread.
 from __future__ import annotations
 
 import argparse
-import contextlib
 import sys
 
 import jax
@@ -109,12 +111,12 @@ def bench_hol(args) -> int:
     Builds its own model at --hol-d-model (default 512): the stall signal
     needs prefill COMPUTE to dominate per-step dispatch overhead, which
     the tiny goodput-bench model does not at smoke scale. Under --cmoe
-    the two runs execute inside an activation-sharding policy whose
-    capacity_factor equals num_experts — a capacity the grouped backend
-    provably cannot overflow — because grouped capacity DROPS are
-    micro-batch-width-dependent (a 256-token prefill and a 32-token chunk
-    legitimately drop different tokens), and a drop in one run forks the
-    greedy streams for reasons orthogonal to the scheduling under test.
+    both runs execute at the DEFAULT capacity factor: the ragged grouped
+    backends never drop and a token's routed output is bitwise-
+    independent of its micro-batch, so stream identity is a property of
+    the engine, not of a can't-overflow workload carve-out (the old
+    capacity_factor=num_experts context). Zero reported drops is gated
+    alongside token identity.
     """
     from repro.config import CMoEConfig, override
     from repro.configs import get_smoke_config
@@ -133,8 +135,8 @@ def bench_hol(args) -> int:
     long_len = 8 * budget
     rng = np.random.default_rng(args.seed)
     # short decode lanes: prompts small enough that their admission
-    # micro-batch stays on the drop-free gather path even under --cmoe,
-    # with long generations so they decode for the whole run
+    # micro-batch stays on the gather path even under --cmoe, with long
+    # generations so they decode for the whole run
     reqs = []
     for i in range(args.slots):
         prompt = rng.integers(0, cfg.vocab_size, 4).astype(np.int32)
@@ -170,36 +172,26 @@ def bench_hol(args) -> int:
           f"slots={args.slots}+1 decode lanes, {n_long} long prompts of "
           f"{long_len} tok (8x budget {budget}) mid-decode"
           f"{' cmoe' if args.cmoe else ''}")
-    ctx = contextlib.nullcontext()
-    if args.cmoe:
-        # drop-free grouped capacity (see docstring): cap = min(cf*t*k/E+1,
-        # t*k) with cf=E can never overflow, so both runs keep identical
-        # streams while the chunks still exercise the grouped backend
-        from jax.sharding import Mesh
-        from repro.distributed.policy import activation_sharding
-        mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
-        ctx = activation_sharding(mesh, seq_shard=False,
-                                  capacity_factor=float(
-                                      cfg.cmoe.num_experts))
-    with ctx:
-        un = once(None)
-        ch = once(budget)
+    un = once(None)
+    ch = once(budget)
     for tag, r in (("unchunked", un), ("chunked", ch)):
         print(f"{tag:>11}: TPOT p50/p95 {r.tpot_p50_s * 1e3:7.1f}/"
               f"{r.tpot_p95_s * 1e3:7.1f} ms, max gap "
               f"{max(r.decode_gaps_s) * 1e3:7.1f} ms, goodput "
               f"{r.goodput:7.1f} tok/s, {r.steps} steps, mean TTFT "
-              f"{r.mean_ttft_steps:.1f}")
+              f"{r.mean_ttft_steps:.1f}, dropped {r.dropped_pairs}")
 
     toks_un = {r.rid: tuple(r.generated) for r in un.requests}
     toks_ch = {r.rid: tuple(r.generated) for r in ch.requests}
     identical = toks_un == toks_ch
+    no_drops = un.dropped_pairs == 0 and ch.dropped_pairs == 0
     p95_cut = ch.tpot_p95_s < un.tpot_p95_s
     goodput_held = ch.goodput >= 0.7 * un.goodput
-    ok = identical and p95_cut and goodput_held
+    ok = identical and no_drops and p95_cut and goodput_held
     print(f"RESULT: chunked p95 {'cut' if p95_cut else 'DID NOT cut'} "
           f"({un.tpot_p95_s * 1e3:.1f} -> {ch.tpot_p95_s * 1e3:.1f} ms), "
-          f"tokens {'identical' if identical else 'DIVERGED'}, goodput "
+          f"tokens {'identical' if identical else 'DIVERGED'}, drops "
+          f"{'none' if no_drops else 'REPORTED'}, goodput "
           f"{'held' if goodput_held else 'DROPPED'} "
           f"({ch.goodput / max(un.goodput, 1e-9):.2f}x)")
     if args.cmoe:

@@ -26,6 +26,14 @@ if [[ "${1:-}" != "--fast" ]]; then
     python -m repro.launch.serve --smoke --continuous --batch 4 \
         --requests 8 --rate 0.5 --prompt-len 32 --gen 8 \
         --max-prefill-tokens 16
+    echo "== smoke: grouped-parity (chunked == unchunked at cf 0.75) =="
+    # width-invariance gate: the chunked run must reproduce the unchunked
+    # run token-for-token with ZERO reported drops even at a tight
+    # capacity factor — the ragged grouped backends have no capacity
+    # buffer to overflow, so chunk width is numerically invisible
+    python -m repro.launch.serve --smoke --continuous --batch 4 \
+        --requests 8 --rate 0.5 --prompt-len 32 --gen 8 \
+        --max-prefill-tokens 16 --capacity-factor 0.75 --parity
     echo "== smoke: decode backend bench (gather vs grouped) =="
     # --no-gate: CI asserts the bench RUNS; the speedup gate is timing-based
     # and too noisy to fail CI on a loaded runner (run without the flag to

@@ -9,32 +9,49 @@ sharding policy has a single seam to plug into.
 
 Backend matrix (``routed_experts(..., backend=...)``):
 
-  backend          dispatch             compute                 drops  use
-  ---------------  -------------------  ----------------------  -----  ----
-  exact            none (dense mask)    all E experts, (T,E,d)  no     test
-                                                                       oracle
-  grouped_xla      capacity scatter     (E,C,d)x(E,d,m) einsum  yes    prefill
-                   into (E,C,d) buffer                                 CPU/GPU
-  grouped_pallas   capacity scatter     Pallas ``moe_gmm``      yes    prefill
-                                        grouped GEMM kernel            TPU
-  gather           per-token weight     (T*k,)-batched GEMMs,   no     decode /
-                   gather (no buffer)   only selected experts          small T
+  backend          dispatch               compute                 drops  use
+  ---------------  ---------------------  ----------------------  -----  ----
+  exact            none (dense mask)      all E experts, (T,E,d)  no     test
+                                                                         oracle
+  grouped_xla      ragged segment sort    segment GEMMs over      no     prefill
+                   (argsort by expert)    sorted rows (TPU:              CPU/GPU
+                                          ragged_dot; else
+                                          row-tile einsum)
+  grouped_pallas   ragged segment sort    Pallas ``moe_gmm_       no     prefill
+                   (argsort by expert)    ragged`` (true group           TPU
+                                          sizes, scalar prefetch)
+  gather           per-token weight       (T*k,)-batched GEMMs,   no     decode /
+                   gather (no buffer)     only selected experts          small T
 
-The grouped backends are prefill-shaped: they zero-initialize and scatter
-into an (E, C, d) capacity buffer, which costs O(E*C*d) regardless of T —
-the dominant decode-time cost for small token counts (see the MoE
-inference-optimization survey, Liu et al. 2024). The ``gather`` backend
-computes only the top-k selected experts per token with no capacity buffer
-and no token drops — the right shape when T ~ batch during decode.
-``select_backend`` encodes the policy: decode (or a prefill small enough
-to be under the gather break-even, ~E/k tokens) -> gather; larger
-prefill -> grouped, Pallas when kernels are requested (``use_kernel``;
-the Pallas kernel has no VJP, so autodiff callers must stay on the XLA
-path — serving enables kernels on TPU at the launch layer).
+The per-token capacity contract: NO backend above ever drops a (token,
+expert) assignment, and a token's routed output is bitwise-independent of
+which other tokens share its micro-batch. The grouped backends sort the
+T*k assignments by expert id into a block-aligned ragged layout (each
+expert's segment starts on a row-tile boundary, so every (block, d) tile
+belongs to exactly one expert) and run segment GEMMs over the sorted
+activations — per-expert group sizes are data, not shape, so no
+micro-batch-width-dependent (E, C, d) capacity buffer exists to overflow.
+Each output row is an independent dot product against its expert's
+weights, so chunked and unchunked prefills of the same prompt compute
+identical routed contributions (the serving engine's chunked==unchunked
+parity tests assert this at tight capacity factors where the old scatter
+contract provably forked streams).
 
-Capacity-dispatch machinery (``expert_capacity`` / ``assign_positions`` /
-``dispatch`` / ``combine``) lives here too; ``repro.models.moe`` re-exports
-it for backward compatibility.
+A bounded capacity buffer survives only where a fixed shape is structural:
+the all-to-all EP send bins in ``models.moe.moe_ffn_local`` (a collective
+needs a static send extent). There the machinery below
+(``expert_capacity`` / ``assign_positions`` / ``dispatch`` / ``combine``)
+applies a per-token guarantee instead: capacity is floored so a single
+token's own top-k can never be dropped, and overflow is resolved by
+per-expert priority on the router weight with a deterministic token-id
+tiebreak — never by micro-batch position. Residual drops are surfaced,
+not silent: every routed FFN reports a ``dropped`` pair count through its
+aux dict, which ``Model.step`` -> ``serving.StepExecutor`` ->
+``EngineReport`` aggregate into per-micro-batch drop counts. (The
+hierarchical two-level flatten rides the same ragged layout — see
+``core.hierarchical`` — so it shares the no-drop contract end to end.)
+``repro.models.moe`` re-exports the capacity machinery for backward
+compatibility.
 """
 from __future__ import annotations
 
@@ -48,11 +65,22 @@ Array = jax.Array
 BACKENDS = ("exact", "grouped_xla", "grouped_pallas", "gather")
 
 # Fallback break-even when the expert-bank shape is unknown: below this
-# many tokens the gather path beats the capacity scatter even for
+# many tokens the gather path beats the segment sort even for
 # prefill-shaped calls. With a known bank the threshold is ~E/k — weight
 # traffic is the dominant cost (gather reads t*k weight slabs, grouped
 # reads all E once); measured: benchmarks/bench_decode_backends.py.
 GATHER_TOKEN_THRESHOLD = 8
+
+# Row-tile of the XLA segment-GEMM layout. A FIXED constant (never derived
+# from T): the layout block is part of the width-invariance contract — a
+# token's row lands in a (block, d) tile whose GEMM shape is identical for
+# every micro-batch width, so its value cannot depend on the batch. Small
+# on purpose: the layout pads each expert's segment to a block multiple,
+# so per-call overhead is bounded by E*(block-1) rows — at serving-chunk
+# widths (tens of tokens) a large tile would drown the real rows in
+# padding compute (measured: block 32 tripled chunked-prefill cost vs
+# unchunked in bench_serving's HOL section at smoke scale).
+RAGGED_BLOCK_XLA = 8
 
 
 def _act(activation: str):
@@ -73,10 +101,30 @@ def round_up(x: int, m: int) -> int:
 
 def expert_capacity(num_tokens: int, num_experts: int, top_k: int,
                     factor: float) -> int:
+    """Rows per expert for the BOUNDED-buffer path (the EP all-to-all
+    shard binning in ``models.moe.moe_ffn_local``). Floored at ``top_k`` so a single token's own
+    top-k assignments always fit even when they share one bin (t <
+    num_experts underflow: a width-1 tail chunk that misses the decode
+    piggyback path must never be able to drop its own pairs)."""
     cap = int(factor * num_tokens * top_k / num_experts) + 1
-    # upper clamp: one token can occupy a bin at most top_k times (relevant
-    # for shard-destination binning where k assignments share a bin)
+    # per-token guarantee: one token can aim at most top_k pairs at a bin
+    # (shard-destination binning), so capacity >= top_k means a lone
+    # token can never overflow its own dispatch
+    cap = max(cap, top_k)
+    # upper clamp: a bin can never receive more than every assignment
     return max(8, round_up(min(cap, num_tokens * top_k), 8))
+
+
+def dropped_pairs(keep: Array, valid: Optional[Array], shape) -> Array:
+    """Count real (token, expert) assignments a dispatch failed to keep —
+    the drop-mask seam every routed FFN reports through its aux dict and
+    ``Model.step`` -> ``serving.StepExecutor`` -> ``EngineReport``
+    aggregate per micro-batch. The buffer-free engine backends keep every
+    valid pair, so this is zero unless the bounded
+    EP all-to-all shard binning overflowed."""
+    vmask = jnp.ones(shape, bool) if valid is None \
+        else jnp.broadcast_to(valid, shape)
+    return jnp.sum(vmask & ~keep).astype(jnp.int32)
 
 
 class DispatchInfo(NamedTuple):
@@ -86,40 +134,42 @@ class DispatchInfo(NamedTuple):
     gates: Array         # (T, k) float combine weights
 
 
-def assign_positions(expert_idx: Array, num_experts: int,
-                     capacity: int, chunk: int = 4096) -> tuple[Array, Array]:
-    """Per-assignment position within its expert's buffer (priority: earlier
-    k-choice first, then token order).
+def assign_positions(expert_idx: Array, num_experts: int, capacity: int,
+                     priority: Optional[Array] = None
+                     ) -> tuple[Array, Array]:
+    """Per-assignment position within its expert's bounded buffer.
 
-    Memory-safe: the one-hot cumsum is CHUNKED over tokens with running
-    per-expert counts carried through a scan — the (T, E) one-hot matrix
-    (0.5 TB for 1M tokens x 128 experts) never materializes.
+    Position = the assignment's rank among all assignments aimed at the
+    same expert, ordered by DESCENDING ``priority`` (router weight) with a
+    deterministic flat-assignment-id tiebreak (token-major: token id, then
+    k-choice). With ``priority=None`` the order is the tiebreak alone.
+    Overflow (rank >= capacity) therefore evicts the LOWEST-weighted
+    assignments first — never "whoever arrived late in the micro-batch".
+
+    Sort-based and memory-safe: one lexsort over the T*k flat assignments
+    plus an O(E) segment cumsum — the (T, E) one-hot matrix (0.5 TB for
+    1M tokens x 128 experts) never materializes.
+
+    ``expert_idx`` may contain the out-of-range id ``num_experts`` to mark
+    masked/padded assignments: they rank within their own phantom segment
+    and consume no real expert's capacity.
 
     expert_idx: (T, k) int32. Returns (position (T,k), keep (T,k))."""
     t, k = expert_idx.shape
-    chunk = min(chunk, t)
-    pad = (-t) % chunk
-    # pad with an OUT-OF-RANGE id: its one-hot row is all-zero, so padding
-    # never consumes real expert slots (caught by hypothesis: in-range
-    # padding leaked phantom counts into later k-choices)
-    idx = jnp.pad(expert_idx, ((0, pad), (0, 0)),
-                  constant_values=num_experts) if pad else expert_idx
-    nc = (t + pad) // chunk
-    counts = jnp.zeros((num_experts,), jnp.int32)
-    positions = []
-    for j in range(k):
-        col = idx[:, j].reshape(nc, chunk)
-
-        def chunk_step(counts, ids):
-            onehot = jax.nn.one_hot(ids, num_experts, dtype=jnp.int32)
-            within = jnp.cumsum(onehot, axis=0) - onehot      # 0-based
-            pos = jnp.take_along_axis(within + counts[None, :],
-                                      ids[:, None], axis=1)[:, 0]
-            return counts + jnp.sum(onehot, axis=0), pos
-
-        counts, pos_j = jax.lax.scan(chunk_step, counts, col)
-        positions.append(pos_j.reshape(-1)[:t])
-    position = jnp.stack(positions, axis=1)
+    n = t * k
+    flat_e = expert_idx.reshape(-1)
+    flat_i = jnp.arange(n, dtype=jnp.int32)
+    if priority is None:
+        keys = (flat_i, flat_e)
+    else:
+        keys = (flat_i, -priority.reshape(-1).astype(jnp.float32), flat_e)
+    order = jnp.lexsort(keys)                       # last key is primary
+    sorted_e = jnp.take(flat_e, order)
+    counts = jnp.bincount(flat_e, length=num_experts + 1)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(n, dtype=jnp.int32) - starts[sorted_e].astype(jnp.int32)
+    position = jnp.zeros((n,), jnp.int32).at[order].set(rank).reshape(t, k)
     keep = position < capacity
     return position, keep
 
@@ -149,14 +199,144 @@ def combine(ybuf: Array, info: DispatchInfo) -> Array:
     return rows.reshape(t, k, -1).sum(axis=1)
 
 
+# ------------------------------------------------- ragged segment dispatch
+
+def ragged_layout(flat_e: Array, num_experts: int, block: int
+                  ) -> tuple[Array, Array, Array, int]:
+    """Sort N flat assignments by expert id into a block-aligned ragged
+    layout: each expert's segment starts on a ``block`` row boundary, so
+    every (block, d) row-tile of the laid-out activations belongs to
+    exactly ONE expert — the static-shape contract both segment-GEMM
+    consumers (``lax.ragged_dot``, Pallas scalar-prefetch kernel) share.
+
+    Per-expert group sizes are runtime data; only the worst-case padded
+    extent P = round_up(N + E*(block-1), block) is a shape, so the layout
+    never drops an assignment. Assignments carrying the out-of-range id
+    ``num_experts`` (masked/padded tokens) get slot ``P``: the caller's
+    ``mode="drop"`` scatter discards them, so they occupy no row at all.
+
+    Returns (slot (N,) padded-layout row per assignment, owner (nb,)
+    expert id per row-tile, group_sizes (E,) block-rounded segment sizes
+    — ``sum(group_sizes) <= P``, trailing rows belong to no group — P)."""
+    n = flat_e.shape[0]
+    p_total = round_up(n + num_experts * (block - 1), block)
+    nb = p_total // block
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = jnp.take(flat_e, order)
+    counts = jnp.bincount(flat_e, length=num_experts + 1)   # [E] = masked
+    padded = ((counts[:num_experts] + block - 1) // block) * block
+    poff = jnp.concatenate([jnp.zeros((1,), padded.dtype),
+                            jnp.cumsum(padded)])            # (E + 1,)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])     # (E + 1,)
+    rank = jnp.arange(n, dtype=jnp.int32) - starts[sorted_e].astype(
+        jnp.int32)
+    slot_sorted = jnp.where(sorted_e < num_experts,
+                            poff[jnp.minimum(sorted_e, num_experts - 1)
+                                 ].astype(jnp.int32) + rank,
+                            p_total)
+    slot = jnp.zeros((n,), jnp.int32).at[order].set(slot_sorted)
+    tile_start = jnp.arange(nb, dtype=poff.dtype) * block
+    owner = jnp.searchsorted(poff[1:], tile_start, side="right")
+    owner = jnp.minimum(owner, num_experts - 1).astype(jnp.int32)
+    return slot, owner, padded.astype(jnp.int32), p_total
+
+
+def ragged_scatter(xf: Array, top_k: int, slot: Array, p_total: int
+                   ) -> Array:
+    """Scatter each of the T*top_k flat assignments' token activations
+    into its padded-layout row. Masked assignments carry slot == P and
+    are dropped by the scatter (their row simply never exists)."""
+    n = slot.shape[0]
+    tok = jnp.arange(n, dtype=jnp.int32) // top_k
+    return jnp.zeros((p_total, xf.shape[1]), xf.dtype).at[slot].set(
+        jnp.take(xf, tok, axis=0), mode="drop")
+
+
+def ragged_combine(yp: Array, slot: Array, gates: Array,
+                   vmask: Optional[Array], t: int, top_k: int) -> Array:
+    """Fetch each assignment's expert output by inverse permutation and
+    gate-weight the k contributions per token. Masked assignments read a
+    clamped (guaranteed-zero) row and carry a zeroed gate, so they
+    contribute nothing either way."""
+    p_total = yp.shape[0]
+    rows = jnp.take(yp, jnp.minimum(slot, p_total - 1), axis=0)
+    w = gates.astype(yp.dtype)
+    if vmask is not None:
+        w = w * vmask.astype(yp.dtype)
+    return (rows.reshape(t, top_k, -1) * w[..., None]).sum(axis=1)
+
+
+def _use_ragged_dot() -> bool:
+    """``lax.ragged_dot`` has a first-class TPU lowering (the op exists
+    for exactly this MoE segment-GEMM shape — each expert's slab streams
+    once, nothing materializes per tile). Elsewhere XLA decays it to a
+    per-group fallback that is orders of magnitude slower than the
+    blocked einsum at serving shapes (measured on CPU at E=160 decode:
+    ~1 tok/s vs ~150 via row-tiles). The platform is a process-wide
+    constant, so the choice can never differ between two micro-batch
+    widths of the same run — bitwise width-invariance holds either
+    way."""
+    return jax.default_backend() == "tpu"
+
+
+def segment_dot(xp: Array, owner: Array, group_sizes: Array, bank: Array,
+                block: int, use_ragged: Optional[bool] = None) -> Array:
+    """ONE segment GEMM over a ragged layout against an (E, a, b) weight
+    bank: xp (P, a) expert-sorted rows -> (P, b) float32. On TPU this is
+    ``lax.ragged_dot`` with the TRUE per-expert group sizes (rows beyond
+    sum(group_sizes) come back zero); elsewhere one (block, a) x (a, b)
+    GEMM per row-tile against the tile owner's gathered slab. Either way
+    each output row is an independent dot product, so per-row values
+    cannot depend on how many rows exist (micro-batch width). The shared
+    primitive under ``segment_ffn_xla`` and the hierarchical sub-router /
+    shared-sub-expert stages; ``use_ragged`` overrides the platform
+    default (tests exercise the TPU branch on CPU with it)."""
+    if use_ragged is None:
+        use_ragged = _use_ragged_dot()
+    if use_ragged:
+        return jax.lax.ragged_dot(xp, bank.astype(xp.dtype), group_sizes,
+                                  preferred_element_type=jnp.float32)
+    p_total = xp.shape[0]
+    xb = xp.reshape(p_total // block, block, xp.shape[1])
+    # KNOWN LIMIT of the non-TPU branch: the per-tile gather materializes
+    # nb ~ P/block slab copies, so weight memory scales with the
+    # micro-batch, not with E. Bounded in serving (max_prefill_tokens
+    # caps P) and irrelevant on TPU (ragged_dot/Pallas stream the bank),
+    # but an UNBOUNDED non-TPU prefill at full model scale would thrash —
+    # the ROADMAP's streamed-segment-GEMM item is the fix.
+    bank_b = jnp.take(bank, owner, axis=0).astype(xp.dtype)  # (nb, a, b)
+    return jnp.einsum("gra,gab->grb", xb, bank_b,
+                      preferred_element_type=jnp.float32
+                      ).reshape(p_total, bank.shape[2])
+
+
+def segment_ffn_xla(xp: Array, owner: Array, group_sizes: Array,
+                    weights: dict, activation: str, block: int) -> Array:
+    """Expert FFN over a ragged layout: glu (gate ⊙ up -> down) or
+    non-glu, each stage one ``segment_dot``. xp (P, d) expert-sorted
+    rows, owner (P/block,) expert per row-tile, group_sizes (E,)
+    per-expert row counts; returns (P, d) in xp's dtype."""
+    act = _act(activation)
+    if _is_glu(weights):
+        g = segment_dot(xp, owner, group_sizes, weights["wg"], block)
+        u = segment_dot(xp, owner, group_sizes, weights["wu"], block)
+        h = (act(g) * u).astype(xp.dtype)
+    else:
+        h = act(segment_dot(xp, owner, group_sizes, weights["wi"],
+                            block)).astype(xp.dtype)
+    return segment_dot(h, owner, group_sizes, weights["wd"],
+                       block).astype(xp.dtype)
+
+
 # ----------------------------------------------------------- expert GEMMs
 
 def grouped_expert_ffn(xbuf: Array, weights: dict, activation: str,
                        use_kernel: bool = False) -> Array:
-    """Batched expert FFN over capacity buffers: xbuf (E, C, d) with
-    per-expert weights (E, d, m) / (E, m, d). glu ({wg,wu,wd}) and non-glu
-    ({wi,wd}) schemas both handled here — the one place these einsum
-    branches exist."""
+    """Batched expert FFN over DENSE capacity buffers: xbuf (E, C, d) with
+    per-expert weights (E, d, m) / (E, m, d). Kept for the bounded-buffer
+    callers (hierarchical shared sub-level, `models.moe.expert_ffn`); the
+    engine's grouped backends run the ragged segment path instead."""
     glu = _is_glu(weights)
     if use_kernel and glu:
         from repro.kernels import ops as kops
@@ -241,27 +421,41 @@ def _gather(xf, weights, gates, idx, activation, valid):
     return (y.reshape(t, k, d) * w[..., None]).sum(axis=1)
 
 
-def _grouped(xf, weights, gates, idx, activation, valid, *,
-             capacity_factor, use_kernel):
-    t = xf.shape[0]
-    k = idx.shape[1]
+def _grouped(xf, weights, gates, idx, activation, valid, *, use_kernel):
+    """Ragged segment dispatch: argsort the T*k assignments by expert id,
+    lay them out block-aligned (`ragged_layout`), run segment GEMMs over
+    the sorted activations (Pallas `moe_gmm_ragged` with true per-expert
+    group tiles, or `lax.ragged_dot` on the XLA path), and combine by the
+    inverse permutation. NO (E, C, d) capacity buffer exists, so nothing
+    can overflow: every assignment survives and a token's routed output is
+    bitwise-independent of its micro-batch neighbors."""
+    t, k = idx.shape
     n_e = weights["wd"].shape[0]
-    capacity = expert_capacity(t, n_e, k, capacity_factor)
+    flat_e = idx.reshape(-1)
+    vmask = None
     if valid is not None:
-        # invalid assignments are re-aimed at the out-of-range expert id
-        # BEFORE position assignment (its one-hot row is all-zero), so a
-        # padded token can never occupy a capacity slot a real token
-        # needs — and real tokens' positions are independent of whatever
-        # the padding happens to route to
-        idx = jnp.where(valid, idx, n_e)
-    position, keep = assign_positions(idx, n_e, capacity)
-    if valid is not None:
-        keep = keep & valid
-    info = DispatchInfo(idx, position, keep, gates.astype(xf.dtype))
-    xbuf = dispatch(xf, info, n_e, capacity)
-    ybuf = grouped_expert_ffn(xbuf, weights, activation,
-                              use_kernel=use_kernel)
-    return combine(ybuf, info), keep
+        vmask = jnp.broadcast_to(valid, idx.shape)
+        # masked assignments are re-aimed at the out-of-range id BEFORE
+        # the sort: the scatter drops them, so padding neither occupies a
+        # layout row a real token needs nor shifts real tokens' ranks
+        flat_e = jnp.where(vmask.reshape(-1), flat_e, n_e)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        block = kops.ragged_block_c()
+    else:
+        block = RAGGED_BLOCK_XLA
+    slot, owner, group_sizes, p_total = ragged_layout(flat_e, n_e, block)
+    xp = ragged_scatter(xf, k, slot, p_total)
+    if use_kernel:
+        yp = kops.moe_gmm_ragged(xp, owner, weights["wg"], weights["wu"],
+                                 weights["wd"], activation=activation,
+                                 block_c=block)
+    else:
+        yp = segment_ffn_xla(xp, owner, group_sizes, weights, activation,
+                             block)
+    out = ragged_combine(yp, slot, gates, vmask, t, k)
+    keep = jnp.ones_like(idx, bool) if vmask is None else vmask
+    return out, keep
 
 
 # ----------------------------------------------------------------- engine
@@ -271,20 +465,21 @@ def select_backend(t: int, cfg, phase: str, *, use_kernel: bool = False,
                    top_k: Optional[int] = None) -> str:
     """Backend policy: decode (and prefills under the gather break-even)
     -> ``gather``; larger prefill -> grouped, Pallas only when a kernel
-    path is requested (``moe_gmm`` has no VJP, so autodiff must stay on
-    the XLA path — inference launchers opt into kernels on TPU).
+    path is requested (``moe_gmm_ragged`` has no VJP, so autodiff must
+    stay on the XLA path — inference launchers opt into kernels on TPU).
 
     The break-even is weight traffic: gather reads t*k per-token weight
-    slabs, grouped reads all E once (capacity floor >= 8 rows/expert), so
-    gather wins roughly while t*k <= E. Bank shape comes from
+    slabs, grouped reads each expert's slab once (``lax.ragged_dot`` /
+    the Pallas kernel stream weights per segment — nothing materializes
+    per row), so gather wins roughly while t*k <= E. Bank shape comes from
     num_experts/top_k when the caller knows it (``routed_experts`` passes
     the actual stacked-weight extents), else from cfg.cmoe / cfg.moe.
 
-    Decode stays on gather even past the break-even (measured crossover
-    ~batch 32 at E=160, k=6): the grouped paths DROP over-capacity tokens,
-    which at decode silently zeroes a generated token's routed output —
-    a correctness hazard, not a throughput tradeoff. Large-batch decode
-    throughput is the ragged-kernel item in ROADMAP "Open items"."""
+    The choice is pure throughput: every backend is drop-free and
+    width-invariant under the per-token contract, so decode on gather vs
+    grouped is a speed question (measured crossover ~batch 32 at E=160,
+    k=6), not a correctness one. Large-batch decode throughput is the
+    ragged-kernel item in ROADMAP "Open items"."""
     if num_experts is None or top_k is None:
         spec = getattr(cfg, "cmoe", None) or getattr(cfg, "moe", None)
         if spec is not None:
@@ -312,11 +507,12 @@ def microbatch_backend(cfg, num_tokens: int, phase: str, *,
 
     For a hierarchical model (cfg.moe AND cfg.cmoe set) the engine-visible
     call is the INNER sub-expert pass: ``hierarchical_moe_ffn`` runs
-    ``routed_experts`` over E*capacity buffer rows against the flattened
-    E*num_routed sub-expert bank, so the report is computed on those
-    extents, not the raw token count. The shard_map-local EP layouts pick
-    per-shard (multi-device serving is a ROADMAP item); this reports the
-    single-device global paths the serving engine runs.
+    ``routed_experts`` over the outer ragged layout's P ~ T*top_k sorted
+    rows against the flattened E*num_routed sub-expert bank, so the
+    report is computed on those extents, not the raw token count. The
+    shard_map-local EP layouts pick per-shard (multi-device serving is a
+    ROADMAP item); this reports the single-device global paths the
+    serving engine runs.
     """
     cm = getattr(cfg, "cmoe", None)
     moe = getattr(cfg, "moe", None)
@@ -325,14 +521,11 @@ def microbatch_backend(cfg, num_tokens: int, phase: str, *,
     if override not in (None, "auto"):
         return override
     if cm is not None and moe is not None:
-        # mirror hierarchical_moe_ffn's outer capacity + inner bank shape
+        # mirror hierarchical_moe_ffn's outer ragged-layout extent
         e = moe.num_experts
-        if phase == "decode":
-            capacity = max(8, round_up(num_tokens, 8))
-        else:
-            capacity = expert_capacity(num_tokens, e, moe.top_k,
-                                       moe.capacity_factor)
-        be = select_backend(e * capacity, cfg, phase, use_kernel=use_kernel,
+        p_total = round_up(num_tokens * moe.top_k +
+                           e * (RAGGED_BLOCK_XLA - 1), RAGGED_BLOCK_XLA)
+        be = select_backend(p_total, cfg, phase, use_kernel=use_kernel,
                             num_experts=e * cm.num_routed, top_k=cm.top_k)
     else:
         be = select_backend(num_tokens, cfg, phase, use_kernel=use_kernel)
@@ -357,13 +550,19 @@ def routed_experts(xf: Array, weights: dict, gates: Array, idx: Array,
       cfg:     model config (only ``cfg.activation`` is read).
       backend: one of BACKENDS, or None/"auto" to use ``select_backend``.
       phase:   "prefill" | "decode" — drives auto backend selection.
+      capacity_factor: retained for API compatibility with the bounded-
+               buffer callers; the engine backends are buffer-free and
+               ignore it (no capacity exists to factor).
       valid:   optional (T, k) bool; assignments with False contribute
                nothing (used for padded / unoccupied buffer rows).
 
-    Returns (out (T, d), keep (T, k) bool). ``keep`` is all-True for the
-    drop-free backends (exact, gather) and marks capacity drops for the
-    grouped ones.
+    Returns (out (T, d), keep (T, k) bool). Under the per-token contract
+    ``keep`` is simply the valid mask (all-True when ``valid`` is None):
+    no backend drops assignments. Callers turn ``valid & ~keep`` into the
+    ``dropped`` aux count — identically zero here, nonzero only for the
+    bounded-buffer stages that wrap this engine.
     """
+    del capacity_factor  # no capacity buffer exists on any engine backend
     if backend in (None, "auto"):
         backend = select_backend(xf.shape[0], cfg, phase,
                                  use_kernel=use_kernel,
@@ -374,18 +573,16 @@ def routed_experts(xf: Array, weights: dict, gates: Array, idx: Array,
     elif backend == "grouped_pallas" and not _is_glu(weights):
         raise ValueError(
             "backend='grouped_pallas' requires a glu weight schema "
-            "({wg,wu,wd}); the moe_gmm kernel has no non-glu ({wi,wd}) "
-            "path — use 'grouped_xla'")
+            "({wg,wu,wd}); the moe_gmm_ragged kernel has no non-glu "
+            "({wi,wd}) path — use 'grouped_xla'")
     activation = cfg.activation
     if backend == "exact":
         out = _exact(xf, weights, gates, idx, activation, valid)
     elif backend == "gather":
         out = _gather(xf, weights, gates, idx, activation, valid)
     elif backend in ("grouped_xla", "grouped_pallas"):
-        out, keep = _grouped(xf, weights, gates, idx, activation, valid,
-                             capacity_factor=capacity_factor,
-                             use_kernel=backend == "grouped_pallas")
-        return out, keep
+        return _grouped(xf, weights, gates, idx, activation, valid,
+                        use_kernel=backend == "grouped_pallas")
     else:
         raise ValueError(f"unknown backend {backend!r}; expected one of "
                          f"{BACKENDS}")

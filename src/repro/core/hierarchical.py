@@ -2,10 +2,18 @@
 
 Each routed expert E_i is restructured into shared + routed SUB-experts with
 its own analytical sub-router. At runtime the two-level routing is flattened:
-after the top-level dispatch produces (E, C, d) expert buffers, sub-expert
-selection is a SECOND grouped dispatch over E·N_r' flat sub-experts —
-re-using the exact same capacity machinery (one extra all-to-all on TPU,
-see DESIGN.md).
+the top-level dispatch sorts the T*k (token, expert) assignments into the
+engine's block-aligned RAGGED layout (`repro.core.experts.ragged_layout` —
+rows grouped by owning expert, per-expert group sizes are data, not shape),
+the per-expert shared sub-experts and sub-routers run as ``ragged_dot``
+segment GEMMs over the sorted rows (weights stream once per expert), and
+sub-expert selection is a SECOND engine dispatch over E·N_r' flat
+sub-experts. No (E, C, d) outer capacity buffer
+exists anymore: the outer stage inherits the engine's per-token contract —
+no assignment is ever dropped and a token's output is independent of its
+micro-batch — which is exactly why all-active conversion stays EXACT (the
+old bounded outer buffer could drop pairs the drop-free engine kept,
+forking the converted model from the original).
 
 Param layout on a converted MoE block:
   p["moe"]   keeps router / balance_bias / shared_* (top level, unchanged)
@@ -26,9 +34,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import CMoEConfig
-from repro.core.experts import (DispatchInfo, assign_positions, combine,
-                                dispatch, expert_capacity, round_up,
-                                routed_experts)
+from repro.core.experts import (RAGGED_BLOCK_XLA, dropped_pairs,
+                                ragged_combine, ragged_layout,
+                                ragged_scatter, routed_experts,
+                                segment_dot)
 from repro.core.partition import build_cmoe_params, partition_neurons
 from repro.core.profiling import profile_hidden
 from repro.core.router import cmoe_gate
@@ -107,104 +116,96 @@ def hierarchical_moe_ffn(x: Array, p: dict, cfg, *, use_kernel: bool = False,
                          valid: Array | None = None):
     """Two-level MoE forward on a converted block. x: (B, S, d).
 
+    The outer stage is RAGGED: the T*k (token, expert) assignments are
+    argsorted by expert into a block-aligned layout (~T*k rows instead of
+    the old E*C >= 1.25*T*k buffer), per-expert shared sub-experts and
+    sub-routers run as ``ragged_dot`` segment GEMMs over the sorted rows,
+    and the sub-level selection feeds the engine as before. No
+    outer pair can be dropped at ANY phase or capacity factor, so the
+    decode-time "capacity >= t" carve-out is gone and all-active
+    conversion is exact by construction.
+
     valid: optional (B*S, 1) bool — False rows (padded serving prompts)
-    are dropped from the outer capacity dispatch, so they cannot displace
-    real tokens or leak into the occupancy/load stats."""
+    are dropped at the layout scatter, so they cannot displace real
+    tokens or leak into the load stats."""
     moe = cfg.moe
     cm = cfg.cmoe
     b, s, d = x.shape
     xf = x.reshape(b * s, d)
     t = b * s
+    e = moe.num_experts
+    k = moe.top_k
+    n_r = cm.num_routed
+    cp = p["cmoe"]
+    act = (lambda v: v * jax.nn.sigmoid(v)) if cfg.activation == "swiglu" \
+        else jax.nn.gelu
 
     # ---- top level (original router, unchanged) ----
     gates, idx, probs = moe_gate(xf, p["moe"], moe)
 
-    if phase == "decode":
-        # drop-free: capacity >= t means no expert can overflow even if
-        # every token routes to it — over-capacity drops would silently
-        # zero a generated token's entire expert contribution. Cheap at
-        # decode T; the buffer-free outer level is a ROADMAP item.
-        capacity = max(8, round_up(t, 8))
-    else:
-        capacity = expert_capacity(t, moe.num_experts, moe.top_k,
-                                   moe.capacity_factor)
+    flat_e = idx.reshape(-1)
+    vmask = None
     if valid is not None:
-        # re-aim padded tokens at the out-of-range expert id BEFORE
-        # position assignment: they take no capacity slot and real
-        # tokens' positions don't depend on what padding routed to
-        # (scatter drops the id; combine weights are zeroed via keep)
-        idx = jnp.where(valid, idx, moe.num_experts)
-    position, keep = assign_positions(idx, moe.num_experts, capacity)
-    if valid is not None:
-        keep = keep & valid
-    info = DispatchInfo(idx, position, keep, gates.astype(x.dtype))
-    xbuf = dispatch(xf, info, moe.num_experts, capacity)     # (E, C, d)
-    occupancy = jnp.zeros((moe.num_experts, capacity), jnp.int32).at[
-        jnp.where(info.keep.reshape(-1), info.expert_idx.reshape(-1), 0),
-        jnp.where(info.keep.reshape(-1), info.position.reshape(-1), 0)
-    ].add(info.keep.reshape(-1).astype(jnp.int32)) > 0
+        # masked assignments re-aim at the out-of-range id BEFORE the
+        # sort: the scatter drops them, so padding neither occupies a
+        # layout row nor shifts real tokens' ranks
+        vmask = jnp.broadcast_to(valid, idx.shape)
+        flat_e = jnp.where(vmask.reshape(-1), flat_e, e)
+    block = RAGGED_BLOCK_XLA
+    slot, owner, group_sizes, p_total = ragged_layout(flat_e, e, block)
+    xp = ragged_scatter(xf, k, slot, p_total)                # (P, d)
+    occ = jnp.zeros((p_total,), bool).at[slot].set(True, mode="drop")
+    owner_row = jnp.repeat(owner, block)                     # (P,)
 
-    cp = p["cmoe"]
-    e = moe.num_experts
-    n_r = cm.num_routed
+    def sdot(lhs, bank):
+        # per-expert segment GEMM against this expert's slab of `bank` —
+        # same static-bank-shape path choice as the engine's grouped_xla
+        return segment_dot(lhs, owner, group_sizes, bank, block)
 
-    # ---- sub-level shared experts (always active) ----
-    g = jnp.einsum("ecd,eds->ecs", xbuf, cp["shared"]["wg"].astype(x.dtype),
-                   preferred_element_type=jnp.float32)
-    u = jnp.einsum("ecd,eds->ecs", xbuf, cp["shared"]["wu"].astype(x.dtype),
-                   preferred_element_type=jnp.float32)
-    act = (lambda v: v * jax.nn.sigmoid(v)) if cfg.activation == "swiglu" \
-        else jax.nn.gelu
+    # ---- sub-level shared experts (always active): segment GEMMs ----
+    g = sdot(xp, cp["shared"]["wg"])                         # (P, ms)
+    u = sdot(xp, cp["shared"]["wu"])
     h_sh = (act(g) * u).astype(x.dtype)
-    y_shared = jnp.einsum("ecs,esd->ecd", h_sh,
-                          cp["shared"]["wd"].astype(x.dtype),
-                          preferred_element_type=jnp.float32).astype(x.dtype)
+    y_shared = sdot(h_sh, cp["shared"]["wd"]).astype(x.dtype)
 
     # ---- sub-level routed: flatten to E*N_r' sub-experts ----
-    sg = jnp.einsum("ecd,edn->ecn", xbuf, cp["router"]["wg_r"].astype(
-        x.dtype), preferred_element_type=jnp.float32)
-    su = jnp.einsum("ecd,edn->ecn", xbuf, cp["router"]["wu_r"].astype(
-        x.dtype), preferred_element_type=jnp.float32)
-    sub_scores = (act(sg) * su)                              # (E, C, N_r')
-    sub_scores_f = sub_scores.reshape(e * capacity, n_r)
+    sg = sdot(xp, cp["router"]["wg_r"])                      # (P, N_r')
+    su = sdot(xp, cp["router"]["wu_r"])
+    sub_scores_f = act(sg) * su                              # (P, N_r')
     bias = cp.get("bias")
     u_scale = cp.get("u") if cm.learnable_scaling else None
     sub_probs = jax.nn.softmax(sub_scores_f, axis=-1)
     sel2 = sub_probs
     if bias is not None:
-        sel2 = sub_probs + jnp.repeat(bias, capacity, axis=0)
-    _, sub_idx = jax.lax.top_k(sel2, cm.top_k)               # (E*C, k')
+        sel2 = sub_probs + jnp.take(bias, owner_row, axis=0)
+    _, sub_idx = jax.lax.top_k(sel2, cm.top_k)               # (P, k')
     p_sel = jnp.take_along_axis(sub_probs, sub_idx, axis=1)
     if u_scale is not None:
-        u_rows = jnp.repeat(u_scale, capacity, axis=0)       # (E*C, N_r')
+        u_rows = jnp.take(u_scale, owner_row, axis=0)        # (P, N_r')
         sub_gates = 1.0 + p_sel * jnp.take_along_axis(u_rows, sub_idx, axis=1)
     else:
         sub_gates = jnp.ones_like(p_sel)
 
     # global flat sub-expert ids: e * N_r' + j — the flattened E·N_r'
-    # sub-expert bank runs through the unified engine (unoccupied buffer
-    # rows masked via `valid`)
-    owner = jnp.repeat(jnp.arange(e), capacity)[:, None]     # (E*C, 1)
-    flat_sub = owner * n_r + sub_idx
-    occ = occupancy.reshape(-1)                              # (E*C,)
-    # the sub-level call runs on E*C buffer rows, not on the outer token
-    # stream. At prefill those rows are prefill-shaped, so the engine's
-    # t-vs-bank threshold picks grouped; at decode the phase is forwarded
-    # so the engine stays on the drop-free gather path (grouped drops
-    # would silently zero a generated token's sub-expert output)
+    # sub-expert bank runs through the unified engine (unoccupied layout
+    # padding rows masked via `valid`). The call runs on P ~ T*k sorted
+    # rows: prefill-shaped rows pick grouped via the t-vs-bank threshold
+    # (ragged — no sub-level pair can drop either); decode forwards the
+    # phase so small row counts take the cheaper gather path
+    flat_sub = owner_row[:, None] * n_r + sub_idx
     y_routed, _ = routed_experts(
-        xbuf.reshape(e * capacity, d),
+        xp,
         {"wg": cp["routed"]["wg"].reshape(e * n_r, d, -1),
          "wu": cp["routed"]["wu"].reshape(e * n_r, d, -1),
          "wd": cp["routed"]["wd"].reshape(e * n_r, -1, d)},
         sub_gates.astype(x.dtype), flat_sub, cfg,
-        backend=backend, phase=phase,
-        capacity_factor=moe.capacity_factor, use_kernel=use_kernel,
+        backend=backend, phase=phase, use_kernel=use_kernel,
         valid=occ[:, None])
-    y_routed = y_routed.reshape(e, capacity, d)
 
-    ybuf = y_shared + y_routed
-    out = combine(ybuf, info)
+    # ---- combine by inverse permutation, gate-weighted ----
+    yp = y_shared + y_routed                                 # (P, d)
+    out = ragged_combine(yp, slot, gates, vmask, t, k)
+    keep = jnp.ones_like(idx, bool) if vmask is None else vmask
 
     # ---- top-level shared experts (deepseek) ----
     if moe.num_shared > 0 and "shared_wg" in p["moe"]:
@@ -213,7 +214,8 @@ def hierarchical_moe_ffn(x: Array, p: dict, cfg, *, use_kernel: bool = False,
         h = (act(g) * u2).astype(x.dtype)
         out = out + matmul(h, p["moe"]["shared_wd"])
 
-    load = jnp.zeros((moe.num_experts,), jnp.float32).at[idx.reshape(-1)].add(
-        keep.reshape(-1).astype(jnp.float32)) / (t * moe.top_k)
-    aux = {"load": load, "router_probs_mean": probs.mean(0)}
+    load = jnp.zeros((e,), jnp.float32).at[idx.reshape(-1)].add(
+        keep.reshape(-1).astype(jnp.float32)) / (t * k)
+    aux = {"load": load, "router_probs_mean": probs.mean(0),
+           "dropped": dropped_pairs(keep, valid, idx.shape)}
     return out.reshape(b, s, d), aux

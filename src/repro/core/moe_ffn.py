@@ -3,10 +3,13 @@
 F_MoE(x) = E_shared(x) + Σ_i g_i · E_i^routed(x)
 
 Routed-expert execution delegates to the unified engine
-(`repro.core.experts`): capacity-grouped dispatch (XLA einsum or Pallas
-``moe_gmm``) for prefill-shaped calls, the buffer-free ``gather`` path for
-decode, and the dense-mask ``exact`` oracle for tests (the all-active
-exactness invariant) and small models.
+(`repro.core.experts`): ragged segment dispatch (segment-blocked XLA
+GEMMs or the Pallas ``moe_gmm_ragged`` kernel) for prefill-shaped calls,
+the buffer-free ``gather`` path for decode, and the dense-mask ``exact``
+oracle for tests (the all-active exactness invariant) and small models.
+Every path is drop-free under the engine's per-token capacity contract;
+the ``dropped`` aux count each forward reports is therefore zero here and
+exists as the uniform surfacing seam for the bounded-buffer stages.
 
 Param schema per layer (stacked over L inside the block scan):
   cmoe = {
@@ -22,7 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.experts import routed_experts
+from repro.core.experts import dropped_pairs, routed_experts
 from repro.core.router import cmoe_gate, expert_load, router_scores
 from repro.models.layers import matmul, swish
 
@@ -74,7 +77,8 @@ def cmoe_ffn(x: Array, p: dict, cfg, *, use_kernel: bool = False,
 
     out = out + _shared_ffn(xf, p["shared"], cfg.activation)
     aux = {"load": expert_load(idx, keep, n_r),
-           "router_probs_mean": probs.mean(0)}
+           "router_probs_mean": probs.mean(0),
+           "dropped": dropped_pairs(keep, valid, idx.shape)}
     if not squeeze:
         out = out.reshape(b, s, d)
     return out, aux
@@ -168,16 +172,21 @@ def cmoe_ffn_local(x: Array, p: dict, cfg, mesh, *,
             y = jax.lax.psum(y, "model")
         load = expert_load(idx, keep, n_r)
         load = jax.lax.pmean(load, "data")
+        # drop counts SUM over data shards (distinct tokens per shard);
+        # model-axis devices saw the same all-gathered tokens, so the
+        # count is already replicated there
+        dropped = jax.lax.psum(dropped_pairs(keep, vf, idx.shape), "data")
         if dp is not None and "pod" in mesh.axis_names:
             load = jax.lax.pmean(load, "pod")
+            dropped = jax.lax.psum(dropped, "pod")
         pm = jax.lax.pmean(probs.mean(0), "data")
-        return y, load, pm
+        return y, load, pm, dropped
 
-    out_specs = (x_spec, P(None), P(None))
-    y, load, pm = shard_map(
+    out_specs = (x_spec, P(None), P(None), P(None))
+    y, load, pm, dropped = shard_map(
         local_ffn, mesh=mesh,
         in_specs=(x_spec, p_specs, v_spec), out_specs=out_specs)(
             x, {k: p[k] for k in
                 ("shared", "routed", "router", "u", "bias")
                 if k in p}, valid)
-    return y, {"load": load, "router_probs_mean": pm}
+    return y, {"load": load, "router_probs_mean": pm, "dropped": dropped}

@@ -1,13 +1,19 @@
-"""CMoE routed-expert grouped matmul Pallas kernel (TPU target).
+"""CMoE routed-expert grouped matmul Pallas kernels (TPU target).
 
-After capacity dispatch, routed-expert compute is a batched GEMM over
-(E, C, d) token bins with per-expert weight slabs — exactly MXU-shaped work.
-This kernel fuses the whole expert FFN (gate ⊙ up → down) per expert so the
-per-expert hidden (C, m) stays in VMEM.
+Two entry points share the fused expert-FFN body (gate ⊙ up → down, the
+per-tile hidden (bc, m) staying in VMEM):
 
-Grid (E, C/bc, m/bm); the output block (bc, d) is revisited across the
-m-dimension and accumulated in f32 scratch. m is the CMoE expert width
-(d_h / N, e.g. 1376 for Llama-2-7B E8), so bm=128..512 tiles it cleanly.
+``moe_gmm`` — dense (E, C, d) capacity buffers, grid (E, C/bc, m/bm).
+Kept for the bounded-buffer callers (hierarchical shared sub-level).
+
+``moe_gmm_ragged`` — the engine's per-token-contract path: a (P, d)
+block-aligned RAGGED layout of expert-sorted rows (see
+``repro.core.experts.ragged_layout``) with TRUE per-expert group sizes.
+Each (block_c, d) row-tile belongs to exactly one expert; the owning
+expert id per tile arrives as a SCALAR-PREFETCH operand so the weight
+DMA for tile i can be issued from ``owner[i]`` before the body runs.
+Grid (P/bc, m/bm); no fixed capacity C exists, so nothing overflows and
+per-row results are bitwise-independent of the micro-batch width.
 """
 from __future__ import annotations
 
@@ -65,3 +71,59 @@ def moe_gmm(xbuf: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array,
         scratch_shapes=[pltpu.VMEM((block_c, d), jnp.float32)],
         interpret=interpret,
     )(xbuf, wg, wu, wd)
+
+
+def _ragged_kernel(owner_ref, x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref,
+                   *, activation: str):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                                   # (bc, d)
+    g = jnp.dot(x, wg_ref[0], preferred_element_type=jnp.float32)
+    u = jnp.dot(x, wu_ref[0], preferred_element_type=jnp.float32)
+    if activation == "swiglu":
+        h = g * jax.nn.sigmoid(g) * u
+    else:
+        h = jax.nn.gelu(g) * u
+    acc_ref[...] += jnp.dot(h.astype(x.dtype), wd_ref[0],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(1) - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def moe_gmm_ragged(xp: jax.Array, owner: jax.Array, wg: jax.Array,
+                   wu: jax.Array, wd: jax.Array, *,
+                   activation: str = "swiglu", block_c: int = 128,
+                   block_m: int = 128, interpret: bool = True) -> jax.Array:
+    """xp: (P, d) expert-sorted rows, P % block_c == 0; owner: (P/block_c,)
+    int32 expert id per row-tile; wg/wu: (E, d, m); wd: (E, m, d) ->
+    (P, d). The caller builds the block-aligned layout (every tile's rows
+    share one expert) and pads m to a block_m multiple."""
+    p_rows, d = xp.shape
+    m = wg.shape[2]
+    assert p_rows % block_c == 0 and m % block_m == 0, \
+        (p_rows, m, block_c, block_m)
+    nb = p_rows // block_c
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb, m // block_m),
+        in_specs=[
+            pl.BlockSpec((block_c, d), lambda i, k, own: (i, 0)),
+            pl.BlockSpec((1, d, block_m), lambda i, k, own: (own[i], 0, k)),
+            pl.BlockSpec((1, d, block_m), lambda i, k, own: (own[i], 0, k)),
+            pl.BlockSpec((1, block_m, d), lambda i, k, own: (own[i], k, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_c, d), lambda i, k, own: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((block_c, d), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_ragged_kernel, activation=activation),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((p_rows, d), xp.dtype),
+        interpret=interpret,
+    )(owner, xp, wg, wu, wd)

@@ -13,6 +13,7 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.flash_decode import flash_decode as _flash_decode
 from repro.kernels.moe_gmm import moe_gmm as _moe_gmm
+from repro.kernels.moe_gmm import moe_gmm_ragged as _moe_gmm_ragged
 from repro.kernels.router_score import router_score as _router
 from repro.kernels.ssd_scan import ssd_scan as _ssd
 from repro.kernels.swiglu import swiglu_ffn as _swiglu
@@ -82,6 +83,34 @@ def moe_gmm(xbuf: Array, wg: Array, wu: Array, wd: Array, *,
                    block_c=block_c, block_m=block_m,
                    interpret=_interpret())
     return out[:, :c0]
+
+
+def ragged_block_c() -> int:
+    """Row-tile of the ragged segment layout the ``moe_gmm_ragged`` kernel
+    consumes. A process-wide CONSTANT (never shape-derived): the layout
+    block is part of the engine's width-invariance contract — shrinking it
+    per call would make a token's tile shape depend on its micro-batch.
+    Small in interpret mode (per-expert padding is one tile, and the MXU
+    tiling constraint is moot on CPU), MXU-aligned on TPU."""
+    return 16 if _interpret() else 128
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "block_c",
+                                             "block_m"))
+def moe_gmm_ragged(xp: Array, owner: Array, wg: Array, wu: Array,
+                   wd: Array, *, activation: str = "swiglu",
+                   block_c: int = 128, block_m: int = 128) -> Array:
+    """xp: (P, d) block-aligned expert-sorted rows (P % block_c == 0 by
+    layout construction); owner: (P/block_c,) expert per tile. Pads m to a
+    block_m multiple (zero wd rows -> padded hidden columns contribute
+    nothing)."""
+    block_m = _shrink_block(block_m, wg.shape[2])
+    wg_p, _ = _pad_to(wg, 2, block_m)
+    wu_p, _ = _pad_to(wu, 2, block_m)
+    wd_p, _ = _pad_to(wd, 1, block_m)
+    return _moe_gmm_ragged(xp, owner, wg_p, wu_p, wd_p,
+                           activation=activation, block_c=block_c,
+                           block_m=block_m, interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("activation", "block_t"))

@@ -36,6 +36,23 @@ def moe_gmm_ref(xbuf: Array, wg: Array, wu: Array, wd: Array,
                       preferred_element_type=jnp.float32).astype(xbuf.dtype)
 
 
+def moe_gmm_ragged_ref(xp: Array, owner: Array, wg: Array, wu: Array,
+                       wd: Array, activation: str = "swiglu",
+                       block_c: int = 128) -> Array:
+    """xp: (P, d) block-aligned expert-sorted rows; owner: (P/block_c,)
+    expert per row-tile; wg/wu: (E, d, m); wd: (E, m, d) -> (P, d)."""
+    p, d = xp.shape
+    xb = xp.reshape(p // block_c, block_c, d)
+    g = jnp.einsum("gbd,gdm->gbm", xb, jnp.take(wg, owner, axis=0),
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("gbd,gdm->gbm", xb, jnp.take(wu, owner, axis=0),
+                   preferred_element_type=jnp.float32)
+    h = (_act(activation)(g) * u).astype(xp.dtype)
+    return jnp.einsum("gbm,gmd->gbd", h, jnp.take(wd, owner, axis=0),
+                      preferred_element_type=jnp.float32
+                      ).astype(xp.dtype).reshape(p, d)
+
+
 def router_score_ref(x: Array, wg_r: Array, wu_r: Array,
                      activation: str = "swiglu") -> Array:
     """Analytical router scores: x (T, d), wg_r/wu_r (d, N_r) -> (T, N_r)."""

@@ -48,7 +48,11 @@ def serve_continuous(model, params, args) -> int:
     """Continuous-batching mode: Poisson arrivals, per-request lengths.
     --max-prefill-tokens bounds each step's prefill compute: prompts
     longer than the budget are split into per-step chunks interleaved
-    with decode (the head-of-line fix; see serving.scheduler)."""
+    with decode (the head-of-line fix; see serving.scheduler).
+    --parity additionally replays the same requests UNCHUNKED and asserts
+    token-identical streams with zero reported drops — the engine's
+    width-invariance contract, checkable at any --capacity-factor because
+    the grouped backends are ragged (no capacity buffer to overflow)."""
     cfg = model.cfg
     max_len = args.prompt_len + args.gen
     lo_p = min(max(4, args.prompt_len // 2), args.prompt_len)
@@ -64,12 +68,33 @@ def serve_continuous(model, params, args) -> int:
     print(f"[continuous] {report.summary()}")
     assert all(r.done for r in report.requests), "unfinished requests"
     if args.max_prefill_tokens is not None:
-        n_chunks = len([1 for _, ph, _, _ in engine.backend_log
+        n_chunks = len([1 for _, ph, *_ in engine.backend_log
                         if ph == "prefill"])
         longest = max(r.prompt_len for r in report.requests)
         print(f"[continuous] chunked prefill: budget "
               f"{args.max_prefill_tokens} tok/step, longest prompt "
               f"{longest}, {n_chunks} prefill micro-batches")
+    if args.parity:
+        if args.max_prefill_tokens is None:
+            raise SystemExit("--parity needs --max-prefill-tokens (it "
+                             "compares the chunked run against unchunked)")
+        base_engine = ServingEngine(model, params, max_slots=args.batch,
+                                    max_len=max_len,
+                                    max_prefill_tokens=None,
+                                    temperature=args.temperature,
+                                    seed=args.seed)
+        base = base_engine.run(reqs)
+        toks = {r.rid: tuple(r.generated) for r in report.requests}
+        toks_base = {r.rid: tuple(r.generated) for r in base.requests}
+        assert toks == toks_base, (
+            "chunked and unchunked prefill forked the generated streams — "
+            "chunk width leaked into the numerics")
+        assert report.dropped_pairs == 0 and base.dropped_pairs == 0, (
+            "routed pairs were dropped", report.dropped_pairs,
+            base.dropped_pairs)
+        print(f"[continuous] parity OK: chunked == unchunked token-for-"
+              f"token ({sum(len(t) for t in toks.values())} tokens), "
+              f"0 dropped pairs in both runs")
 
     # the acceptance contract: decode micro-batches on the gather path,
     # prefill micro-batches above the gather break-even on a grouped path.
@@ -89,8 +114,9 @@ def serve_continuous(model, params, args) -> int:
               f"decode={sorted(decode_b)}")
     elif has_experts:
         print(f"[continuous] backend pinned to {args.backend!r} "
-              f"(phase policy not asserted; grouped decode may drop "
-              f"generated tokens' routed output)")
+              f"(phase policy not asserted; every engine backend is "
+              f"drop-free, so this is a throughput choice, not a "
+              f"correctness one)")
     if report.slot_reuse == 0 and args.requests > args.batch:
         print("[continuous] warning: no slot was recycled (arrivals too "
               "spread out?)")
@@ -127,6 +153,17 @@ def main(argv=None):
                          "longer prompts are chunked across steps so a "
                          "long prompt cannot stall decode lanes "
                          "(default: unlimited)")
+    ap.add_argument("--capacity-factor", type=float, default=None,
+                    help="capacity factor for the bounded EP dispatch stage "
+                         "(EP all-to-all shard binning; the "
+                         "engine's grouped backends are ragged and ignore "
+                         "it). Useful with --parity to demonstrate width-"
+                         "invariance at factors where the old scatter "
+                         "contract forked streams (e.g. 0.75)")
+    ap.add_argument("--parity", action="store_true",
+                    help="[--continuous] replay the request set unchunked "
+                         "and assert token-identical streams + zero "
+                         "reported drops (needs --max-prefill-tokens)")
     args = ap.parse_args(argv)
 
     if args.continuous and args.smoke and not args.cmoe:
@@ -138,6 +175,10 @@ def main(argv=None):
     backend = None if args.backend in (None, "auto", "all") else args.backend
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     cfg = override(cfg, dtype="float32") if args.smoke else cfg
+    if args.capacity_factor is not None and cfg.moe is not None:
+        import dataclasses
+        cfg = override(cfg, moe=dataclasses.replace(
+            cfg.moe, capacity_factor=args.capacity_factor))
     # inference-only: safe to opt into the Pallas kernels on TPU (they
     # have no VJP, so training paths must leave use_kernel off)
     from repro.kernels import ops as kops
@@ -171,7 +212,18 @@ def main(argv=None):
             print("[continuous] note: --backend all (per-backend decode "
                   "tok/s table) is a static-mode feature; the engine runs "
                   "the auto phase policy")
-        return serve_continuous(model, params, args)
+        import contextlib
+        ctx = contextlib.nullcontext()
+        if args.capacity_factor is not None:
+            # thread the factor to the CMoE policy seam (the bounded
+            # stages read it; the ragged engine backends ignore it)
+            from jax.sharding import Mesh
+            from repro.distributed.policy import activation_sharding
+            mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+            ctx = activation_sharding(mesh, seq_shard=False,
+                                      capacity_factor=args.capacity_factor)
+        with ctx:
+            return serve_continuous(model, params, args)
 
     rng = np.random.default_rng(args.seed)
     prompts = rng.integers(0, cfg.vocab_size,

@@ -371,7 +371,8 @@ class Model:
     def step(self, params, tokens: Array, cache, slot_pos, *,
              phase: Optional[str] = None,
              lengths: Optional[Array] = None,
-             extras: Optional[dict] = None):
+             extras: Optional[dict] = None,
+             return_stats: bool = False):
         """Unified slot-aware step — the serving engine's one entry point.
 
         Runs `tokens` (B, S) against `cache`, writing K/V at per-slot
@@ -388,7 +389,8 @@ class Model:
 
         `phase` ("prefill" | "decode", default by S) is threaded to the
         routed-expert engine so every micro-batch picks its own backend
-        (grouped for prefill chunks, drop-free gather for decode).
+        (ragged grouped for prefill chunks, gather for decode — all
+        drop-free under the engine's per-token capacity contract).
         `lengths` (B,) marks each row's valid token count when prompts are
         right-padded: logits are taken at position lengths-1 and padded
         keys land beyond the valid range where masks never look (they are
@@ -396,8 +398,14 @@ class Model:
         non-token inputs (e.g. vlm patches) through to the embedder.
 
         Returns (logits (B, V) at each row's last valid position,
-        new_cache). Audio keeps its enc-dec paths (`prefill`/
-        `decode_step` dispatch there before reaching here).
+        new_cache) — or, with ``return_stats=True``, (logits, new_cache,
+        stats) where stats["dropped"] is the micro-batch's total routed
+        (token, expert) pairs any bounded-buffer dispatch stage failed to
+        keep, summed over layers (identically zero on the buffer-free
+        engine backends — the serving executor aggregates this into
+        `EngineReport` so capacity drops are surfaced, never silent).
+        Audio keeps its enc-dec paths (`prefill`/`decode_step` dispatch
+        there before reaching here).
         """
         cfg = self.cfg
         if cfg.family == "audio":
@@ -416,9 +424,9 @@ class Model:
             # consume routed-expert capacity (threaded to the engine)
             token_valid = (jnp.arange(s)[None, :] <
                            jnp.asarray(lengths, jnp.int32)[:, None])
-        x, ncaches, _ = self._stack(params, x, caches=cache,
-                                    cache_pos=slot_pos, phase=phase,
-                                    token_valid=token_valid)
+        x, ncaches, aux = self._stack(params, x, caches=cache,
+                                      cache_pos=slot_pos, phase=phase,
+                                      token_valid=token_valid)
         if lengths is None:
             xl = x[:, -1:]
         else:
@@ -429,6 +437,11 @@ class Model:
         xl = rms_norm(xl, params["final_norm"], cfg.norm_eps)
         head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
         logits = unembed(xl, head, cfg.tie_embeddings)[:, 0]
+        if return_stats:
+            dropped = jnp.int32(0)
+            if isinstance(aux, dict) and "dropped" in aux:
+                dropped = jnp.sum(aux["dropped"]).astype(jnp.int32)
+            return logits, ncaches, {"dropped": dropped}
         return logits, ncaches
 
     def prefill(self, params, batch, *, max_len: Optional[int] = None):

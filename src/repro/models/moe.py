@@ -15,8 +15,9 @@ import jax.numpy as jnp
 # Re-exports: the dispatch machinery moved to the engine; downstream code
 # (and tests) keep importing it from here.
 from repro.core.experts import (DispatchInfo, assign_positions,  # noqa: F401
-                                combine, dispatch, expert_capacity,
-                                grouped_expert_ffn, round_up, routed_experts)
+                                combine, dispatch, dropped_pairs,
+                                expert_capacity, grouped_expert_ffn,
+                                round_up, routed_experts)
 from repro.models.layers import matmul, swish
 
 Array = jax.Array
@@ -76,7 +77,8 @@ def moe_ffn(x: Array, p: dict, cfg, *, use_kernel: bool = False,
 
     load = jnp.zeros((moe.num_experts,), jnp.float32).at[idx.reshape(-1)].add(
         keep.reshape(-1).astype(jnp.float32)) / (t * moe.top_k)
-    aux = {"load": load, "router_probs_mean": probs.mean(0)}
+    aux = {"load": load, "router_probs_mean": probs.mean(0),
+           "dropped": dropped_pairs(keep, valid, idx.shape)}
     return out.reshape(b, s, d), aux
 
 
@@ -145,7 +147,10 @@ def moe_ffn_local(x: Array, p: dict, cfg, mesh, *,
         # real tokens' bin positions don't depend on padding content
         dest = jnp.where(vf, idx // e_loc, msize)          # (T_loc, k)
         cap_s = expert_capacity(t_loc, msize, k, moe.capacity_factor)
-        pos_s, keep_s = assign_positions(dest, msize, cap_s)
+        # bounded send buffer -> per-token contract: overflow evicts the
+        # lowest-gated assignments (deterministic token-id tiebreak), and
+        # the shard's drop count is surfaced through aux, never silent
+        pos_s, keep_s = assign_positions(dest, msize, cap_s, priority=gates)
         keep_s = keep_s & vf
         info_s = DispatchInfo(dest, pos_s, keep_s,
                               jnp.ones_like(gates).astype(xf.dtype))
@@ -181,18 +186,23 @@ def moe_ffn_local(x: Array, p: dict, cfg, mesh, *,
         load = jnp.zeros((e,), jnp.float32).at[idx.reshape(-1)].add(
             keep_s.reshape(-1).astype(jnp.float32))
         load = jax.lax.psum(load, "model")
+        # each shard routed its OWN sequence slice: drops sum over the
+        # model axis and every data axis
+        dropped = jax.lax.psum(dropped_pairs(keep_s, vf, idx.shape),
+                               "model")
         if dp is not None:
             axes = dp if isinstance(dp, tuple) else (dp,)
             for ax in axes:
                 load = jax.lax.psum(load, ax)
+                dropped = jax.lax.psum(dropped, ax)
         load = load / jnp.maximum(load.sum(), 1.0)
         pm = jax.lax.pmean(probs.mean(0), "data")
-        return out.reshape(bl, sl, d), load, pm
+        return out.reshape(bl, sl, d), load, pm, dropped
 
-    y, load, pm = shard_map(
+    y, load, pm, dropped = shard_map(
         local_moe, mesh=mesh, in_specs=(x_spec, p_specs, v_spec),
-        out_specs=(x_spec, P(None), P(None)))(x, p_in, valid)
-    return y, {"load": load, "router_probs_mean": pm}
+        out_specs=(x_spec, P(None), P(None), P(None)))(x, p_in, valid)
+    return y, {"load": load, "router_probs_mean": pm, "dropped": dropped}
 
 
 def init_moe_ffn(key, cfg, dtype):

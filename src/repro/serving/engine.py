@@ -15,8 +15,12 @@ Each engine iteration:
   4. finish requests on EOS / max_new / max_len and recycle their slots.
 
 The phase is threaded per micro-batch down to the routed-expert engine,
-so prefill chunks run the grouped backend while decode steps run the
-drop-free gather path — `backend_log` records what each micro-batch ran.
+so prefill chunks run the grouped (ragged segment) backend while decode
+steps run the gather path — `backend_log` records what each micro-batch
+ran and how many routed (token, expert) pairs it dropped (zero on every
+engine backend; nonzero only if a bounded-buffer stage overflowed —
+`EngineReport.dropped_pairs` aggregates the column so chunk width can be
+audited as numerically invisible).
 Decode-stall telemetry: the wall gap between consecutive decode steps is
 the inter-token latency every decode lane paid that step (a prefill chunk
 dispatched between them lands inside the gap — the head-of-line signal
@@ -49,6 +53,14 @@ class EngineReport:
     slot_busy_frac: float           # occupied lanes / (steps * max_slots)
     slot_reuse: int                 # admissions that recycled a used slot
     backend_counts: dict            # phase -> Counter of backends run
+    dropped_pairs: int              # routed (token, expert) assignments
+    #   any bounded-buffer dispatch stage failed to keep, summed over all
+    #   micro-batches. The buffer-free engine backends never drop, so a
+    #   nonzero count fingers the one bounded stage left (EP all-to-all
+    #   shard binning) — per-micro-batch counts live in
+    #   `backend_log`. Zero is the width-invariance precondition: it
+    #   certifies no token's routed output was perturbed by how the
+    #   scheduler happened to batch tokens.
     decode_gaps_s: list             # wall gap between consecutive decode
     #   steps — the inter-token latency every decode lane paid that step
     #   (prefill chunks dispatched between two decode steps are inside
@@ -84,7 +96,8 @@ class EngineReport:
                 f"{self.mean_ttft_steps:.1f} steps, TPOT p50/p95 "
                 f"{self.tpot_p50_s * 1e3:.1f}/{self.tpot_p95_s * 1e3:.1f} "
                 f"ms, slot busy {self.slot_busy_frac * 100:.0f}%, slot "
-                f"reuse {self.slot_reuse}, backends {bc}")
+                f"reuse {self.slot_reuse}, dropped pairs "
+                f"{self.dropped_pairs}, backends {bc}")
 
 
 class ServingEngine:
@@ -133,7 +146,11 @@ class ServingEngine:
         # stateless, so reuse across runs is exact)
         self._sampler = make_sampler(temperature, seed)
         self.kv: Optional[SlotKVCache] = None
-        self.backend_log: list[tuple[int, str, int, Optional[str]]] = []
+        # (step, phase, padded tokens, backend, dropped pairs) per
+        # micro-batch — the drop column is the surfaced form of what used
+        # to be silent capacity eviction
+        self.backend_log: list[
+            tuple[int, str, int, Optional[str], int]] = []
 
     # ------------------------------------------------------------- loop
 
@@ -198,6 +215,7 @@ class ServingEngine:
             slot_busy_frac=busy / max(step * self.max_slots, 1),
             slot_reuse=self.scheduler.slot_reuse,
             backend_counts=self.backend_counts(),
+            dropped_pairs=sum(d for *_, d in self.backend_log),
             decode_gaps_s=list(self._decode_gaps),
             requests=[dataclasses.replace(r, generated=list(r.generated))
                       for r in requests],
@@ -205,7 +223,7 @@ class ServingEngine:
 
     def backend_counts(self) -> dict:
         out: dict[str, Counter] = {"prefill": Counter(), "decode": Counter()}
-        for _, phase, _, backend in self.backend_log:
+        for _, phase, _, backend, _ in self.backend_log:
             out[phase][backend or "-"] += 1
         return out
 
@@ -253,12 +271,13 @@ class ServingEngine:
             if r.admit_step < 0:
                 r.admit_step = step
         hist = self._hist_width(int(starts.max()), w_pad)
-        logits, cache, backend = self.executor.prefill(
+        logits, cache, backend, dropped = self.executor.prefill(
             self.params, self.kv.cache, jnp.asarray(tokens),
             jnp.asarray(slots), jnp.asarray(lengths), jnp.asarray(starts),
             hist=hist)
         self.kv.cache = cache
-        self.backend_log.append((step, "prefill", n * w_pad, backend))
+        self.backend_log.append((step, "prefill", n * w_pad, backend,
+                                 int(dropped)))
         first = np.asarray(self._sampler(logits, rids, tidx))
         for i, (r, c) in enumerate(chunks):
             r.prefill_pos += c
@@ -288,11 +307,12 @@ class ServingEngine:
             if r.admit_step < 0:
                 r.admit_step = step
         positions = self.kv.positions()
-        logits, cache, backend = self.executor.decode(
+        logits, cache, backend, dropped = self.executor.decode(
             self.params, self.kv.cache, jnp.asarray(tokens),
             jnp.asarray(positions))
         self.kv.cache = cache
-        self.backend_log.append((step, "decode", self.max_slots, backend))
+        self.backend_log.append((step, "decode", self.max_slots, backend,
+                                 int(dropped)))
         nxt = np.asarray(self._sampler(logits, rids, tidx))
         now = time.perf_counter()
         if self._last_decode_t is not None:

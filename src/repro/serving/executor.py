@@ -25,7 +25,13 @@ Each call also returns the routed-expert backend this micro-batch runs
 (``microbatch_backend`` — the same policy ``routed_experts`` applies, with
 the phase threaded through model -> blocks -> engine), so the serving loop
 can report/assert grouped-prefill + gather-decode without instrumenting
-jitted code. None means the model has no routed experts.
+jitted code (None means the model has no routed experts) — and the
+micro-batch's routed drop count (``Model.step(return_stats=True)``): the
+buffer-free engine backends keep every (token, expert) pair, so a nonzero
+count means the one bounded-buffer stage left (EP all-to-all shard
+binning) overflowed. The engine aggregates the counts into
+``EngineReport.dropped_pairs`` so capacity drops are surfaced per
+micro-batch, never silently forked into the output stream.
 """
 from __future__ import annotations
 
@@ -65,14 +71,16 @@ class StepExecutor:
         # instead of O(W * max_len)
         w = tokens.shape[1]
         sub = gather_slots(cache, slots, width=hist)
-        logits, nsub = self.model.step(params, tokens, sub, starts,
-                                       lengths=lengths, phase="prefill")
+        logits, nsub, stats = self.model.step(params, tokens, sub, starts,
+                                              lengths=lengths,
+                                              phase="prefill",
+                                              return_stats=True)
         # only the chunk's write window changed: slice it back out of the
         # updated sub-cache and scatter just those columns
         chunk = gather_slots(nsub, jnp.arange(tokens.shape[0]), width=w,
                              start=starts)
         return logits, scatter_slots(cache, slots, chunk, width=w,
-                                     start=starts)
+                                     start=starts), stats["dropped"]
 
     def prefill(self, params, cache, tokens: Array, slots: Array,
                 lengths: Array, starts: Optional[Array] = None,
@@ -83,22 +91,27 @@ class StepExecutor:
         all-zero: the whole-prompt case); `hist` is the static gathered
         prefix width (default: the chunk width — correct only when all
         starts are 0). Returns (logits (n, V) at each row's last valid
-        chunk token, new_cache, backend)."""
+        chunk token, new_cache, backend, dropped routed pairs)."""
         if starts is None:
             starts = jnp.zeros_like(lengths)
         if hist is None:
             hist = tokens.shape[1]
-        logits, cache = self._prefill(params, cache, tokens, slots,
-                                      lengths, starts, hist=hist)
-        return logits, cache, self._backend(int(tokens.size), "prefill")
+        logits, cache, dropped = self._prefill(params, cache, tokens, slots,
+                                               lengths, starts, hist=hist)
+        return (logits, cache, self._backend(int(tokens.size), "prefill"),
+                dropped)
 
     # ------------------------------------------------------------ decode
 
     def _decode_impl(self, params, cache, tokens, positions):
-        return self.model.step(params, tokens, cache, positions,
-                               phase="decode")
+        logits, ncache, stats = self.model.step(params, tokens, cache,
+                                                positions, phase="decode",
+                                                return_stats=True)
+        return logits, ncache, stats["dropped"]
 
     def decode(self, params, cache, tokens: Array, positions: Array):
-        """Returns (logits (B, V), new_cache, backend)."""
-        logits, cache = self._decode(params, cache, tokens, positions)
-        return logits, cache, self._backend(int(tokens.shape[0]), "decode")
+        """Returns (logits (B, V), new_cache, backend, dropped pairs)."""
+        logits, cache, dropped = self._decode(params, cache, tokens,
+                                              positions)
+        return (logits, cache, self._backend(int(tokens.shape[0]), "decode"),
+                dropped)

@@ -1,9 +1,14 @@
 """Unified routed-expert engine: backend parity + policy tests.
 
-The engine contract: with capacity high enough that the grouped backends
-drop nothing, every backend computes the same function. ``exact`` is the
-oracle; ``gather`` and the grouped paths must agree with it to fp
-tolerance for both the glu (swiglu) and non-glu (gelu) weight schemas.
+The engine contract (per-token capacity): EVERY backend computes the same
+function at every capacity factor — no backend drops assignments, and a
+token's routed output is bitwise-independent of which other tokens share
+its micro-batch. ``exact`` is the oracle; ``gather`` and the ragged
+grouped paths must agree with it to fp tolerance for both the glu
+(swiglu) and non-glu (gelu) weight schemas. One bounded buffer survives
+outside the engine (``assign_positions`` for the EP all-to-all shard
+binning), where overflow evicts by router-weight priority and is
+surfaced through ``dropped_pairs``.
 """
 import jax
 import jax.numpy as jnp
@@ -11,6 +16,7 @@ import numpy as np
 import pytest
 
 from repro.core.experts import (BACKENDS, GATHER_TOKEN_THRESHOLD,
+                                assign_positions, dropped_pairs,
                                 expert_capacity, routed_experts,
                                 select_backend)
 
@@ -50,14 +56,13 @@ def test_backend_matches_exact_oracle(activation, backend):
             routed_experts(xf, w, gates, idx, cfg, backend=backend,
                            capacity_factor=8.0)
         return
-    # capacity_factor 8 -> no grouped drops; all backends compute the
-    # same function
-    ref, keep = routed_experts(xf, w, gates, idx, cfg, backend="exact",
-                               capacity_factor=8.0)
+    # every backend computes the same function at ANY capacity factor —
+    # the engine paths are buffer-free, so there is no capacity to tune
+    ref, keep = routed_experts(xf, w, gates, idx, cfg, backend="exact")
     assert bool(keep.all())
     out, keep = routed_experts(xf, w, gates, idx, cfg, backend=backend,
-                               capacity_factor=8.0)
-    assert bool(keep.all()), f"{backend} dropped tokens at high capacity"
+                               capacity_factor=0.5)
+    assert bool(keep.all()), f"{backend} dropped assignments"
     np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
                                atol=2e-4, rtol=2e-4)
 
@@ -93,22 +98,93 @@ def test_valid_mask_zeroes_assignments():
                                atol=2e-4, rtol=2e-4)
 
 
-def test_grouped_drops_marked_in_keep():
-    """At capacity_factor -> 0 the grouped path drops; keep reports it and
-    dropped assignments contribute nothing (they fall out of the combine)."""
+def test_grouped_never_drops():
+    """The per-token capacity contract: the ragged grouped backends have
+    no capacity buffer, so even an adversarial all-to-one-expert routing
+    at capacity_factor -> 0 keeps every assignment and matches the oracle
+    (the old scatter contract kept only the first `expert_capacity` rows
+    and silently zeroed the rest)."""
     cfg = _Cfg("swiglu")
-    # all tokens pick expert 0 -> guaranteed overflow past capacity
+    # all tokens pick expert 0 -> the old (E, C, d) contract overflowed
     xf, w, gates, _ = _setup("swiglu", t=64, k=1)
     idx = jnp.zeros((64, 1), jnp.int32)
-    out, keep = routed_experts(xf, w, gates, idx, cfg,
-                               backend="grouped_xla", capacity_factor=0.01)
-    cap = expert_capacity(64, 8, 1, 0.01)
-    assert int(keep.sum()) == cap < 64
-    # kept prefix matches the no-drop oracle, dropped suffix is zero
     ref, _ = routed_experts(xf, w, gates, idx, cfg, backend="exact")
-    np.testing.assert_allclose(np.asarray(out[:cap]), np.asarray(ref[:cap]),
-                               atol=2e-4, rtol=2e-4)
-    assert np.allclose(np.asarray(out[cap:]), 0.0)
+    for be in ("grouped_xla", "grouped_pallas"):
+        out, keep = routed_experts(xf, w, gates, idx, cfg, backend=be,
+                                   capacity_factor=0.01)
+        assert bool(keep.all()), be
+        assert int(dropped_pairs(keep, None, idx.shape)) == 0
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-4, rtol=2e-4)
+
+
+def test_grouped_width_invariance_bitwise():
+    """A token's routed output is BITWISE-identical no matter how the
+    micro-batch is split, on every backend — the property the serving
+    engine's chunked==unchunked parity rests on. Drop masks agree too
+    (all-keep everywhere)."""
+    cfg = _Cfg("swiglu")
+    t = 24
+    xf, w, gates, idx = _setup("swiglu", t=t, seed=5)
+    for be in BACKENDS:
+        full, keep_full = routed_experts(xf, w, gates, idx, cfg, backend=be)
+        assert bool(keep_full.all())
+        for s in (1, 7, 16, 23):
+            lo, kl = routed_experts(xf[:s], w, gates[:s], idx[:s], cfg,
+                                    backend=be)
+            hi, kh = routed_experts(xf[s:], w, gates[s:], idx[s:], cfg,
+                                    backend=be)
+            np.testing.assert_array_equal(
+                np.concatenate([np.asarray(lo), np.asarray(hi)]),
+                np.asarray(full), err_msg=f"{be} split {s}")
+            assert bool(kl.all()) and bool(kh.all())
+
+
+def test_segment_dot_ragged_branch_matches_blocked():
+    """`segment_dot`'s TPU branch (`lax.ragged_dot` with true group
+    sizes, forced on via use_ragged) computes the same function as the
+    row-tile einsum branch, zeroes rows beyond sum(group_sizes), and is
+    width-invariant — so the platform switch can never change values."""
+    from repro.core.experts import ragged_layout, segment_dot
+    rng = np.random.default_rng(11)
+    e, d, m, block = 4, 8, 12, 8
+    bank = jnp.asarray(rng.standard_normal((e, d, m)).astype(np.float32))
+    flat_e = jnp.asarray(rng.integers(0, e, 40), jnp.int32)
+    slot, owner, group_sizes, p_total = ragged_layout(flat_e, e, block)
+    xp = jnp.zeros((p_total, d), jnp.float32).at[slot].set(
+        jnp.asarray(rng.standard_normal((40, d)).astype(np.float32)),
+        mode="drop")
+    via_tiles = segment_dot(xp, owner, group_sizes, bank, block,
+                            use_ragged=False)
+    via_ragged = segment_dot(xp, owner, group_sizes, bank, block,
+                             use_ragged=True)
+    np.testing.assert_allclose(np.asarray(via_ragged),
+                               np.asarray(via_tiles), atol=2e-5,
+                               rtol=2e-5)
+    # no-group tail rows (beyond every segment) are exactly zero
+    occupied = int(group_sizes.sum())
+    assert np.allclose(np.asarray(via_ragged[occupied:]), 0.0)
+
+
+def test_bounded_buffer_priority_eviction():
+    """Where a bounded buffer must remain (`assign_positions` for the
+    EP all-to-all shard binning), overflow evicts the
+    LOWEST-priority (router weight) assignments with a deterministic
+    token-id tiebreak — never by micro-batch arrival — and the drop count
+    is surfaced by `dropped_pairs`, not silent."""
+    idx = jnp.zeros((6, 1), jnp.int32)       # everyone wants expert 0
+    prio = jnp.asarray([[0.1], [0.9], [0.5], [0.9], [0.2], [0.7]])
+    pos, keep = assign_positions(idx, 4, 3, priority=prio)
+    # survivors: the three highest gates (ties: 0.9@t1 before 0.9@t3)
+    assert np.asarray(keep).ravel().tolist() == \
+        [False, True, False, True, False, True]
+    assert np.asarray(pos).ravel().tolist() == [5, 0, 3, 1, 4, 2]
+    assert int(dropped_pairs(keep, None, idx.shape)) == 3
+    # no priority given: deterministic token-major order
+    pos2, keep2 = assign_positions(idx, 4, 3)
+    assert np.asarray(keep2).ravel().tolist() == [True] * 3 + [False] * 3
+    # a lone token can never drop its own top-k, however many k share a bin
+    assert expert_capacity(1, 8, 12, 1.25) >= 12
 
 
 def test_select_backend_policy():

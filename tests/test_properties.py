@@ -78,12 +78,71 @@ def test_assign_positions_dense_packing(t, e, k, seed):
     k = min(k, e)
     idx = jax.random.randint(jax.random.PRNGKey(seed), (t, k), 0, e)
     cap = t * k      # no drops
-    pos, keep = assign_positions(idx, e, cap, chunk=16)
+    pos, keep = assign_positions(idx, e, cap)
     assert bool(keep.all())
     pos_np, idx_np = np.asarray(pos), np.asarray(idx)
     for ei in range(e):
         got = np.sort(pos_np[idx_np == ei])
         np.testing.assert_array_equal(got, np.arange(len(got)))
+
+
+@settings(**SET)
+@given(t=st.integers(2, 40), e=st.integers(2, 6), k=st.integers(1, 3),
+       cap=st.integers(1, 8), seed=st.integers(0, 2**16))
+def test_assign_positions_priority_is_rank_by_weight(t, e, k, cap, seed):
+    """With a priority, an assignment's position within its expert equals
+    its rank by DESCENDING priority (flat token-major id breaks ties), so
+    capacity truncation always evicts the lowest-weighted assignments —
+    the bounded-buffer half of the per-token capacity contract."""
+    k = min(k, e)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    idx = jax.random.randint(ks[0], (t, k), 0, e)
+    prio = jax.random.uniform(ks[1], (t, k))
+    pos, keep = assign_positions(idx, e, cap, priority=prio)
+    pos_np = np.asarray(pos).reshape(-1)
+    idx_np = np.asarray(idx).reshape(-1)
+    pr_np = np.asarray(prio).reshape(-1)
+    for ei in range(e):
+        (members,) = np.nonzero(idx_np == ei)
+        # expected rank: sort members by (-priority, flat id)
+        order = sorted(members, key=lambda f: (-pr_np[f], f))
+        for rank, f in enumerate(order):
+            assert pos_np[f] == rank
+    np.testing.assert_array_equal(np.asarray(keep),
+                                  np.asarray(pos) < cap)
+
+
+@settings(**SET)
+@given(s=st.integers(1, 15), seed=st.integers(0, 2**16))
+def test_routed_experts_width_invariant_all_backends(s, seed):
+    """The engine's per-token capacity contract, as a property: routing T
+    tokens as ONE micro-batch vs as any 2-way split produces BITWISE-equal
+    routed outputs and equal (all-keep) drop masks, on every backend —
+    exact, grouped_xla, grouped_pallas, and gather."""
+    from repro.core.experts import BACKENDS, routed_experts
+
+    class _C:
+        activation = "swiglu"
+
+    t, d, m, e, k = 16, 8, 16, 6, 2
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    w = {"wg": jax.random.normal(ks[0], (e, d, m)),
+         "wu": jax.random.normal(ks[1], (e, d, m)),
+         "wd": jax.random.normal(ks[2], (e, m, d))}
+    xf = jax.random.normal(ks[3], (t, d))
+    idx = jax.random.randint(ks[4], (t, k), 0, e)
+    gates = jax.nn.softmax(jax.random.normal(ks[5], (t, k)))
+    for be in BACKENDS:
+        full, keep = routed_experts(xf, w, gates, idx, _C, backend=be,
+                                    capacity_factor=0.75)
+        lo, kl = routed_experts(xf[:s], w, gates[:s], idx[:s], _C,
+                                backend=be, capacity_factor=0.75)
+        hi, kh = routed_experts(xf[s:], w, gates[s:], idx[s:], _C,
+                                backend=be, capacity_factor=0.75)
+        np.testing.assert_array_equal(
+            np.concatenate([np.asarray(lo), np.asarray(hi)]),
+            np.asarray(full), err_msg=f"{be} split at {s}")
+        assert bool(keep.all()) and bool(kl.all()) and bool(kh.all()), be
 
 
 @settings(**SET)

@@ -66,16 +66,16 @@ def test_recycled_slot_prefill_parity(qwen_smoke):
 
     # occupy both slots with a first tenant and let it decode a while
     a = rng.integers(0, cfg.vocab_size, (2, 14)).astype(np.int32)
-    _, kv.cache, _ = ex.prefill(params, kv.cache, jnp.asarray(a),
-                                jnp.asarray([0, 1], jnp.int32),
-                                jnp.asarray([14, 14], jnp.int32))
+    _, kv.cache, _, _ = ex.prefill(params, kv.cache, jnp.asarray(a),
+                                   jnp.asarray([0, 1], jnp.int32),
+                                   jnp.asarray([14, 14], jnp.int32))
     kv.lengths[:] = 14
     for i in range(6):
         tok = rng.integers(0, cfg.vocab_size, (2, 1)).astype(np.int32)
         # kv.positions() COPIES: jnp.asarray(kv.lengths) would zero-copy
         # alias the numpy buffer, and the += 1 below races the async step
-        _, kv.cache, _ = ex.decode(params, kv.cache, jnp.asarray(tok),
-                                   jnp.asarray(kv.positions()))
+        _, kv.cache, _, _ = ex.decode(params, kv.cache, jnp.asarray(tok),
+                                      jnp.asarray(kv.positions()))
         kv.lengths += 1
 
     # recycle slot 1: new prompt prefills at position 0 over the residue
@@ -83,7 +83,7 @@ def test_recycled_slot_prefill_parity(qwen_smoke):
     kv.free(1)
     tokens = np.zeros((1, 16), np.int32)
     tokens[0, :11] = b_prompt
-    lg_recycled, kv.cache, _ = ex.prefill(
+    lg_recycled, kv.cache, _, _ = ex.prefill(
         params, kv.cache, jnp.asarray(tokens),
         jnp.asarray([1], jnp.int32), jnp.asarray([11], jnp.int32))
     kv.lengths[1] = 11
@@ -100,8 +100,8 @@ def test_recycled_slot_prefill_parity(qwen_smoke):
         toks = np.zeros((2, 1), np.int32)
         toks[0, 0] = rng.integers(0, cfg.vocab_size)   # slot 0: other tenant
         toks[1, 0] = got[-1]
-        lg, kv.cache, _ = ex.decode(params, kv.cache, jnp.asarray(toks),
-                                    jnp.asarray(kv.positions()))
+        lg, kv.cache, _, _ = ex.decode(params, kv.cache, jnp.asarray(toks),
+                                       jnp.asarray(kv.positions()))
         kv.lengths += 1
         got.append(int(jnp.argmax(lg, -1)[1]))
     _assert_greedy_chain(model, params, b_prompt, got, max_len)
@@ -200,17 +200,20 @@ def test_chunked_matches_unchunked_greedy(qwen_smoke):
                              max_len)
 
 
-def test_chunked_matches_unchunked_mla():
-    """Chunked==unchunked parity for the MLA latent cache (per-slot latent
-    writes, ragged prefill masks, absorbed decode for piggybacked width-1
-    chunks). Backend pinned to the drop-free gather path: grouped-backend
-    capacity DROPS are micro-batch-width-dependent (a documented property
-    of capacity dispatch, see test_padded_prefill_takes_no_expert_
-    capacity), so the auto policy can legitimately fork streams between
-    chunk widths — parity is a statement about the attention/cache math,
-    which this isolates."""
+@pytest.mark.parametrize("backend", ["grouped_xla", "grouped_pallas"])
+def test_chunked_matches_unchunked_mla_grouped(backend):
+    """Chunked==unchunked parity for the MLA latent cache ON THE GROUPED
+    BACKENDS at a tight capacity_factor (0.75) — the exact regime where
+    the old width-dependent capacity-scatter contract provably forked the
+    streams (this test used to pin the gather backend to dodge it). The
+    ragged segment dispatch has no capacity buffer, so every micro-batch
+    width computes bitwise-identical routed outputs, every pair survives,
+    and the report shows zero drops."""
+    import dataclasses
     cfg = override(get_smoke_config("deepseek-v2-236b"), dtype="float32")
-    model = build_model(cfg, backend="gather")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=0.75))
+    model = build_model(cfg, backend=backend)
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(2)
     reqs = [Request(rid=i, prompt=[int(t) for t in
@@ -218,13 +221,45 @@ def test_chunked_matches_unchunked_mla():
                                                 6 + 5 * i)],
                     max_new=4, arrival=float(i))
             for i in range(3)]
-    base, _ = _run_engine(model, params, reqs, max_slots=2, max_len=24,
-                          bucket=8, mpt=None)
+    base, rep_base = _run_engine(model, params, reqs, max_slots=2,
+                                 max_len=24, bucket=8, mpt=None)
     got, rep = _run_engine(model, params, reqs, max_slots=2, max_len=24,
                            bucket=8, mpt=3)
     assert got == base
     assert rep.slot_reuse >= 1
-    assert set(rep.backend_counts["decode"]) == {"gather"}
+    assert rep_base.dropped_pairs == 0 and rep.dropped_pairs == 0
+    assert set(rep.backend_counts["decode"]) == {backend}
+    assert backend in set(rep.backend_counts["prefill"])
+
+
+@pytest.mark.parametrize("backend", ["grouped_xla", "grouped_pallas"])
+def test_chunked_matches_unchunked_gqa_grouped(backend):
+    """The GQA side of the width-invariance acceptance gate: a CMoE
+    (dense-converted layout) model pinned to a grouped backend at
+    capacity_factor 0.75 serves chunked == unchunked token-for-token with
+    zero reported drops."""
+    from jax.sharding import Mesh
+    from repro.distributed.policy import activation_sharding
+    cfg = override(get_smoke_config("qwen1.5-0.5b"), dtype="float32",
+                   cmoe=CMoEConfig(num_experts=8, num_shared=2, top_k=2,
+                                   k_activation=4))
+    model = build_model(cfg, backend=backend)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    reqs = [Request(rid=i, prompt=[int(t) for t in
+                                   rng.integers(0, cfg.vocab_size,
+                                                5 + 9 * i)],
+                    max_new=4, arrival=float(i))
+            for i in range(3)]
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    with activation_sharding(mesh, seq_shard=False, capacity_factor=0.75):
+        base, rep_base = _run_engine(model, params, reqs, max_slots=2,
+                                     max_len=32, bucket=8, mpt=None)
+        got, rep = _run_engine(model, params, reqs, max_slots=2,
+                               max_len=32, bucket=8, mpt=6)
+    assert got == base
+    assert rep_base.dropped_pairs == 0 and rep.dropped_pairs == 0
+    assert backend in set(rep.backend_counts["prefill"])
 
 
 def test_chunked_sampling_schedule_invariant(qwen_smoke):
@@ -287,8 +322,8 @@ def test_chunked_report_metrics(qwen_smoke):
 
 
 def test_engine_backend_policy_per_microbatch():
-    """Decode micro-batches run the drop-free gather backend; prefill
-    micro-batches above the break-even run grouped."""
+    """Decode micro-batches run the gather backend (cheapest at decode
+    T); prefill micro-batches above the break-even run grouped."""
     cfg = override(get_smoke_config("qwen1.5-0.5b"), dtype="float32",
                    cmoe=CMoEConfig(num_experts=8, num_shared=2, top_k=2,
                                    k_activation=4))
@@ -334,12 +369,13 @@ def test_padded_prefill_takes_no_expert_capacity():
     routed output (regression: row logits diverged by ~0.4).
 
     The invariant: every row's logits are INDEPENDENT of the padding
-    content (padding consumes no capacity slot, so it cannot perturb real
-    tokens' dispatch), and a short row — whose tokens hold the earliest
-    buffer positions and therefore can never be capacity-dropped —
-    matches its fresh per-request prefill. (Full rows vs per-request is
-    NOT asserted: grouped capacity legitimately differs between a
-    128-token micro-batch and a 32-token one.)"""
+    content (padding parks past every real segment of the ragged layout,
+    so it cannot perturb real tokens' dispatch), and EVERY row — short or
+    full — matches its fresh per-request prefill: under the per-token
+    capacity contract a token's routed output is independent of which
+    other rows share its micro-batch, so the 128-token micro-batch and
+    the 32-token per-request prefill compute the same function (the old
+    capacity-scatter contract only guaranteed this for the short row)."""
     cfg = override(get_smoke_config("qwen1.5-0.5b"), dtype="float32",
                    cmoe=CMoEConfig(num_experts=8, num_shared=2, top_k=2,
                                    k_activation=4))
@@ -356,21 +392,23 @@ def test_padded_prefill_takes_no_expert_capacity():
         tokens = np.full((4, 32), pad_fill, np.int32)
         for i, pr in enumerate(prompts):
             tokens[i, :lens[i]] = pr
-        logits, kv.cache, backend = ex.prefill(
+        logits, kv.cache, backend, dropped = ex.prefill(
             params, kv.cache, jnp.asarray(tokens),
             jnp.asarray(np.arange(4, dtype=np.int32)),
             jnp.asarray(lens, jnp.int32))
         assert backend == "grouped_xla"    # padding kept us on grouped
+        assert int(dropped) == 0           # ragged dispatch never drops
         return np.asarray(logits)
 
     lg_a = prefill_with_pad(0)
     lg_b = prefill_with_pad(123)           # different junk beyond lengths
     np.testing.assert_array_equal(lg_a, lg_b)
 
-    ref, _ = model.prefill(params, {"tokens": jnp.asarray(prompts[0])[None]},
-                           max_len=48)
-    np.testing.assert_allclose(lg_a[0], np.asarray(ref[0]),
-                               atol=2e-4, rtol=2e-4)
+    for i in range(4):                     # incl. the full 32-token rows
+        ref, _ = model.prefill(
+            params, {"tokens": jnp.asarray(prompts[i])[None]}, max_len=48)
+        np.testing.assert_allclose(lg_a[i], np.asarray(ref[0]),
+                                   atol=2e-4, rtol=2e-4)
 
 
 def test_eos_finishes_early(qwen_smoke):
@@ -515,7 +553,7 @@ def test_scheduler_budget_true_for_first_admission():
     engine = ServingEngine(model, params, max_slots=2, max_len=24,
                            prefill_bucket=8, max_prefill_tokens=8)
     engine.run([req])
-    prefills = [(t, n) for t, ph, n, _ in engine.backend_log
+    prefills = [(t, n) for t, ph, n, _, _ in engine.backend_log
                 if ph == "prefill"]
     assert len(prefills) == 3                          # ceil(20 / 8)
     assert all(n <= 8 for _, n in prefills), prefills
@@ -527,7 +565,8 @@ def test_scheduler_budget_true_for_first_admission():
     engine = ServingEngine(model, params, max_slots=4, max_len=24,
                            prefill_bucket=8, max_prefill_tokens=8)
     engine.run(herd)
-    prefills = [n for _, ph, n, _ in engine.backend_log if ph == "prefill"]
+    prefills = [n for _, ph, n, _, _ in engine.backend_log
+                if ph == "prefill"]
     assert all(n <= 8 for n in prefills), prefills     # padded rows count
 
 
