@@ -34,14 +34,23 @@ if [[ "${1:-}" != "--fast" ]]; then
     python -m repro.launch.serve --smoke --continuous --batch 4 \
         --requests 8 --rate 0.5 --prompt-len 32 --gen 8 \
         --max-prefill-tokens 16 --capacity-factor 0.75 --parity
+    echo "== smoke: paged-KV serve (block tables, paged == contiguous) =="
+    # paging-invariance gate: the paged run (block pool + per-request
+    # block tables, admission gated on pool headroom) must reproduce the
+    # contiguous run token-for-token with zero dropped pairs
+    python -m repro.launch.serve --smoke --continuous --batch 4 \
+        --requests 8 --rate 0.5 --prompt-len 32 --gen 8 \
+        --max-prefill-tokens 16 --paged --block-size 8 --parity
     echo "== smoke: decode backend bench (gather vs grouped) =="
     # --no-gate: CI asserts the bench RUNS; the speedup gate is timing-based
     # and too noisy to fail CI on a loaded runner (run without the flag to
     # enforce it)
     python benchmarks/bench_decode_backends.py --iters 5 --batches 1 4 8 \
         --no-gate
-    echo "== smoke: serving goodput + chunked-prefill HOL bench (cmoe) =="
-    # --cmoe exercises the per-micro-batch backend split in both sections
+    echo "== smoke: serving goodput + HOL + paged-concurrency bench (cmoe) =="
+    # --cmoe exercises the per-micro-batch backend split in all sections;
+    # the paged section compares concurrency-per-HBM against contiguous
+    # lanes at equal cache memory
     python benchmarks/bench_serving.py --requests 8 --cmoe --samples 2 \
         --no-gate
 fi

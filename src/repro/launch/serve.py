@@ -6,7 +6,9 @@ staggered-arrival mixed-length request set: prompts prefill into freed
 slots while other slots keep decoding, prefill micro-batches run the
 grouped routed-expert backend and decode micro-batches the drop-free
 gather path. `--max-prefill-tokens` chunks long prompts across steps so
-prefill cannot stall decode lanes (head-of-line fix).
+prefill cannot stall decode lanes (head-of-line fix). `--paged` swaps
+the contiguous slot lanes for the block-pool KV cache (per-request
+block tables; `--parity` then asserts paged == contiguous streams).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
         --cmoe S3A3E8 --batch 4 --prompt-len 32 --gen 16
@@ -14,6 +16,8 @@ prefill cannot stall decode lanes (head-of-line fix).
         --batch 4 --requests 8 --rate 0.5 --gen 8
     PYTHONPATH=src python -m repro.launch.serve --smoke --continuous \
         --batch 4 --prompt-len 32 --gen 8 --max-prefill-tokens 16
+    PYTHONPATH=src python -m repro.launch.serve --smoke --continuous \
+        --batch 4 --gen 8 --paged --block-size 8 --parity
 """
 from __future__ import annotations
 
@@ -49,10 +53,13 @@ def serve_continuous(model, params, args) -> int:
     --max-prefill-tokens bounds each step's prefill compute: prompts
     longer than the budget are split into per-step chunks interleaved
     with decode (the head-of-line fix; see serving.scheduler).
-    --parity additionally replays the same requests UNCHUNKED and asserts
-    token-identical streams with zero reported drops — the engine's
-    width-invariance contract, checkable at any --capacity-factor because
-    the grouped backends are ragged (no capacity buffer to overflow)."""
+    --paged swaps the contiguous slot lanes for the block-pool cache
+    (per-request block tables, admission gated on pool headroom).
+    --parity replays the same requests on the OTHER axis and asserts
+    token-identical streams with zero reported drops: without --paged it
+    compares chunked vs unchunked (the width-invariance contract); with
+    --paged it compares the paged run against a contiguous run at the
+    same settings (the paging-invariance contract)."""
     cfg = model.cfg
     max_len = args.prompt_len + args.gen
     lo_p = min(max(4, args.prompt_len // 2), args.prompt_len)
@@ -63,7 +70,9 @@ def serve_continuous(model, params, args) -> int:
     engine = ServingEngine(model, params, max_slots=args.batch,
                            max_len=max_len,
                            max_prefill_tokens=args.max_prefill_tokens,
-                           temperature=args.temperature, seed=args.seed)
+                           temperature=args.temperature, seed=args.seed,
+                           paged=args.paged, block_size=args.block_size,
+                           num_blocks=args.num_blocks)
     report = engine.run(reqs)
     print(f"[continuous] {report.summary()}")
     assert all(r.done for r in report.requests), "unfinished requests"
@@ -74,26 +83,47 @@ def serve_continuous(model, params, args) -> int:
         print(f"[continuous] chunked prefill: budget "
               f"{args.max_prefill_tokens} tok/step, longest prompt "
               f"{longest}, {n_chunks} prefill micro-batches")
+    if args.paged:
+        kv = engine.kv
+        print(f"[continuous] paged pool: {kv.num_blocks} blocks x "
+              f"{kv.block_size} tokens (+1 trash), peak occupancy "
+              f"{report.peak_occupancy}/{args.batch} slots, "
+              f"{report.pool_deferrals} admission deferrals, "
+              f"{report.truncated} truncated")
     if args.parity:
-        if args.max_prefill_tokens is None:
-            raise SystemExit("--parity needs --max-prefill-tokens (it "
-                             "compares the chunked run against unchunked)")
-        base_engine = ServingEngine(model, params, max_slots=args.batch,
-                                    max_len=max_len,
-                                    max_prefill_tokens=None,
-                                    temperature=args.temperature,
-                                    seed=args.seed)
+        if args.paged:
+            base_engine = ServingEngine(
+                model, params, max_slots=args.batch, max_len=max_len,
+                max_prefill_tokens=args.max_prefill_tokens,
+                temperature=args.temperature, seed=args.seed)
+            fork_msg = ("paged and contiguous serving forked the "
+                        "generated streams — the block tables leaked "
+                        "into the numerics")
+            what = "paged == contiguous"
+        else:
+            if args.max_prefill_tokens is None:
+                raise SystemExit("--parity needs --max-prefill-tokens "
+                                 "(it compares the chunked run against "
+                                 "unchunked)")
+            base_engine = ServingEngine(model, params,
+                                        max_slots=args.batch,
+                                        max_len=max_len,
+                                        max_prefill_tokens=None,
+                                        temperature=args.temperature,
+                                        seed=args.seed)
+            fork_msg = ("chunked and unchunked prefill forked the "
+                        "generated streams — chunk width leaked into "
+                        "the numerics")
+            what = "chunked == unchunked"
         base = base_engine.run(reqs)
         toks = {r.rid: tuple(r.generated) for r in report.requests}
         toks_base = {r.rid: tuple(r.generated) for r in base.requests}
-        assert toks == toks_base, (
-            "chunked and unchunked prefill forked the generated streams — "
-            "chunk width leaked into the numerics")
+        assert toks == toks_base, fork_msg
         assert report.dropped_pairs == 0 and base.dropped_pairs == 0, (
             "routed pairs were dropped", report.dropped_pairs,
             base.dropped_pairs)
-        print(f"[continuous] parity OK: chunked == unchunked token-for-"
-              f"token ({sum(len(t) for t in toks.values())} tokens), "
+        print(f"[continuous] parity OK: {what} token-for-token "
+              f"({sum(len(t) for t in toks.values())} tokens), "
               f"0 dropped pairs in both runs")
 
     # the acceptance contract: decode micro-batches on the gather path,
@@ -160,10 +190,22 @@ def main(argv=None):
                          "it). Useful with --parity to demonstrate width-"
                          "invariance at factors where the old scatter "
                          "contract forked streams (e.g. 0.75)")
+    ap.add_argument("--paged", action="store_true",
+                    help="[--continuous] paged KV cache: a block pool "
+                         "with per-request block tables instead of "
+                         "contiguous max_len slot lanes; admission is "
+                         "gated on pool headroom")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="[--paged] tokens per cache block")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="[--paged] pool size in blocks (default: the "
+                         "same token capacity as the contiguous cache, "
+                         "batch x max_len)")
     ap.add_argument("--parity", action="store_true",
-                    help="[--continuous] replay the request set unchunked "
-                         "and assert token-identical streams + zero "
-                         "reported drops (needs --max-prefill-tokens)")
+                    help="[--continuous] replay the request set on the "
+                         "other axis — unchunked, or contiguous under "
+                         "--paged — and assert token-identical streams + "
+                         "zero reported drops")
     args = ap.parse_args(argv)
 
     if args.continuous and args.smoke and not args.cmoe:

@@ -302,6 +302,70 @@ def is_per_slot(pos) -> bool:
     return pos is not None and getattr(jnp.asarray(pos), "ndim", 0) == 1
 
 
+# ------------------------------------------------------------ paged cache
+
+def paged_view(pool: Array, table: Array) -> Array:
+    """Assemble each lane's logical sequence view from a block pool.
+
+    pool: (nblocks, bs, ...) — one layer's slice of a paged cache, fixed-
+    size blocks of bs sequence positions. table: (B, nblk) int32 — lane
+    b's logical block j lives in physical block table[b, j] (0 is the
+    trash block, standing in for not-yet-allocated tail entries; whatever
+    it holds sits at positions >= the lane's valid length, where the
+    ragged/decode masks never look). Returns (B, nblk * bs, ...): the
+    same tensor `gather_slots` used to copy out of a contiguous lane, so
+    the downstream mask/softmax math is shared verbatim with the
+    contiguous path."""
+    b, nblk = table.shape
+    g = pool[table]                                 # (B, nblk, bs, ...)
+    return g.reshape(b, nblk * pool.shape[1], *pool.shape[2:])
+
+
+def paged_cache_update(pool: Array, vals: Array, pos: Array,
+                       table: Array) -> Array:
+    """Write vals (B, S, ...) into a block pool at per-lane offsets.
+
+    Token i of lane b lands at logical position p = pos[b] + i, i.e.
+    physical (table[b, p // bs], p % bs). Writes past the table width
+    (a padded chunk tail spilling beyond the lane's allocation) are
+    routed to the trash block 0 — the paged analogue of scatter_slots'
+    mode="drop" — as are writes through unallocated table entries (which
+    already hold 0). Trash contents are finite garbage no mask can
+    reach."""
+    bs = pool.shape[1]
+    b, s = vals.shape[0], vals.shape[1]
+    nblk = table.shape[1]
+    p = jnp.broadcast_to(jnp.asarray(pos), (b,))[:, None] + jnp.arange(s)
+    blk, off = p // bs, p % bs                      # (B, S) each
+    phys = jnp.take_along_axis(table, jnp.clip(blk, 0, nblk - 1), axis=1)
+    phys = jnp.where(blk < nblk, phys, 0)           # spill -> trash block
+    return pool.at[phys, off].set(vals.astype(pool.dtype))
+
+
+def paged_ragged_attention(q: Array, k_pool: Array, v_pool: Array, *,
+                           table: Array, pos: Array,
+                           window: Array | int = 0,
+                           scale: Optional[float] = None) -> Array:
+    """`ragged_attention` over a paged cache: index the pool by block
+    table into the logical (B, T) view, then run the shared per-slot
+    mask/softmax math. Masking is by per-slot logical length (query i of
+    lane b attends positions <= pos[b] + i), so trash/unallocated blocks
+    beyond a lane's valid depth are never attended."""
+    k = paged_view(k_pool, table)
+    v = paged_view(v_pool, table)
+    return ragged_attention(q, k, v, pos=pos, window=window, scale=scale)
+
+
+def paged_decode_attention(q: Array, k_pool: Array, v_pool: Array, *,
+                           table: Array, pos: Array,
+                           window: Array | int = 0,
+                           scale: Optional[float] = None) -> Array:
+    """The S=1 case of `paged_ragged_attention` (same delegation shape as
+    decode_attention -> ragged_attention)."""
+    return paged_ragged_attention(q, k_pool, v_pool, table=table, pos=pos,
+                                  window=window, scale=scale)
+
+
 def slot_cache_update(cache: Array, vals: Array, pos: Array) -> Array:
     """Write vals (B, S, ...) into cache (B, T, ...) at per-slot offsets.
 
@@ -341,7 +405,8 @@ def gqa_attention(x: Array, p: dict, cfg, *,
                   kv_cache: Optional[tuple[Array, Array]] = None,
                   cache_pos: Optional[Array] = None,
                   cross_kv: Optional[tuple[Array, Array]] = None,
-                  use_rope: bool = True):
+                  use_rope: bool = True,
+                  block_table: Optional[Array] = None):
     """Full GQA block: project, rope, attend, output-project.
 
     Returns (out (B,S,d), new_kv or None).
@@ -349,6 +414,9 @@ def gqa_attention(x: Array, p: dict, cfg, *,
       if kv_cache provided with cache_pos, prefill writes into the cache.
     - decode: x has S=1 and kv_cache + cache_pos given.
     - cross_kv: precomputed encoder K/V (whisper cross-attention).
+    - block_table (B, nblk): kv_cache is a PAGED pool (nblocks, bs, KH,
+      hd) per leaf — writes scatter through the table, reads assemble the
+      logical view per lane (see paged_cache_update / paged_view).
     """
     b, s, _ = x.shape
     hd = cfg.resolved_head_dim
@@ -371,6 +439,20 @@ def gqa_attention(x: Array, p: dict, cfg, *,
     if kv_cache is not None:
         ck, cv = kv_cache
         start = cache_pos if cache_pos is not None else 0
+        if block_table is not None:
+            # paged serving path: write the new K/V through the block
+            # table, then attend the table-assembled logical view with
+            # the SAME ragged per-slot masks as the contiguous slot path
+            ck = paged_cache_update(ck, k, start, block_table)
+            cv = paged_cache_update(cv, v, start, block_table)
+            new_kv = (ck, cv)
+            attend = paged_decode_attention if s == 1 \
+                else paged_ragged_attention
+            out = attend(q, ck, cv, table=block_table, pos=start,
+                         window=window)
+            out = matmul(out.reshape(b, s, -1),
+                         p["wo"].reshape(-1, cfg.d_model))
+            return out, new_kv
         if is_per_slot(start):
             # slot-aware path: each batch lane writes/reads at its own depth
             ck = slot_cache_update(ck, k, start)
@@ -405,13 +487,17 @@ def gqa_attention(x: Array, p: dict, cfg, *,
 def mla_attention(x: Array, p: dict, cfg, *,
                   positions: Array,
                   kv_cache: Optional[tuple[Array, Array]] = None,
-                  cache_pos: Optional[Array] = None):
+                  cache_pos: Optional[Array] = None,
+                  block_table: Optional[Array] = None):
     """DeepSeek-v2 multi-head latent attention.
 
     Cache holds the compressed latent c_kv (B,T,r) + rope key (B,T,dr) —
     the MLA memory saving. Prefill/train expand to per-head K/V; decode uses
     the ABSORBED form (q_nope absorbed through W_uk so scores contract
     against the latent directly; values likewise) — the TPU-friendly matvec.
+    With `block_table` the cache is a PAGED latent pool ((nblocks, bs, r)
+    and (nblocks, bs, dr) leaves): writes scatter through the table and
+    the absorbed/ragged math runs on the table-assembled logical view.
     Returns (out, new_cache).
     """
     m = cfg.mla
@@ -438,15 +524,24 @@ def mla_attention(x: Array, p: dict, cfg, *,
     if kv_cache is not None:
         cc, cp = kv_cache
         start = cache_pos if cache_pos is not None else 0
-        if is_per_slot(start):
+        if block_table is not None:
+            # paged: the pool is the cache state; attention below runs on
+            # the logical per-lane view assembled through the table
+            pool_c = paged_cache_update(cc, c_kv, start, block_table)
+            pool_p = paged_cache_update(cp, k_pe, start, block_table)
+            new_cache = (pool_c, pool_p)
+            cc = paged_view(pool_c, block_table)
+            cp = paged_view(pool_p, block_table)
+        elif is_per_slot(start):
             cc = slot_cache_update(cc, c_kv, start)
             cp = slot_cache_update(cp, k_pe, start)
+            new_cache = (cc, cp)
         else:
             cc = jax.lax.dynamic_update_slice(cc, c_kv.astype(cc.dtype),
                                               (0, start, 0))
             cp = jax.lax.dynamic_update_slice(cp, k_pe.astype(cp.dtype),
                                               (0, start, 0))
-        new_cache = (cc, cp)
+            new_cache = (cc, cp)
     else:
         cc, cp, start = c_kv, k_pe, 0
         new_cache = None
@@ -475,10 +570,12 @@ def mla_attention(x: Array, p: dict, cfg, *,
         out = jnp.einsum("bhqr,rhd->bqhd", o_lat.astype(x.dtype),
                          wv.astype(x.dtype),
                          preferred_element_type=jnp.float32).astype(x.dtype)
-    elif kv_cache is not None and is_per_slot(start):
-        # slot-aware prefill: per-lane query offsets cannot share the flash
-        # block mask, so expand K/V from the cached latent and run the
-        # ragged mask (serving prefill micro-batches are short)
+    elif kv_cache is not None and (block_table is not None or
+                                   is_per_slot(start)):
+        # slot-aware (contiguous or paged) prefill: per-lane query offsets
+        # cannot share the flash block mask, so expand K/V from the cached
+        # latent view and run the ragged mask (serving prefill
+        # micro-batches are short)
         kv = jnp.einsum("btr,rhd->bthd", cc, wkv.astype(cc.dtype),
                         preferred_element_type=jnp.float32).astype(x.dtype)
         k_nope, v_exp = kv[..., :dn], kv[..., dn:]

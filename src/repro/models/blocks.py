@@ -43,6 +43,11 @@ class BlockCtx(NamedTuple):
     #   Threaded to the routed-expert engine as its `valid` mask so
     #   right-padded serving prompts neither consume grouped-backend
     #   expert capacity nor pollute load stats.
+    block_table: Optional[Array] = None   # (B, nblk) int32: PAGED serving.
+    #   When set, ctx.cache leaves are a block pool (nblocks, bs, ...)
+    #   shared by all lanes and lane b's logical block j lives in physical
+    #   block block_table[b, j] (0 = the trash block). The table is layer-
+    #   invariant — one table serves every layer of the stacked pool.
 
 
 def _lecun(key, shape, dtype, fan_in=None):
@@ -185,7 +190,8 @@ def dense_block(x: Array, p: dict, cfg, ctx: BlockCtx):
     h, new_kv = gqa_attention(
         rms_norm(x, p["norm1"], cfg.norm_eps), p["attn"], cfg,
         positions=ctx.positions, causal=ctx.causal, window=ctx.window,
-        kv_cache=ctx.cache, cache_pos=ctx.cache_pos, use_rope=ctx.use_rope)
+        kv_cache=ctx.cache, cache_pos=ctx.cache_pos, use_rope=ctx.use_rope,
+        block_table=ctx.block_table)
     x = x + h
     ffn_in = rms_norm(x, p["norm2"], cfg.norm_eps)
     y, aux = _apply_ffn(ffn_in, p, cfg, ctx)
@@ -237,7 +243,8 @@ def moe_block(x: Array, p: dict, cfg, ctx: BlockCtx):
     h, new_kv = gqa_attention(
         rms_norm(x, p["norm1"], cfg.norm_eps), p["attn"], cfg,
         positions=ctx.positions, causal=ctx.causal, window=ctx.window,
-        kv_cache=ctx.cache, cache_pos=ctx.cache_pos)
+        kv_cache=ctx.cache, cache_pos=ctx.cache_pos,
+        block_table=ctx.block_table)
     x = x + h
     ffn_in = rms_norm(x, p["norm2"], cfg.norm_eps)
     if cfg.cmoe is not None and "cmoe" in p:
@@ -266,7 +273,8 @@ def init_mla_moe_block(key, cfg, dtype) -> dict:
 def mla_moe_block(x: Array, p: dict, cfg, ctx: BlockCtx):
     h, new_cache = mla_attention(
         rms_norm(x, p["norm1"], cfg.norm_eps), p["attn"], cfg,
-        positions=ctx.positions, kv_cache=ctx.cache, cache_pos=ctx.cache_pos)
+        positions=ctx.positions, kv_cache=ctx.cache, cache_pos=ctx.cache_pos,
+        block_table=ctx.block_table)
     x = x + h
     ffn_in = rms_norm(x, p["norm2"], cfg.norm_eps)
     if cfg.cmoe is not None and "cmoe" in p:

@@ -150,7 +150,8 @@ class Model:
 
     def _stack(self, params, x: Array, *, caches=None, cache_pos=None,
                enc_out=None, remat: bool = False, capture: bool = False,
-               phase: str = "prefill", token_valid=None):
+               phase: str = "prefill", token_valid=None,
+               block_tables=None):
         """Run the layer stack. Returns (x, new_caches, aux)."""
         cfg = self.cfg
         seq = x.shape[1]
@@ -167,7 +168,7 @@ class Model:
                         window=0, causal=True, use_rope=True,
                         use_kernel=self.use_kernel, capture=capture,
                         phase=phase, backend=self.backend,
-                        token_valid=token_valid)
+                        token_valid=token_valid, block_table=block_tables)
         _, block_fn = B.BLOCKS[self.kind]
         moe_every = cfg.moe.moe_every if cfg.moe is not None else 1
 
@@ -368,11 +369,51 @@ class Model:
             return (attn_cache(L - n_per), attn_cache(n_per))
         return attn_cache(L)
 
+    def init_paged_cache(self, num_blocks: int, block_size: int,
+                         abstract=False):
+        """Paged KV pool: the same per-token layout as ``init_cache`` but
+        with the contiguous (B, max_len) slot-lane axes replaced by a flat
+        pool of fixed-size blocks — every leaf is (L, num_blocks,
+        block_size, ...). Lanes address the pool through per-slot block
+        tables (threaded to attention as ``step(block_tables=...)``); by
+        the serving engine's convention physical block 0 is the trash
+        block that absorbs dummy/spill writes (see
+        ``repro.serving.cache.PagedKVCache``). Only the slot-addressable
+        families the serving engine accepts are supported."""
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        make = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract else \
+            (lambda s, d: jnp.zeros(s, d))
+        L = cfg.num_layers
+        hd = cfg.resolved_head_dim
+
+        def attn_pool(n_layers):
+            return (make((n_layers, num_blocks, block_size,
+                          cfg.num_kv_heads, hd), dt),
+                    make((n_layers, num_blocks, block_size,
+                          cfg.num_kv_heads, hd), dt))
+
+        if self.kind == "mla_moe":
+            m = cfg.mla
+            return (make((L, num_blocks, block_size, m.kv_lora_rank), dt),
+                    make((L, num_blocks, block_size, m.qk_rope_head_dim),
+                         dt))
+        if self.kind in ("dense", "moe"):
+            moe_every = cfg.moe.moe_every if cfg.moe is not None else 1
+            if self.kind == "moe" and moe_every > 1:
+                n_per = L // moe_every
+                return (attn_pool(L - n_per), attn_pool(n_per))
+            return attn_pool(L)
+        raise NotImplementedError(
+            f"paged cache serves the slot-addressable KV families; "
+            f"kind={self.kind!r} is not one")
+
     def step(self, params, tokens: Array, cache, slot_pos, *,
              phase: Optional[str] = None,
              lengths: Optional[Array] = None,
              extras: Optional[dict] = None,
-             return_stats: bool = False):
+             return_stats: bool = False,
+             block_tables: Optional[Array] = None):
         """Unified slot-aware step — the serving engine's one entry point.
 
         Runs `tokens` (B, S) against `cache`, writing K/V at per-slot
@@ -396,6 +437,12 @@ class Model:
         keys land beyond the valid range where masks never look (they are
         overwritten as the slot decodes forward). `extras` carries
         non-token inputs (e.g. vlm patches) through to the embedder.
+        `block_tables` (B, nblk) switches the cache to the PAGED layout
+        (`init_paged_cache` leaves, one layer-invariant table per lane):
+        K/V writes scatter through the table and attention assembles each
+        lane's logical view from the pool — same rope positions, same
+        ragged masks, so a paged step computes the same function as the
+        contiguous slot step.
 
         Returns (logits (B, V) at each row's last valid position,
         new_cache) — or, with ``return_stats=True``, (logits, new_cache,
@@ -426,7 +473,8 @@ class Model:
                            jnp.asarray(lengths, jnp.int32)[:, None])
         x, ncaches, aux = self._stack(params, x, caches=cache,
                                       cache_pos=slot_pos, phase=phase,
-                                      token_valid=token_valid)
+                                      token_valid=token_valid,
+                                      block_tables=block_tables)
         if lengths is None:
             xl = x[:, -1:]
         else:

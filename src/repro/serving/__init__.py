@@ -18,14 +18,19 @@ batch lane busy on mixed traffic. Three pieces, three contracts:
     "static" models the classic baseline — it only admits when *all*
     slots are free, so a batch drains fully before the next one starts.
 
-``SlotKVCache`` (`cache.py`)
-    The model KV cache (leaves stacked (L, B, T, ...), batch axis 1) plus
-    per-slot valid lengths. Each slot carries its own position, so a new
-    prompt prefills into a freed slot at position 0 while neighboring
-    slots keep decoding at their own depths. Recycling a slot is just a
-    length reset: every cache entry a mask can reach is written by the
-    current request before it is read, so stale K/V from the previous
-    occupant is never attended (proved by the parity tests).
+``SlotKVCache`` / ``PagedKVCache`` (`cache.py`)
+    The model KV cache plus per-slot bookkeeping, in two layouts.
+    Contiguous: leaves stacked (L, B, T, ...), batch axis 1 — each slot
+    carries its own position, so a new prompt prefills into a freed slot
+    at position 0 while neighboring slots keep decoding at their own
+    depths; recycling is a length reset. Paged: a flat block pool
+    (L, 1 + nblocks, block, ...) addressed through per-slot BLOCK TABLES
+    — a request occupies ceil(len / block) blocks instead of a max_len
+    lane, admission reserves its worst case against pool headroom, and
+    recycling returns blocks to the free list. In both, every cache
+    entry a mask can reach is written by the current request before it
+    is read, so stale K/V from a previous occupant — of a lane or of a
+    recycled block — is never attended (proved by the parity tests).
 
 ``StepExecutor`` (`executor.py`)
     jit-compiled step functions over ``Model.step``. A prefill
@@ -61,7 +66,8 @@ CLI usage (``repro.launch.serve`` is a thin shell over this package)::
     PYTHONPATH=src python benchmarks/bench_serving.py --slots 4 \
         --requests 8 --no-gate
 """
-from repro.serving.cache import SlotKVCache, gather_slots, scatter_slots
+from repro.serving.cache import (PagedKVCache, SlotKVCache, gather_slots,
+                                 scatter_slots)
 from repro.serving.engine import EngineReport, ServingEngine
 from repro.serving.executor import StepExecutor
 from repro.serving.request import Request
@@ -70,7 +76,7 @@ from repro.serving.scheduler import Scheduler
 from repro.serving.workload import make_requests, poisson_arrivals
 
 __all__ = [
-    "EngineReport", "Request", "Scheduler", "ServingEngine", "SlotKVCache",
-    "StepExecutor", "gather_slots", "make_requests", "make_sampler",
-    "poisson_arrivals", "scatter_slots",
+    "EngineReport", "PagedKVCache", "Request", "Scheduler", "ServingEngine",
+    "SlotKVCache", "StepExecutor", "gather_slots", "make_requests",
+    "make_sampler", "poisson_arrivals", "scatter_slots",
 ]

@@ -1,14 +1,37 @@
-"""Slot-based KV cache: the model cache pytree + per-slot lengths.
+"""KV cache state for the serving engine: contiguous slot lanes or a
+paged block pool.
 
-Every cache layout this engine serves (GQA K/V, MLA latent) stacks layers
-at axis 0 and the batch at axis 1 — a "slot" is one batch lane. Gather /
-scatter over axis 1 move a micro-batch's slot rows in and out of the
-global cache inside the jitted step functions.
+Two layouts, one masking contract. Every cache family this engine serves
+(GQA K/V, MLA latent) stacks layers at axis 0:
 
-Recycling is a LENGTH RESET, not a wipe: attention masks stop at each
-slot's valid depth, and a slot's decode loop writes position p before any
-query can attend it, so K/V left behind by the previous occupant is never
-read. (tests/test_serving.py proves prefill-into-dirty-slot parity.)
+``SlotKVCache`` — contiguous lanes (L, B, max_len, ...): a "slot" is one
+    batch lane; gather/scatter over axis 1 move a micro-batch's slot rows
+    in and out of the global cache inside the jitted step functions.
+    Every request owns a full max_len lane for its lifetime, so one long
+    request dictates the HBM footprint of every short one.
+
+``PagedKVCache`` — a flat pool (L, 1 + num_blocks, block_size, ...) plus
+    a per-slot BLOCK TABLE: lane b's logical block j lives in physical
+    block ``tables[b, j]``. Blocks are allocated lazily as a lane's
+    length crosses block boundaries and returned to the free list when
+    the request finishes, so a request's HBM footprint is
+    ceil(len / block_size) blocks — not max_len — and admission is gated
+    on POOL HEADROOM (rid-keyed reservations of the request's worst-case
+    block count), never on slot count alone. Physical block 0 is the
+    TRASH block: unallocated table entries point at it, so dummy decode
+    writes from free lanes and padded chunk-tail spills land there
+    (finite garbage no mask can reach). The jitted steps index the pool
+    through the table (`models.attention.paged_view` /
+    `paged_cache_update`), so a resumed chunk's prefix window is a
+    per-block lookup rather than a pow2-bucketed [0, hist) copy.
+
+Recycling a slot is a BLOCK FREE (paged) or a length reset (contiguous),
+never a wipe: attention masks stop at each slot's valid depth, and a
+lane writes position p before any query can attend it, so K/V left
+behind by a previous occupant — in a recycled lane or a recycled block —
+is never read. (tests/test_serving.py proves prefill-into-dirty-slot
+parity; tests/test_paged.py proves paged == contiguous token parity over
+fragmented pools.)
 """
 from __future__ import annotations
 
@@ -85,6 +108,123 @@ class SlotKVCache:
     def free(self, slot: int) -> None:
         self.lengths[slot] = 0
 
+    def free_request(self, req) -> None:
+        """Uniform recycling entry shared with PagedKVCache."""
+        self.free(req.slot)
+
     def positions(self) -> np.ndarray:
         """Per-slot write positions for a full-width decode step."""
         return self.lengths.copy()
+
+
+class PagedKVCache:
+    """A block pool + per-slot block tables + rid-keyed reservations.
+
+    The device state is ``cache`` — every leaf (L, 1 + num_blocks,
+    block_size, ...), physical block 0 reserved as the trash block — and
+    the host state is:
+
+    ``tables``   (max_slots, blocks_per_slot) int32 — lane b's logical
+                 block j is physical block tables[b, j]; 0 marks a not-
+                 yet-allocated entry (reads through it hit trash, which
+                 masks never attend).
+    ``lengths``  per-slot valid depth, exactly as in SlotKVCache.
+    ``reserve/ensure/free_request`` — the allocation protocol. The engine
+                 RESERVES a request's worst-case block count at admission
+                 (`reserve` is the scheduler's admission gate: it fails —
+                 deferring the request — when the pool lacks headroom,
+                 and is idempotent per rid so a retried admission never
+                 double-books). Blocks are then ALLOCATED lazily from the
+                 free list by `ensure(req, upto)` at chunk boundaries and
+                 decode steps; because allocation never exceeds the
+                 reservation and reservations never exceed the pool, the
+                 free list cannot run dry mid-flight — pool pressure
+                 surfaces as admission deferrals, never as a dropped or
+                 stalled running lane. `free_request` returns the blocks
+                 (LIFO, so a long-running mix fragments the pool — block
+                 tables are deliberately not defragmented) and releases
+                 the reservation.
+
+    The same CAUTION as SlotKVCache applies to ``lengths`` AND
+    ``tables``: both are mutated between steps, so hand jax the
+    ``positions()`` / ``tables_snapshot()`` copies, never the live
+    arrays.
+    """
+
+    def __init__(self, model, max_slots: int, max_len: int, *,
+                 block_size: int = 16, num_blocks: int | None = None):
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.block_size = block_size
+        self.blocks_per_slot = -(-max_len // block_size)
+        if num_blocks is None:
+            # default: the same token capacity as max_slots contiguous
+            # lanes (the interesting configs pass fewer blocks)
+            num_blocks = max_slots * self.blocks_per_slot
+        if num_blocks < 1:
+            raise ValueError("num_blocks must be >= 1")
+        self.num_blocks = num_blocks
+        self.cache = model.init_paged_cache(num_blocks + 1, block_size)
+        self.tables = np.zeros((max_slots, self.blocks_per_slot), np.int32)
+        self.nalloc = np.zeros(max_slots, np.int32)
+        self.lengths = np.zeros(max_slots, np.int32)
+        # list.pop() takes the tail: blocks hand out 1, 2, 3, ... on a
+        # fresh pool, then most-recently-freed first (LIFO)
+        self._free = list(range(num_blocks, 0, -1))
+        self._reserved: dict[int, int] = {}          # rid -> block count
+        self.reserved_blocks = 0
+
+    # ------------------------------------------------------- reservations
+
+    def blocks_for(self, tokens: int) -> int:
+        return -(-tokens // self.block_size)
+
+    @property
+    def headroom(self) -> int:
+        """Blocks not yet promised to any admitted/deferred-head request."""
+        return self.num_blocks - self.reserved_blocks
+
+    def reserve(self, req, tokens: int) -> bool:
+        """Reserve the request's worst-case footprint; False = no
+        headroom (the caller defers admission). Idempotent per rid."""
+        if req.rid in self._reserved:
+            return True
+        need = self.blocks_for(tokens)
+        if need > self.headroom:
+            return False
+        self._reserved[req.rid] = need
+        self.reserved_blocks += need
+        return True
+
+    def ensure(self, req, upto: int) -> None:
+        """Allocate blocks until slot capacity covers [0, upto)."""
+        slot = req.slot
+        while int(self.nalloc[slot]) * self.block_size < upto:
+            assert int(self.nalloc[slot]) < self._reserved[req.rid], (
+                f"request {req.rid} outgrew its reservation "
+                f"({self._reserved[req.rid]} blocks)")
+            blk = self._free.pop()
+            self.tables[slot, self.nalloc[slot]] = blk
+            self.nalloc[slot] += 1
+
+    def free_request(self, req) -> None:
+        slot = req.slot
+        for j in range(int(self.nalloc[slot])):
+            self._free.append(int(self.tables[slot, j]))
+        self.tables[slot, :] = 0
+        self.nalloc[slot] = 0
+        self.lengths[slot] = 0
+        self.reserved_blocks -= self._reserved.pop(req.rid, 0)
+
+    # ----------------------------------------------------------- jit args
+
+    def positions(self) -> np.ndarray:
+        """Per-slot write positions for a full-width decode step."""
+        return self.lengths.copy()
+
+    def tables_snapshot(self) -> np.ndarray:
+        """A COPY of the block tables safe to hand to an asynchronously
+        dispatched step."""
+        return self.tables.copy()

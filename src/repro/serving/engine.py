@@ -10,9 +10,11 @@ Each engine iteration:
      width bucket, per-row valid lengths, per-slot START positions — a
      resumed chunk lands at its cursor, a fresh or recycled slot at 0);
      width-1 chunks piggyback on the decode micro-batch instead (same
-     (B, 1) shape — their compute rides a dispatch that runs anyway);
+     (B, 1) shape — a dispatch that either runs anyway or is already
+     compiled);
   3. decode every RUNNING slot full-width with per-slot positions;
-  4. finish requests on EOS / max_new / max_len and recycle their slots.
+  4. finish requests on EOS / max_new / max_len and recycle their slots
+     (max_len finishes before max_new mark the request ``truncated``).
 
 The phase is threaded per micro-batch down to the routed-expert engine,
 so prefill chunks run the grouped (ragged segment) backend while decode
@@ -21,10 +23,22 @@ ran and how many routed (token, expert) pairs it dropped (zero on every
 engine backend; nonzero only if a bounded-buffer stage overflowed —
 `EngineReport.dropped_pairs` aggregates the column so chunk width can be
 audited as numerically invisible).
+The cache behind the loop is either contiguous slot lanes or — with
+``paged=True`` — a block pool with per-request block tables
+(`serving.cache.PagedKVCache`): admission then reserves each request's
+worst-case block count against POOL headroom (not just a free slot), so
+concurrency is bounded by actual footprint, pool pressure surfaces as
+admission deferrals (`EngineReport.pool_deferrals`), and both layouts
+serve token-identical streams (tests/test_paged.py).
 Decode-stall telemetry: the wall gap between consecutive decode steps is
 the inter-token latency every decode lane paid that step (a prefill chunk
 dispatched between them lands inside the gap — the head-of-line signal
 chunking bounds); `EngineReport` summarizes the gaps as TPOT p50/p95.
+Gaps are only recorded — and the chain only continues — across steps
+where at least one lane is RUNNING: a piggyback-only dispatch (width-1
+prefill chunks riding the decode shape with no decode lane live) is a
+stall no decode token paid, so it breaks the chain instead of inflating
+the percentiles.
 """
 from __future__ import annotations
 
@@ -36,7 +50,7 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.cache import SlotKVCache
+from repro.serving.cache import PagedKVCache, SlotKVCache
 from repro.serving.executor import StepExecutor
 from repro.serving.request import RUNNING, Request
 from repro.serving.sampling import make_sampler
@@ -65,10 +79,25 @@ class EngineReport:
     #   steps — the inter-token latency every decode lane paid that step
     #   (prefill chunks dispatched between two decode steps are inside
     #   the gap: the head-of-line stall chunked prefill bounds). The
-    #   chain breaks across idle periods, so arrival gaps don't count.
+    #   chain breaks across idle periods AND piggyback-only dispatches
+    #   (no RUNNING lane), so gaps no decode token paid don't count.
     requests: list[Request]         # SNAPSHOTS of end-of-run state — a
     #   later engine.run() on the same request list resets/mutates the
     #   live objects, but not these copies
+    truncated: int                  # requests finished by the max_len
+    #   wall before reaching max_new (or EOS) — each also carries
+    #   Request.truncated, so a clipped stream is never a silent finish
+    pool_deferrals: int             # plans where a due request with a
+    #   free slot was deferred because the paged pool lacked headroom
+    #   for its reservation (0 in contiguous mode)
+    peak_occupancy: int             # max lanes simultaneously occupied —
+    #   the concurrency the cache layout actually admitted
+    live_tokens: int                # micro-batch tokens backed by real
+    #   work (decode: RUNNING + piggyback lanes; prefill: real chunk
+    #   tokens), summed over backend_log
+    padded_tokens: int              # what the dispatches actually
+    #   charged (decode: max_slots per step; prefill: rows x padded
+    #   width) — live/padded is the engine's compute utilization
 
     @property
     def goodput(self) -> float:
@@ -88,6 +117,12 @@ class EngineReport:
         return float(np.percentile(self.decode_gaps_s, 95)) \
             if self.decode_gaps_s else 0.0
 
+    @property
+    def compute_utilization(self) -> float:
+        """Live tokens / padded tokens over every dispatched micro-batch
+        — how much of the charged compute backed real lanes."""
+        return self.live_tokens / max(self.padded_tokens, 1)
+
     def summary(self) -> str:
         bc = {ph: dict(c) for ph, c in self.backend_counts.items()}
         return (f"{self.num_requests} requests in {self.steps} steps / "
@@ -95,8 +130,12 @@ class EngineReport:
                 f"goodput {self.goodput:.1f} tok/s, mean TTFT "
                 f"{self.mean_ttft_steps:.1f} steps, TPOT p50/p95 "
                 f"{self.tpot_p50_s * 1e3:.1f}/{self.tpot_p95_s * 1e3:.1f} "
-                f"ms, slot busy {self.slot_busy_frac * 100:.0f}%, slot "
-                f"reuse {self.slot_reuse}, dropped pairs "
+                f"ms, slot busy {self.slot_busy_frac * 100:.0f}%, peak "
+                f"occupancy {self.peak_occupancy}, slot reuse "
+                f"{self.slot_reuse}, truncated {self.truncated}, pool "
+                f"deferrals {self.pool_deferrals}, live/padded tokens "
+                f"{self.live_tokens}/{self.padded_tokens} "
+                f"({self.compute_utilization * 100:.0f}%), dropped pairs "
                 f"{self.dropped_pairs}, backends {bc}")
 
 
@@ -112,13 +151,27 @@ class ServingEngine:
     max_prefill_tokens is a true per-step prefill token budget: prompts
     longer than it are split into per-step chunks interleaved with decode
     (None = whole prompts in one micro-batch).
+    paged=True swaps the contiguous slot lanes for a block pool with
+    per-request block tables: each request's cache footprint is
+    ceil(len / block_size) blocks, admission reserves its worst case
+    against `num_blocks` pool headroom (default: the same token capacity
+    as max_slots contiguous lanes — pass fewer blocks to oversubscribe
+    slots against memory), and pool pressure surfaces as
+    `EngineReport.pool_deferrals`. Both layouts serve token-identical
+    streams.
+    A request whose prompt + max_new exceeds max_len is served but
+    CLIPPED at the max_len wall: it finishes early with
+    ``Request.truncated`` set (counted in `EngineReport.truncated`) —
+    never silently. Prompts longer than max_len are rejected.
     """
 
     def __init__(self, model, params, *, max_slots: int, max_len: int,
                  policy: str = "continuous",
                  prefill_bucket: int = 16,
                  max_prefill_tokens: Optional[int] = None,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0,
+                 paged: bool = False, block_size: int = 16,
+                 num_blocks: Optional[int] = None):
         kind = getattr(model, "kind", None)
         if model.cfg.family in ("ssm", "hybrid", "audio") or kind not in (
                 "dense", "moe", "mla_moe"):
@@ -132,6 +185,9 @@ class ServingEngine:
         self.prefill_bucket = max(1, prefill_bucket)
         self.temperature = temperature
         self.seed = seed
+        self.paged = paged
+        self.block_size = block_size
+        self.num_blocks = num_blocks
         self.executor = StepExecutor(model)
         # one padding granule shared with the scheduler, so the planner's
         # padded-compute budget accounting matches what actually runs
@@ -145,12 +201,15 @@ class ServingEngine:
         # timed window (the engine always samples in keyed mode, which is
         # stateless, so reuse across runs is exact)
         self._sampler = make_sampler(temperature, seed)
-        self.kv: Optional[SlotKVCache] = None
-        # (step, phase, padded tokens, backend, dropped pairs) per
-        # micro-batch — the drop column is the surfaced form of what used
-        # to be silent capacity eviction
+        self.kv: Optional[SlotKVCache | PagedKVCache] = None
+        # (step, phase, padded tokens, live tokens, backend, dropped
+        # pairs) per micro-batch — the drop column is the surfaced form
+        # of what used to be silent capacity eviction; the live column is
+        # the real work next to what the dispatch charged (a decode row
+        # always charges max_slots padded lanes, so without it per-step
+        # compute accounting diverged from live work)
         self.backend_log: list[
-            tuple[int, str, int, Optional[str], int]] = []
+            tuple[int, str, int, int, Optional[str], int]] = []
 
     # ------------------------------------------------------------- loop
 
@@ -160,13 +219,29 @@ class ServingEngine:
         for r in requests:
             if r.prompt_len < 1 or r.max_new < 1:
                 raise ValueError(f"request {r.rid}: empty prompt or gen")
-            if r.prompt_len + r.max_new > self.max_len:
+            if r.prompt_len > self.max_len:
                 raise ValueError(
-                    f"request {r.rid}: prompt {r.prompt_len} + max_new "
-                    f"{r.max_new} exceeds max_len {self.max_len}")
+                    f"request {r.rid}: prompt {r.prompt_len} exceeds "
+                    f"max_len {self.max_len}")
+            # prompt + max_new past max_len is allowed: the stream is
+            # clipped at the wall and SURFACED via Request.truncated
             r.reset()
         self.scheduler.reset()
-        self.kv = SlotKVCache(self.model, self.max_slots, self.max_len)
+        if self.paged:
+            self.kv = PagedKVCache(self.model, self.max_slots,
+                                   self.max_len,
+                                   block_size=self.block_size,
+                                   num_blocks=self.num_blocks)
+            for r in requests:
+                need = self.kv.blocks_for(self._footprint(r))
+                if need > self.kv.num_blocks:
+                    raise ValueError(
+                        f"request {r.rid}: needs {need} blocks, pool has "
+                        f"{self.kv.num_blocks} — it could never admit")
+            self.scheduler.admission_gate = self._paged_gate
+        else:
+            self.kv = SlotKVCache(self.model, self.max_slots, self.max_len)
+            self.scheduler.admission_gate = None
         self.backend_log = []
         self._decode_gaps: list[float] = []
         self._last_decode_t: Optional[float] = None
@@ -181,18 +256,23 @@ class ServingEngine:
 
         step = 0
         busy = 0
+        peak = 0
         t0 = time.perf_counter()
         while not self.scheduler.all_done():
             plan = self.scheduler.plan_prefill(step)
-            # width-1 chunks ride the decode micro-batch (same (B, 1)
-            # shape) when decode lanes are live — no extra dispatch
-            decode_live = bool(self.scheduler.active())
-            piggy = [(r, c) for r, c in plan if c == 1 and decode_live]
-            chunks = [(r, c) for r, c in plan if not (c == 1 and
-                                                      decode_live)]
+            # width-1 chunks ALWAYS ride the decode micro-batch: with
+            # decode lanes live their compute rides a dispatch that runs
+            # anyway, and without them the decode shape is the one the
+            # run has already compiled — either way no (n, 1) prefill
+            # bucket is dispatched (a piggyback-ONLY step records no
+            # decode gap; see _decode_microbatch)
+            piggy = [(r, c) for r, c in plan if c == 1]
+            chunks = [(r, c) for r, c in plan if c != 1]
             if chunks:
                 self._prefill_microbatch(chunks, step)
-            busy += len(self.scheduler.occupied())
+            occupied = len(self.scheduler.occupied())
+            busy += occupied
+            peak = max(peak, occupied)
             if self.scheduler.active() or piggy:
                 self._decode_microbatch(step, piggy)
             else:
@@ -219,13 +299,33 @@ class ServingEngine:
             decode_gaps_s=list(self._decode_gaps),
             requests=[dataclasses.replace(r, generated=list(r.generated))
                       for r in requests],
+            truncated=sum(1 for r in requests if r.truncated),
+            pool_deferrals=self.scheduler.gate_deferrals,
+            peak_occupancy=peak,
+            live_tokens=sum(lv for _, _, _, lv, _, _ in self.backend_log),
+            padded_tokens=sum(pd for _, _, pd, _, _, _ in
+                              self.backend_log),
         )
 
     def backend_counts(self) -> dict:
         out: dict[str, Counter] = {"prefill": Counter(), "decode": Counter()}
-        for _, phase, _, backend, _ in self.backend_log:
+        for _, phase, _, _, backend, _ in self.backend_log:
             out[phase][backend or "-"] += 1
         return out
+
+    # ------------------------------------------------------------- paged
+
+    def _footprint(self, req: Request) -> int:
+        """Worst-case cache tokens a request can occupy: its prompt plus
+        generation, clipped at the max_len wall (past which it finishes
+        truncated)."""
+        return min(req.prompt_len + req.max_new, self.max_len)
+
+    def _paged_gate(self, req: Request) -> bool:
+        """Scheduler admission gate: reserve the request's worst-case
+        block count against pool headroom (idempotent per rid — a
+        deferred or budget-stalled head keeps its reservation)."""
+        return self.kv.reserve(req, self._footprint(req))
 
     # ------------------------------------------------------ micro-batches
 
@@ -270,13 +370,32 @@ class ServingEngine:
             rids[i] = r.rid
             if r.admit_step < 0:
                 r.admit_step = step
+            if self.paged:
+                # allocate (from the admission reservation) the blocks
+                # this chunk's write window [cursor, cursor + c) lands in
+                self.kv.ensure(r, r.prefill_pos + c)
         hist = self._hist_width(int(starts.max()), w_pad)
-        logits, cache, backend, dropped = self.executor.prefill(
-            self.params, self.kv.cache, jnp.asarray(tokens),
-            jnp.asarray(slots), jnp.asarray(lengths), jnp.asarray(starts),
-            hist=hist)
+        if self.paged:
+            # the prefix window is a block-table lookup: hist rounds up
+            # to whole blocks and each row hands the step its first
+            # hist // block_size table entries (unallocated tail entries
+            # are trash — masked, like padded lane columns)
+            nblk = min(self.kv.blocks_for(hist), self.kv.blocks_per_slot)
+            tables = np.zeros((n, nblk), np.int32)
+            for i, (r, _) in enumerate(chunks):
+                tables[i] = self.kv.tables[r.slot, :nblk]
+            logits, cache, backend, dropped = self.executor.prefill_paged(
+                self.params, self.kv.cache, jnp.asarray(tokens),
+                jnp.asarray(tables), jnp.asarray(lengths),
+                jnp.asarray(starts))
+        else:
+            logits, cache, backend, dropped = self.executor.prefill(
+                self.params, self.kv.cache, jnp.asarray(tokens),
+                jnp.asarray(slots), jnp.asarray(lengths),
+                jnp.asarray(starts), hist=hist)
         self.kv.cache = cache
-        self.backend_log.append((step, "prefill", n * w_pad, backend,
+        self.backend_log.append((step, "prefill", n * w_pad,
+                                 int(lengths.sum()), backend,
                                  int(dropped)))
         first = np.asarray(self._sampler(logits, rids, tidx))
         for i, (r, c) in enumerate(chunks):
@@ -292,11 +411,16 @@ class ServingEngine:
         tokens = np.zeros((self.max_slots, 1), np.int32)
         rids = np.zeros(self.max_slots, np.int32)
         tidx = np.zeros(self.max_slots, np.int32)
+        running = 0
         for slot, r in enumerate(self.scheduler.slots):
             if r is not None and r.state == RUNNING:
                 tokens[slot, 0] = r.generated[-1]
                 rids[slot] = r.rid
                 tidx[slot] = len(r.generated)
+                running += 1
+                if self.paged:
+                    # the input token's K/V lands at lengths[slot]
+                    self.kv.ensure(r, int(self.kv.lengths[slot]) + 1)
         for r, _ in piggy:
             # a width-1 prefill chunk riding the decode dispatch: feed the
             # next prompt token at the slot's cursor; its logits row is
@@ -306,18 +430,35 @@ class ServingEngine:
             tidx[r.slot] = 0
             if r.admit_step < 0:
                 r.admit_step = step
+            if self.paged:
+                self.kv.ensure(r, r.prefill_pos + 1)
         positions = self.kv.positions()
-        logits, cache, backend, dropped = self.executor.decode(
-            self.params, self.kv.cache, jnp.asarray(tokens),
-            jnp.asarray(positions))
+        if self.paged:
+            logits, cache, backend, dropped = self.executor.decode_paged(
+                self.params, self.kv.cache, jnp.asarray(tokens),
+                jnp.asarray(positions),
+                jnp.asarray(self.kv.tables_snapshot()))
+        else:
+            logits, cache, backend, dropped = self.executor.decode(
+                self.params, self.kv.cache, jnp.asarray(tokens),
+                jnp.asarray(positions))
         self.kv.cache = cache
-        self.backend_log.append((step, "decode", self.max_slots, backend,
+        self.backend_log.append((step, "decode", self.max_slots,
+                                 running + len(piggy), backend,
                                  int(dropped)))
         nxt = np.asarray(self._sampler(logits, rids, tidx))
-        now = time.perf_counter()
-        if self._last_decode_t is not None:
-            self._decode_gaps.append(now - self._last_decode_t)
-        self._last_decode_t = now
+        if running:
+            # the gap is inter-token latency only for lanes that decoded:
+            # a piggyback-only dispatch (no RUNNING lane) pays it for no
+            # decode token, so it breaks the chain instead of recording —
+            # recording here used to inflate TPOT p50/p95 with stalls no
+            # lane paid
+            now = time.perf_counter()
+            if self._last_decode_t is not None:
+                self._decode_gaps.append(now - self._last_decode_t)
+            self._last_decode_t = now
+        else:
+            self._last_decode_t = None
         for slot, r in enumerate(self.scheduler.slots):
             if r is None or r.state != RUNNING:
                 continue
@@ -337,8 +478,13 @@ class ServingEngine:
         # the next decode would write this token's K/V at position
         # lengths[slot]; finish when that write would fall off the cache
         slot_len = int(self.kv.lengths[req.slot])
-        if hit_eos or len(req.generated) >= req.max_new or \
-                slot_len >= self.max_len:
-            slot = req.slot
+        full = slot_len >= self.max_len
+        if hit_eos or len(req.generated) >= req.max_new or full:
+            if full and not hit_eos and len(req.generated) < req.max_new:
+                # the max_len wall clipped the stream before max_new:
+                # surface it — a silent finish here misreported clipped
+                # requests as complete (paged admission deferrals are
+                # surfaced separately, via EngineReport.pool_deferrals)
+                req.truncated = True
             self.scheduler.finish(req, step)
-            self.kv.free(slot)
+            self.kv.free_request(req)

@@ -21,6 +21,13 @@ Two compiled shapes do all the work:
       before anything can attend it; a PREFILLING lane idling this step
       likewise has its dummy write overwritten by its own next chunk.
 
+Each has a PAGED twin (`prefill_paged` / `decode_paged`) taking per-slot
+block tables instead of slot indices: the pool is the cache, writes
+scatter through the table inside the jitted step, and a resumed chunk's
+prefix window is a per-block table lookup instead of a gathered [0, hist)
+copy. Free/dummy lanes carry all-trash tables (physical block 0), the
+paged analogue of the overwrite-before-attend argument above.
+
 Each call also returns the routed-expert backend this micro-batch runs
 (``microbatch_backend`` — the same policy ``routed_experts`` applies, with
 the phase threaded through model -> blocks -> engine), so the serving loop
@@ -54,6 +61,8 @@ class StepExecutor:
         self._prefill = jax.jit(self._prefill_impl,
                                 static_argnames=("hist",))
         self._decode = jax.jit(self._decode_impl)
+        self._prefill_paged = jax.jit(self._prefill_paged_impl)
+        self._decode_paged = jax.jit(self._decode_paged_impl)
 
     def _backend(self, num_tokens: int, phase: str):
         m = self.model
@@ -101,6 +110,32 @@ class StepExecutor:
         return (logits, cache, self._backend(int(tokens.size), "prefill"),
                 dropped)
 
+    def _prefill_paged_impl(self, params, cache, tokens, tables, lengths,
+                            starts):
+        # no [0, hist) sub-cache copy: the pool IS the cache, writes
+        # scatter through the table inside the step, and attention
+        # assembles each lane's prefix view per block. The table width
+        # (hist // block_size, bucketed by the engine) bounds both the
+        # attended window and the number of compiled shapes.
+        logits, ncache, stats = self.model.step(params, tokens, cache,
+                                                starts, lengths=lengths,
+                                                phase="prefill",
+                                                block_tables=tables,
+                                                return_stats=True)
+        return logits, ncache, stats["dropped"]
+
+    def prefill_paged(self, params, cache, tokens: Array, tables: Array,
+                      lengths: Array, starts: Array):
+        """Paged twin of `prefill`: `tables` (n, nblk) replaces the
+        (slots, hist) pair — row i's chunk writes land at
+        starts[i] + j through its block table and its queries attend the
+        [0, nblk * block_size) logical window. Returns (logits (n, V),
+        new_cache, backend, dropped routed pairs)."""
+        logits, cache, dropped = self._prefill_paged(params, cache, tokens,
+                                                     tables, lengths, starts)
+        return (logits, cache, self._backend(int(tokens.size), "prefill"),
+                dropped)
+
     # ------------------------------------------------------------ decode
 
     def _decode_impl(self, params, cache, tokens, positions):
@@ -113,5 +148,24 @@ class StepExecutor:
         """Returns (logits (B, V), new_cache, backend, dropped pairs)."""
         logits, cache, dropped = self._decode(params, cache, tokens,
                                               positions)
+        return (logits, cache, self._backend(int(tokens.shape[0]), "decode"),
+                dropped)
+
+    def _decode_paged_impl(self, params, cache, tokens, positions, tables):
+        logits, ncache, stats = self.model.step(params, tokens, cache,
+                                                positions, phase="decode",
+                                                block_tables=tables,
+                                                return_stats=True)
+        return logits, ncache, stats["dropped"]
+
+    def decode_paged(self, params, cache, tokens: Array, positions: Array,
+                     tables: Array):
+        """Paged twin of `decode`: full-width over all slots, each lane
+        reading/writing its own blocks through `tables` (B,
+        blocks_per_slot) — one compiled shape for the whole run, exactly
+        like the contiguous decode. Free lanes' tables are all-trash, so
+        their dummy writes land in block 0."""
+        logits, cache, dropped = self._decode_paged(params, cache, tokens,
+                                                    positions, tables)
         return (logits, cache, self._backend(int(tokens.shape[0]), "decode"),
                 dropped)

@@ -40,6 +40,9 @@ class Request:
     admit_step: int = -1              # step the request got its slot
     first_token_step: int = -1        # step the first token was sampled
     finish_step: int = -1
+    truncated: bool = False           # finished because the slot hit
+    #   max_len before max_new (and before EOS) — surfaced on
+    #   EngineReport.summary(), never a silent early finish
 
     @property
     def prompt_len(self) -> int:
@@ -57,3 +60,4 @@ class Request:
         self.admit_step = -1
         self.first_token_step = -1
         self.finish_step = -1
+        self.truncated = False

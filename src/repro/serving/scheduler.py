@@ -71,6 +71,12 @@ class Scheduler:
         self.policy = policy
         self.max_prefill_tokens = max_prefill_tokens
         self.prefill_granule = prefill_granule
+        # optional admission gate beyond slot availability (the paged
+        # engine's pool-headroom reservation: returns False to DEFER the
+        # head-of-queue request; must be idempotent, because a deferred
+        # or budget-stalled head is re-gated on the next plan). Set by
+        # the engine per run — reset() preserves it.
+        self.admission_gate = None
         self.reset()
 
     def reset(self) -> None:
@@ -80,6 +86,10 @@ class Scheduler:
         self.prefilling: list[Request] = []             # admission order
         self.num_admitted = 0
         self.slot_reuse = 0            # admissions into a previously-used slot
+        self.gate_deferrals = 0        # plans where the admission gate
+        #   deferred a due request a free slot was available for (paged:
+        #   pool exhaustion) — surfaced via EngineReport.pool_deferrals,
+        #   never a silent drop
         self._slot_used = [False] * self.max_slots
 
     # ------------------------------------------------------------- queue
@@ -156,6 +166,13 @@ class Scheduler:
             return plan
         while (self.pending and self.pending[0].arrival <= now
                and self._free_heap):
+            # gate BEFORE charging the budget: a gate-passed reservation
+            # is idempotent, so a head that then stalls on budget is
+            # simply re-admitted (reservation intact) next plan
+            if self.admission_gate is not None and \
+                    not self.admission_gate(self.pending[0]):
+                self.gate_deferrals += 1
+                break                  # FIFO: nothing behind may jump it
             chunk = take(self.pending[0].prompt_len)
             if chunk == 0:
                 break

@@ -1,0 +1,289 @@
+"""Paged KV cache: block-pool mechanics + paged == contiguous parity.
+
+The contract under test: swapping the contiguous (max_len,) slot lanes
+for a block pool with per-request block tables is INVISIBLE to the
+token streams — greedy and keyed temperature>0 sampling produce
+bitwise-identical generations across recycled slots, fragmented pools
+(interleaved finish/admit, LIFO block reuse), chunked prefill, and every
+block size — while pool pressure surfaces as admission deferrals, never
+as drops or forked streams.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.config import override
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.serving import PagedKVCache, Request, ServingEngine
+
+
+def _mk_reqs(cfg, specs, seed=11):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=[int(t) for t in
+                                   rng.integers(0, cfg.vocab_size, plen)],
+                    max_new=gen, arrival=arr)
+            for i, (plen, gen, arr) in enumerate(specs)]
+
+
+def _run(model, params, reqs, *, paged, max_slots=2, max_len=48, bucket=8,
+         mpt=None, temperature=0.0, block_size=8, num_blocks=None):
+    engine = ServingEngine(model, params, max_slots=max_slots,
+                           max_len=max_len, prefill_bucket=bucket,
+                           max_prefill_tokens=mpt, temperature=temperature,
+                           paged=paged, block_size=block_size,
+                           num_blocks=num_blocks)
+    report = engine.run(reqs)
+    assert all(r.done for r in report.requests)
+    return {r.rid: tuple(r.generated) for r in report.requests}, report
+
+
+# the chunked mixed-length mix every parity test below reuses: staggered
+# arrivals through 2 slots force interleaved finish/admit, so recycled
+# slots pick up most-recently-freed (LIFO) blocks and tables fragment
+SPECS = [(9, 5, 0.0), (33, 6, 1.0), (16, 4, 2.0), (8, 4, 6.0),
+         (11, 5, 9.0)]
+
+
+def test_block_pool_fragmentation_and_recycling(qwen_smoke):
+    """Host-side pool mechanics: lazy allocation within reservations,
+    LIFO block recycling that hands a later request NON-CONTIGUOUS
+    physical blocks, idempotent reservations, and headroom accounting."""
+    cfg, model, params = qwen_smoke
+    kv = PagedKVCache(model, 4, 32, block_size=8)     # 16 blocks + trash
+    assert kv.blocks_per_slot == 4 and kv.headroom == 16
+
+    def mk(rid, slot):
+        r = Request(rid=rid, prompt=[1] * 16, max_new=8)
+        r.slot = slot
+        return r
+
+    a, b, c = mk(0, 0), mk(1, 1), mk(2, 2)
+    assert kv.reserve(a, 24) and kv.reserve(b, 24) and kv.reserve(c, 24)
+    assert kv.reserve(b, 24)                          # idempotent re-gate
+    assert kv.headroom == 16 - 9
+    kv.ensure(a, 16)
+    kv.ensure(b, 16)
+    kv.ensure(c, 16)
+    # a fresh pool hands out blocks in order (trash block 0 never leaves)
+    assert kv.tables[0, :2].tolist() == [1, 2]
+    assert kv.tables[1, :2].tolist() == [3, 4]
+    assert kv.tables[2, :2].tolist() == [5, 6]
+    assert 0 not in (kv.tables[:3, :2]).tolist()
+
+    kv.free_request(b)                                # 3, 4 -> free (LIFO)
+    assert kv.tables[1].tolist() == [0, 0, 0, 0]      # unallocated = trash
+    assert kv.headroom == 16 - 6
+
+    d = mk(3, 1)
+    assert kv.reserve(d, 24)
+    kv.ensure(d, 24)
+    # recycled blocks first (most-recently-freed), then a fresh one: the
+    # table is non-contiguous and non-monotone — and that's fine, the
+    # table IS the address map
+    assert kv.tables[1, :3].tolist() == [4, 3, 7]
+
+    # ensure never outgrows a reservation
+    with pytest.raises(AssertionError):
+        kv.ensure(d, 25)
+
+    kv.free_request(a)
+    kv.free_request(c)
+    kv.free_request(d)
+    assert kv.headroom == 16 and kv.reserved_blocks == 0
+    assert sorted(kv._free) == list(range(1, 17))     # every block back
+
+    # a request larger than the whole pool can never be admitted: the
+    # engine rejects it up front instead of deferring forever
+    engine = ServingEngine(model, params, max_slots=2, max_len=32,
+                           paged=True, block_size=8, num_blocks=2)
+    with pytest.raises(ValueError, match="could never admit"):
+        engine.run([Request(rid=0, prompt=[1] * 24, max_new=8)])
+
+
+def test_paged_matches_contiguous_gqa(qwen_smoke):
+    """Greedy token parity, chunked + unchunked, over recycled slots and
+    a fragmented pool — and the paged run really ran fragmented tables
+    (a decode-step spy sees a non-contiguous block table mid-run)."""
+    cfg, model, params = qwen_smoke
+    reqs = _mk_reqs(cfg, SPECS)
+    base, rep_base = _run(model, params, reqs, paged=False, mpt=8)
+    engine = ServingEngine(model, params, max_slots=2, max_len=48,
+                           prefill_bucket=8, max_prefill_tokens=8,
+                           paged=True, block_size=8)
+    seen = []
+    orig = engine.executor.decode_paged
+
+    def spy(params_, cache, tokens, positions, tables):
+        seen.append(np.asarray(tables).copy())
+        return orig(params_, cache, tokens, positions, tables)
+
+    engine.executor.decode_paged = spy
+    rep = engine.run(reqs)
+    got = {r.rid: tuple(r.generated) for r in rep.requests}
+    assert got == base
+    assert rep.slot_reuse >= 3 and rep.dropped_pairs == 0
+    assert rep.pool_deferrals == 0                    # full-size pool
+
+    def fragmented(table_row):
+        alloc = table_row[table_row > 0]
+        return len(alloc) >= 2 and np.any(np.diff(alloc) != 1)
+
+    assert any(fragmented(t[row]) for t in seen for row in range(2)), \
+        "workload never fragmented a block table — test lost its teeth"
+
+    # unchunked paged == unchunked contiguous too
+    base_u, _ = _run(model, params, reqs, paged=False, mpt=None)
+    got_u, _ = _run(model, params, reqs, paged=True, mpt=None,
+                    block_size=8)
+    assert got_u == base_u
+
+
+def test_paged_matches_contiguous_mla():
+    """The MLA latent pool: absorbed decode + ragged prefill through
+    block tables reproduce the contiguous streams token-for-token."""
+    cfg = override(get_smoke_config("deepseek-v2-236b"), dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    reqs = _mk_reqs(cfg, [(6, 4, 0.0), (8, 4, 1.0), (10, 4, 2.0)], seed=2)
+    for mpt in (None, 3):
+        base, rep_base = _run(model, params, reqs, paged=False,
+                              max_len=24, mpt=mpt)
+        for bs in (8, 16):
+            got, rep = _run(model, params, reqs, paged=True, max_len=24,
+                            mpt=mpt, block_size=bs)
+            assert got == base, (mpt, bs)
+            assert rep.dropped_pairs == 0
+    assert rep.slot_reuse >= 1
+    assert set(rep.backend_counts["decode"]) == {"gather"}
+
+
+def test_paged_sampling_parity_temperature(qwen_smoke):
+    """temperature > 0: the keyed sampler draws by (rid, token index), so
+    the paged layout cannot perturb sampled streams either."""
+    cfg, model, params = qwen_smoke
+    reqs = _mk_reqs(cfg, SPECS, seed=4)
+    base, _ = _run(model, params, reqs, paged=False, mpt=8,
+                   temperature=0.7)
+    got, _ = _run(model, params, reqs, paged=True, mpt=8, block_size=8,
+                  temperature=0.7)
+    assert got == base
+
+
+def test_paged_pool_exhaustion_defers_not_drops(qwen_smoke):
+    """A pool far smaller than max_slots x max_len serializes admissions
+    (deferrals surface on the report) but serves the IDENTICAL streams:
+    exhaustion is backpressure, never truncation or a drop."""
+    cfg, model, params = qwen_smoke
+    reqs = _mk_reqs(cfg, SPECS)
+    base, rep_base = _run(model, params, reqs, paged=False, mpt=8)
+    # 6 blocks x 8 = 48 pool tokens for 2 slots x 48 max_len demand
+    got, rep = _run(model, params, reqs, paged=True, mpt=8, block_size=8,
+                    num_blocks=6)
+    assert got == base
+    assert rep.pool_deferrals > 0
+    assert rep.truncated == 0
+    assert rep.dropped_pairs == 0
+    assert "pool deferrals" in rep.summary()
+    # headroom gating really throttled concurrency below the slot count
+    assert rep.peak_occupancy <= rep_base.peak_occupancy
+    assert rep.steps > rep_base.steps
+
+
+@pytest.mark.parametrize("block_size", [4, 8, 16])
+def test_paged_parity_every_block_size(qwen_smoke, block_size):
+    """Always-on (hypothesis-free) parity sweep: paged == contiguous
+    greedy streams at every supported block size, chunked prefill on."""
+    cfg, model, params = qwen_smoke
+    reqs = _mk_reqs(cfg, [(5, 3, 0.0), (11, 4, 1.0), (8, 4, 2.0)],
+                    seed=21)
+    base, _ = _run(model, params, reqs, paged=False, max_len=32, mpt=5)
+    got, rep = _run(model, params, reqs, paged=True, max_len=32, mpt=5,
+                    block_size=block_size)
+    assert got == base
+    assert rep.dropped_pairs == 0
+
+
+try:
+    import hypothesis  # noqa: F401
+    HAVE_HYP = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYP = False
+
+if HAVE_HYP:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=6, deadline=None)
+    @given(block_size=st.sampled_from([4, 8, 16]),
+           mpt=st.sampled_from([None, 5, 8]),
+           seed=st.integers(0, 3))
+    def test_paged_parity_property(qwen_smoke, block_size, mpt, seed):
+        """Property: for ANY block size in {4, 8, 16}, prefill budget,
+        and request mix, paged == contiguous greedy streams."""
+        cfg, model, params = qwen_smoke
+        specs = [(5 + 3 * i + seed, 3 + (i + seed) % 3, float(i))
+                 for i in range(3)]
+        reqs = _mk_reqs(cfg, specs, seed=20 + seed)
+        base, _ = _run(model, params, reqs, paged=False, max_len=32,
+                       mpt=mpt)
+        got, rep = _run(model, params, reqs, paged=True, max_len=32,
+                        mpt=mpt, block_size=block_size)
+        assert got == base
+        assert rep.dropped_pairs == 0
+
+
+def test_truncated_surfaced_both_layouts(qwen_smoke):
+    """A request whose prompt + max_new exceeds max_len finishes at the
+    max_len wall with Request.truncated set and is counted on the report
+    — in the contiguous AND the paged layout, with identical clipped
+    streams. Requests that fit are never flagged."""
+    cfg, model, params = qwen_smoke
+    rng = np.random.default_rng(6)
+    prompt = [int(t) for t in rng.integers(0, cfg.vocab_size, 8)]
+    reqs = [Request(rid=0, prompt=prompt, max_new=20),
+            Request(rid=1, prompt=list(prompt), max_new=2, arrival=1.0)]
+    outs = {}
+    for paged in (False, True):
+        _, rep = _run(model, params, reqs, paged=paged, max_slots=2,
+                      max_len=16, block_size=8)
+        r0 = next(r for r in rep.requests if r.rid == 0)
+        r1 = next(r for r in rep.requests if r.rid == 1)
+        assert r0.truncated and not r1.truncated
+        # clipped at the wall: 1 prefill token + (16 - 8) decode writes
+        assert len(r0.generated) == 9 < 20
+        assert rep.truncated == 1
+        assert "truncated 1" in rep.summary()
+        outs[paged] = tuple(r0.generated)
+    assert outs[False] == outs[True]
+    # a prompt that itself exceeds max_len is still rejected up front
+    with pytest.raises(ValueError, match="exceeds"):
+        ServingEngine(model, params, max_slots=1, max_len=16).run(
+            [Request(rid=0, prompt=[1] * 17, max_new=1)])
+
+
+def test_backend_log_live_lane_accounting(qwen_smoke):
+    """Decode rows log the LIVE lane count next to the padded width (a
+    decode dispatch always charges max_slots), and the report aggregates
+    both so compute accounting matches real work."""
+    cfg, model, params = qwen_smoke
+    # one early short request + one late: most of the run has 1 of 4
+    # lanes live, so live < padded on decode rows
+    reqs = [Request(rid=0, prompt=[1, 2, 3, 4], max_new=10, arrival=0.0),
+            Request(rid=1, prompt=[5, 6, 7, 8], max_new=2, arrival=3.0)]
+    engine = ServingEngine(model, params, max_slots=4, max_len=16,
+                           prefill_bucket=4)
+    rep = engine.run(reqs)
+    decode_rows = [(pd, lv) for _, ph, pd, lv, _, _ in engine.backend_log
+                   if ph == "decode"]
+    assert decode_rows and all(pd == 4 for pd, _ in decode_rows)
+    assert all(0 < lv <= pd for pd, lv in decode_rows)
+    assert any(lv < pd for pd, lv in decode_rows)
+    prefill_rows = [(pd, lv) for _, ph, pd, lv, _, _ in engine.backend_log
+                    if ph == "prefill"]
+    assert all(0 < lv <= pd for pd, lv in prefill_rows)
+    assert rep.padded_tokens == sum(pd for _, ph, pd, _, _, _ in
+                                    engine.backend_log)
+    assert rep.live_tokens == sum(lv for _, ph, _, lv, _, _ in
+                                  engine.backend_log)
+    assert 0 < rep.compute_utilization < 1
+    assert "live/padded" in rep.summary()

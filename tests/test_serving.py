@@ -321,6 +321,39 @@ def test_chunked_report_metrics(qwen_smoke):
     assert long_req.prefill_pos == long_req.prompt_len
 
 
+def test_decode_gap_skips_piggyback_only_steps(qwen_smoke):
+    """TPOT telemetry regression: a piggyback-only dispatch (a width-1
+    prefill chunk riding the decode shape with NO RUNNING lane) must
+    neither record a decode gap nor keep the gap chain alive — recording
+    it inflated TPOT p50/p95 with stalls no decode token paid.
+
+    Timeline (1-token prompts, max_new=3, slots=1):
+      step 0  A piggyback-only      -> no gap, chain stays broken
+      step 1  A decodes             -> chain starts (no gap yet)
+      step 2  A decodes, finishes   -> gap #1
+      step 3  idle (B not due)      -> chain broken
+      step 4  B piggyback-only      -> no gap (the bug recorded one here
+                                       once the chain survived step 3's
+                                       break in longer variants)
+      step 5  B decodes             -> chain starts
+      step 6  B decodes, finishes   -> gap #2
+    """
+    cfg, model, params = qwen_smoke
+    reqs = [Request(rid=0, prompt=[3], max_new=3, arrival=0.0),
+            Request(rid=1, prompt=[4], max_new=3, arrival=4.0)]
+    engine = ServingEngine(model, params, max_slots=1, max_len=8,
+                           prefill_bucket=4, max_prefill_tokens=4)
+    rep = engine.run(reqs)
+    assert all(r.done for r in rep.requests)
+    # every piggyback-only step ran the decode dispatch (backend_log has
+    # a decode row with live lanes > 0) yet recorded no gap
+    decode_steps = [s for s, ph, *_ in engine.backend_log
+                    if ph == "decode"]
+    assert len(decode_steps) == 6                      # 3 per request
+    assert len(rep.decode_gaps_s) == 2, rep.decode_gaps_s
+    assert rep.tpot_p50_s > 0
+
+
 def test_engine_backend_policy_per_microbatch():
     """Decode micro-batches run the gather backend (cheapest at decode
     T); prefill micro-batches above the break-even run grouped."""
@@ -553,7 +586,7 @@ def test_scheduler_budget_true_for_first_admission():
     engine = ServingEngine(model, params, max_slots=2, max_len=24,
                            prefill_bucket=8, max_prefill_tokens=8)
     engine.run([req])
-    prefills = [(t, n) for t, ph, n, _, _ in engine.backend_log
+    prefills = [(t, n) for t, ph, n, _, _, _ in engine.backend_log
                 if ph == "prefill"]
     assert len(prefills) == 3                          # ceil(20 / 8)
     assert all(n <= 8 for _, n in prefills), prefills
@@ -565,7 +598,7 @@ def test_scheduler_budget_true_for_first_admission():
     engine = ServingEngine(model, params, max_slots=4, max_len=24,
                            prefill_bucket=8, max_prefill_tokens=8)
     engine.run(herd)
-    prefills = [n for _, ph, n, _, _ in engine.backend_log
+    prefills = [n for _, ph, n, _, _, _ in engine.backend_log
                 if ph == "prefill"]
     assert all(n <= 8 for n in prefills), prefills     # padded rows count
 
