@@ -1,4 +1,5 @@
-"""Decode throughput: `gather` vs `grouped_xla` routed-expert backends.
+"""Decode throughput: routed-expert backends + Pallas kernels, with a
+measured crossover artifact.
 
 Measures the unified engine (`repro.core.experts.routed_experts`) at
 decode shapes — T = batch tokens per step, the regime where the grouped
@@ -9,7 +10,7 @@ experts through (T*k)-batched GEMMs.
 
     PYTHONPATH=src python benchmarks/bench_decode_backends.py
     PYTHONPATH=src python benchmarks/bench_decode_backends.py \
-        --d-model 1024 --d-expert 512 --iters 30
+        --d-model 1024 --d-expert 512 --iters 30 --out
 
 The default bank shape is deepseek-flavored (E=160, k=6, the deepseek-v2
 routed-expert ratios): large expert counts are where token-choice gather
@@ -19,6 +20,16 @@ CMoE bank (E=8, k=3) gather wins only at batch <= 2, which is why
 `select_backend` keys on the decode phase / a token threshold rather than
 always preferring gather.
 
+With `--out` the sweep is written to ``BENCH_decode_backends.json``
+including the measured crossover (the largest swept batch below gather's
+first loss to a grouped backend). ``select_backend`` consumes that
+artifact — for calls with the SAME (num_experts, top_k) the measured
+number replaces the ~E/k heuristic, including moving wide decode off
+gather. Kernel columns (`gather_kernel`, `grouped_pallas`) run on TPU
+(or with --kernels on); off-TPU they execute in Pallas interpret mode,
+whose timings say nothing about hardware — `--kernels auto` (default)
+skips them there and the artifact records why.
+
 Expected on CPU: gather wins decisively at batch <= 8 (the serving
 latency regime); grouped takes over at larger batches.
 """
@@ -26,11 +37,14 @@ from __future__ import annotations
 
 import argparse
 import functools
+import json
 import sys
 import time
 
 import jax
 import jax.numpy as jnp
+
+OUT_DEFAULT = "BENCH_decode_backends.json"
 
 
 class _Cfg:
@@ -57,8 +71,22 @@ def _bench(fn, args, iters: int, calls_per_sample: int = 5) -> float:
     return best
 
 
+def _crossover(rows, batches, grouped_cols):
+    """The largest swept batch strictly below gather's first loss to any
+    grouped column — i.e. 'gather wins up to N decode tokens'. None when
+    gather never loses inside the sweep (no measured crossover exists;
+    the heuristic stays in charge rather than extrapolating)."""
+    for row in rows:
+        best_grouped = max(row["tok_per_s"][c] for c in grouped_cols)
+        if row["tok_per_s"]["gather"] <= best_grouped:
+            below = [b for b in batches if b < row["batch"]]
+            return max(below) if below else 0
+    return None
+
+
 def main(argv=None):
     from repro.core.experts import routed_experts
+    from repro.kernels import ops as kops
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--d-model", type=int, default=512)
@@ -69,6 +97,17 @@ def main(argv=None):
     ap.add_argument("--capacity-factor", type=float, default=1.25)
     ap.add_argument("--batches", type=int, nargs="+",
                     default=[1, 2, 4, 8, 16, 32, 64])
+    ap.add_argument("--kernels", choices=("auto", "on", "off"),
+                    default="auto",
+                    help="include the Pallas kernel columns "
+                         "(gather_kernel, grouped_pallas). auto = TPU "
+                         "only: interpret-mode timings say nothing about "
+                         "hardware")
+    ap.add_argument("--out", nargs="?", const=OUT_DEFAULT, default=None,
+                    help=f"write the sweep + measured crossover as JSON "
+                         f"(default path: {OUT_DEFAULT}); "
+                         f"select_backend consumes it for shape-matched "
+                         f"calls")
     ap.add_argument("--no-gate", action="store_true",
                     help="report only; don't exit nonzero when gather "
                          "fails to beat grouped at batch <= 8 (timings "
@@ -82,19 +121,37 @@ def main(argv=None):
          "wu": jax.random.normal(ks[1], (e, d, m), jnp.float32),
          "wd": jax.random.normal(ks[2], (e, m, d), jnp.float32)}
 
-    backends = ("gather", "grouped_xla")
+    use_kernels = kops.on_tpu() if args.kernels == "auto" \
+        else args.kernels == "on"
+    backends = ["gather", "grouped_xla"]
     fns = {
-        be: jax.jit(functools.partial(
-            routed_experts, cfg=cfg, backend=be, phase="decode",
-            capacity_factor=args.capacity_factor))
-        for be in backends
+        "gather": jax.jit(functools.partial(
+            routed_experts, cfg=cfg, backend="gather", phase="decode",
+            capacity_factor=args.capacity_factor)),
+        "grouped_xla": jax.jit(functools.partial(
+            routed_experts, cfg=cfg, backend="grouped_xla", phase="decode",
+            capacity_factor=args.capacity_factor)),
     }
+    if use_kernels:
+        backends += ["gather_kernel", "grouped_pallas"]
+        fns["gather_kernel"] = jax.jit(functools.partial(
+            routed_experts, cfg=cfg, backend="gather", phase="decode",
+            use_kernel=True, capacity_factor=args.capacity_factor))
+        fns["grouped_pallas"] = jax.jit(functools.partial(
+            routed_experts, cfg=cfg, backend="grouped_pallas",
+            phase="decode", capacity_factor=args.capacity_factor))
+    elif args.kernels == "auto" and not kops.on_tpu():
+        print("# kernels: skipped (no TPU; interpret-mode timings are "
+              "not hardware numbers — force with --kernels on)")
 
     print(f"# decode routed-expert throughput — d={d} m={m} E={e} k={k} "
           f"(tok/s, best of {args.iters} samples)")
-    print(f"{'batch':>6} {'gather':>12} {'grouped_xla':>12} {'speedup':>8}")
+    header = f"{'batch':>6}" + "".join(f" {be:>14}" for be in backends)
+    print(header + f" {'speedup':>8}")
+    rows = []
     ok_small_batch = True
-    for t in args.batches:
+    batches = sorted(args.batches)
+    for t in batches:
         bk = jax.random.split(jax.random.PRNGKey(t), 3)
         xf = jax.random.normal(bk[0], (t, d), jnp.float32)
         idx = jax.random.randint(bk[1], (t, k), 0, e)
@@ -102,12 +159,43 @@ def main(argv=None):
         tput = {}
         for be in backends:
             sec = _bench(fns[be], (xf, w, gates, idx), args.iters)
-            tput[be] = t / sec
+            tput[be] = round(t / sec, 1)
         speedup = tput["gather"] / tput["grouped_xla"]
-        print(f"{t:>6} {tput['gather']:>12.0f} {tput['grouped_xla']:>12.0f} "
-              f"{speedup:>7.2f}x")
+        print(f"{t:>6}" + "".join(f" {tput[be]:>14.0f}" for be in backends)
+              + f" {speedup:>7.2f}x")
+        rows.append({"batch": t, "tok_per_s": tput})
         if t <= 8 and speedup <= 1.0:
             ok_small_batch = False
+
+    grouped_cols = [c for c in backends if c.startswith("grouped")]
+    cx_tokens = _crossover(rows, batches, grouped_cols)
+    if cx_tokens is not None:
+        print(f"# measured crossover: gather wins up to {cx_tokens} decode "
+              f"tokens at E={e}, k={k}")
+    else:
+        print(f"# no crossover inside the sweep (gather never lost); "
+              f"select_backend keeps the ~E/k heuristic")
+
+    if args.out:
+        artifact = {
+            "schema": 1,
+            "platform": jax.default_backend(),
+            "shape": {"d_model": d, "d_expert": m, "num_experts": e,
+                      "top_k": k},
+            "kernels": use_kernels,
+            "note": (None if use_kernels else
+                     "kernel columns skipped off-TPU (interpret-mode "
+                     "timings are not hardware numbers)"),
+            "rows": rows,
+            "crossover": (None if cx_tokens is None else
+                          {"gather_max_tokens": cx_tokens,
+                           "num_experts": e, "top_k": k}),
+        }
+        with open(args.out, "w") as f:
+            json.dump(artifact, f, indent=1)
+            f.write("\n")
+        print(f"# wrote {args.out}")
+
     if ok_small_batch:
         print("RESULT: gather beats grouped_xla at batch <= 8")
         return 0

@@ -41,12 +41,22 @@ if [[ "${1:-}" != "--fast" ]]; then
     python -m repro.launch.serve --smoke --continuous --batch 4 \
         --requests 8 --rate 0.5 --prompt-len 32 --gen 8 \
         --max-prefill-tokens 16 --paged --block-size 8 --parity
+    echo "== smoke: paged kernel parity (Pallas interpret == XLA) =="
+    # kernel-correctness gate: the paged run with --use-kernel routes
+    # decode attention through the Pallas paged-attention kernel and
+    # gather MoE through the gather kernel (interpret mode off-TPU); it
+    # must reproduce the contiguous XLA run token-for-token
+    python -m repro.launch.serve --smoke --continuous --batch 4 \
+        --requests 8 --rate 0.5 --prompt-len 32 --gen 8 \
+        --max-prefill-tokens 16 --paged --block-size 8 --parity \
+        --use-kernel
     echo "== smoke: decode backend bench (gather vs grouped) =="
     # --no-gate: CI asserts the bench RUNS; the speedup gate is timing-based
     # and too noisy to fail CI on a loaded runner (run without the flag to
-    # enforce it)
+    # enforce it). --out refreshes the measured-crossover artifact that
+    # select_backend consumes for shape-matched calls.
     python benchmarks/bench_decode_backends.py --iters 5 --batches 1 4 8 \
-        --no-gate
+        --no-gate --out
     echo "== smoke: serving goodput + HOL + paged-concurrency bench (cmoe) =="
     # --cmoe exercises the per-micro-batch backend split in all sections;
     # the paged section compares concurrency-per-HBM against contiguous

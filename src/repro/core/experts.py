@@ -82,6 +82,18 @@ GATHER_TOKEN_THRESHOLD = 8
 # unchunked in bench_serving's HOL section at smoke scale).
 RAGGED_BLOCK_XLA = 8
 
+# Tiles gathered per scan step on the non-TPU segment-GEMM path: bounds
+# resident gathered weight slabs at chunk scale (SEGMENT_STREAM_TILES x
+# (a, b)) no matter how wide the micro-batch is. A constant — chunk
+# boundaries must be static shape arithmetic so per-row results stay
+# width-invariant.
+SEGMENT_STREAM_TILES = 8
+
+# Measured backend crossover artifact (benchmarks/bench_decode_backends.py
+# --out). When present and shape-matched, its crossover overrides the
+# ~E/k heuristic in ``select_backend``.
+BENCH_FILE = "BENCH_decode_backends.json"
+
 
 def _act(activation: str):
     if activation == "swiglu":
@@ -299,16 +311,39 @@ def segment_dot(xp: Array, owner: Array, group_sizes: Array, bank: Array,
                                   preferred_element_type=jnp.float32)
     p_total = xp.shape[0]
     xb = xp.reshape(p_total // block, block, xp.shape[1])
-    # KNOWN LIMIT of the non-TPU branch: the per-tile gather materializes
-    # nb ~ P/block slab copies, so weight memory scales with the
-    # micro-batch, not with E. Bounded in serving (max_prefill_tokens
-    # caps P) and irrelevant on TPU (ragged_dot/Pallas stream the bank),
-    # but an UNBOUNDED non-TPU prefill at full model scale would thrash —
-    # the ROADMAP's streamed-segment-GEMM item is the fix.
-    bank_b = jnp.take(bank, owner, axis=0).astype(xp.dtype)  # (nb, a, b)
-    return jnp.einsum("gra,gab->grb", xb, bank_b,
-                      preferred_element_type=jnp.float32
-                      ).reshape(p_total, bank.shape[2])
+    nb = xb.shape[0]
+    if nb <= SEGMENT_STREAM_TILES:
+        # small layouts: one gathered-slab einsum (nb slab copies, bounded)
+        bank_b = jnp.take(bank, owner, axis=0).astype(xp.dtype)  # (nb,a,b)
+        return jnp.einsum("gra,gab->grb", xb, bank_b,
+                          preferred_element_type=jnp.float32
+                          ).reshape(p_total, bank.shape[2])
+    # STREAMED chunking: the one-shot gather above materializes nb ~
+    # P/block slab copies, so weight memory would scale with the
+    # micro-batch, not with E. Scanning constant-size tile chunks bounds
+    # resident gathered weights at SEGMENT_STREAM_TILES slabs regardless
+    # of P. Width-invariance holds: chunk boundaries are STATIC (shape
+    # arithmetic, never data) and each output row is the same independent
+    # per-tile contraction as the direct path — bitwise identical.
+    chunk = SEGMENT_STREAM_TILES
+    pad = (-nb) % chunk
+    if pad:
+        # padded tiles carry zero rows; their owner id is irrelevant
+        # (0 * w = 0) and their output rows are sliced away below
+        xb = jnp.pad(xb, ((0, pad), (0, 0), (0, 0)))
+        owner = jnp.pad(owner, (0, pad))
+    nc = (nb + pad) // chunk
+    xc = xb.reshape(nc, chunk, block, xp.shape[1])
+    oc = owner.reshape(nc, chunk)
+
+    def step(_, inp):
+        xcc, occ = inp
+        bank_c = jnp.take(bank, occ, axis=0).astype(xp.dtype)  # (chunk,a,b)
+        return None, jnp.einsum("gra,gab->grb", xcc, bank_c,
+                                preferred_element_type=jnp.float32)
+
+    _, yc = jax.lax.scan(step, None, (xc, oc))
+    return yc.reshape((nb + pad) * block, bank.shape[2])[:p_total]
 
 
 def segment_ffn_xla(xp: Array, owner: Array, group_sizes: Array,
@@ -388,33 +423,44 @@ def _exact(xf, weights, gates, idx, activation, valid):
     return jnp.einsum("tnd,tn->td", y_all, gmask)
 
 
-def _gather(xf, weights, gates, idx, activation, valid):
+def _gather(xf, weights, gates, idx, activation, valid, *,
+            use_kernel: bool = False):
     """Token-choice gather path: compute ONLY the selected experts.
 
-    Flattens the (T, k) assignments to T*k independent rows, gathers each
-    row's expert weights, and runs (T*k)-batched GEMMs. No capacity buffer
-    is materialized and no token is ever dropped."""
+    Flattens the (T, k) assignments to T*k independent rows and runs
+    per-assignment expert FFNs. The XLA path gathers each row's weights
+    (``jnp.take`` -> (T*k, d, m) copies) before batched GEMMs; with
+    ``use_kernel`` (glu banks) the Pallas ``moe_gather`` kernel
+    scalar-prefetches the flat expert ids and DMAs only the live slabs —
+    no gathered weight buffer exists. Either way the gate-weight combine
+    is shared, no capacity buffer is materialized and no token is ever
+    dropped."""
     t, k = idx.shape
     d = xf.shape[1]
     act = _act(activation)
     flat = idx.reshape(-1)                                    # (T*k,)
-    xr = jnp.repeat(xf, k, axis=0)                            # (T*k, d)
-    wd = jnp.take(weights["wd"], flat, axis=0)                # (T*k, m, d)
-    if _is_glu(weights):
-        wg = jnp.take(weights["wg"], flat, axis=0)            # (T*k, d, m)
-        wu = jnp.take(weights["wu"], flat, axis=0)
-        g = jnp.einsum("bd,bdm->bm", xr, wg.astype(xf.dtype),
-                       preferred_element_type=jnp.float32)
-        u = jnp.einsum("bd,bdm->bm", xr, wu.astype(xf.dtype),
-                       preferred_element_type=jnp.float32)
-        h = (act(g) * u).astype(xf.dtype)
+    if use_kernel and _is_glu(weights):
+        from repro.kernels import ops as kops
+        y = kops.moe_gather(xf, flat, weights["wg"], weights["wu"],
+                            weights["wd"], top_k=k, activation=activation)
     else:
-        wi = jnp.take(weights["wi"], flat, axis=0)
-        g = jnp.einsum("bd,bdm->bm", xr, wi.astype(xf.dtype),
-                       preferred_element_type=jnp.float32)
-        h = act(g).astype(xf.dtype)
-    y = jnp.einsum("bm,bmd->bd", h, wd.astype(xf.dtype),
-                   preferred_element_type=jnp.float32).astype(xf.dtype)
+        xr = jnp.repeat(xf, k, axis=0)                        # (T*k, d)
+        wd = jnp.take(weights["wd"], flat, axis=0)            # (T*k, m, d)
+        if _is_glu(weights):
+            wg = jnp.take(weights["wg"], flat, axis=0)        # (T*k, d, m)
+            wu = jnp.take(weights["wu"], flat, axis=0)
+            g = jnp.einsum("bd,bdm->bm", xr, wg.astype(xf.dtype),
+                           preferred_element_type=jnp.float32)
+            u = jnp.einsum("bd,bdm->bm", xr, wu.astype(xf.dtype),
+                           preferred_element_type=jnp.float32)
+            h = (act(g) * u).astype(xf.dtype)
+        else:
+            wi = jnp.take(weights["wi"], flat, axis=0)
+            g = jnp.einsum("bd,bdm->bm", xr, wi.astype(xf.dtype),
+                           preferred_element_type=jnp.float32)
+            h = act(g).astype(xf.dtype)
+        y = jnp.einsum("bm,bmd->bd", h, wd.astype(xf.dtype),
+                       preferred_element_type=jnp.float32).astype(xf.dtype)
     w = gates.astype(xf.dtype)
     if valid is not None:
         w = w * valid.astype(xf.dtype)
@@ -460,6 +506,64 @@ def _grouped(xf, weights, gates, idx, activation, valid, *, use_kernel):
 
 # ----------------------------------------------------------------- engine
 
+_UNLOADED = object()
+_measured = _UNLOADED        # lazily-loaded crossover dict (or None)
+
+
+def _measured_crossover() -> Optional[dict]:
+    """Load the measured gather/grouped crossover once per process.
+
+    Search order: $REPRO_DECODE_BENCH (authoritative when set — no
+    fallback), else ./BENCH_decode_backends.json, else the repo root
+    next to src/. The artifact is written by
+    ``benchmarks/bench_decode_backends.py --out`` and carries the bank
+    shape it was measured on; ``select_backend`` only trusts it for calls
+    with the SAME (num_experts, top_k) — any other shape falls back to
+    the ~E/k heuristic. Which source decided is logged once."""
+    global _measured
+    if _measured is not _UNLOADED:
+        return _measured
+    import json
+    import logging
+    import os
+    log = logging.getLogger("repro.experts")
+    here = os.path.dirname(os.path.abspath(__file__))
+    env = os.environ.get("REPRO_DECODE_BENCH")
+    if env is not None:
+        # explicit override is authoritative: never fall through to the
+        # cwd / repo-root artifacts (missing/invalid -> no crossover)
+        candidates = [env]
+    else:
+        candidates = [BENCH_FILE,
+                      os.path.join(here, "..", "..", "..", BENCH_FILE)]
+    for path in candidates:
+        if not path or not os.path.exists(path):
+            continue
+        try:
+            with open(path) as f:
+                cx = (json.load(f) or {}).get("crossover")
+        except (OSError, ValueError) as e:
+            log.warning("ignoring unreadable bench file %s: %s", path, e)
+            continue
+        if cx and "gather_max_tokens" in cx:
+            log.info("backend break-even: MEASURED crossover from %s "
+                     "(gather wins to %s tokens at E=%s, k=%s)", path,
+                     cx.get("gather_max_tokens"), cx.get("num_experts"),
+                     cx.get("top_k"))
+            _measured = cx
+            return _measured
+    log.info("backend break-even: no measured crossover found "
+             "(%s); using the ~E/k heuristic", BENCH_FILE)
+    _measured = None
+    return _measured
+
+
+def _reset_measured_crossover():
+    """Test hook: drop the cached crossover so the next call reloads."""
+    global _measured
+    _measured = _UNLOADED
+
+
 def select_backend(t: int, cfg, phase: str, *, use_kernel: bool = False,
                    num_experts: Optional[int] = None,
                    top_k: Optional[int] = None) -> str:
@@ -475,11 +579,14 @@ def select_backend(t: int, cfg, phase: str, *, use_kernel: bool = False,
     num_experts/top_k when the caller knows it (``routed_experts`` passes
     the actual stacked-weight extents), else from cfg.cmoe / cfg.moe.
 
-    The choice is pure throughput: every backend is drop-free and
-    width-invariant under the per-token contract, so decode on gather vs
-    grouped is a speed question (measured crossover ~batch 32 at E=160,
-    k=6), not a correctness one. Large-batch decode throughput is the
-    ragged-kernel item in ROADMAP "Open items"."""
+    The break-even is DATA-DRIVEN when a measured crossover artifact
+    (``BENCH_decode_backends.json``) exists for this exact bank shape:
+    its gather-wins-up-to token count replaces the heuristic, for the
+    prefill threshold AND for wide decode (the measured file is the only
+    thing that can move decode off gather — every backend is drop-free
+    and width-invariant, so the switch is pure throughput, never
+    correctness). Shapes the file wasn't measured on keep today's
+    behavior: decode -> gather unconditionally, prefill by ~E/k."""
     if num_experts is None or top_k is None:
         spec = getattr(cfg, "cmoe", None) or getattr(cfg, "moe", None)
         if spec is not None:
@@ -487,9 +594,18 @@ def select_backend(t: int, cfg, phase: str, *, use_kernel: bool = False,
                 or getattr(spec, "num_experts", None)
             top_k = top_k or getattr(spec, "top_k", None)
     threshold = GATHER_TOKEN_THRESHOLD
+    measured = False
     if num_experts and top_k:
         threshold = max(threshold, num_experts // max(top_k, 1))
-    if phase == "decode" or t <= threshold:
+        cx = _measured_crossover()
+        if cx is not None and cx.get("num_experts") == num_experts \
+                and cx.get("top_k") == top_k:
+            threshold = max(GATHER_TOKEN_THRESHOLD,
+                            int(cx["gather_max_tokens"]))
+            measured = True
+    if phase == "decode" and not measured:
+        return "gather"
+    if t <= threshold:
         return "gather"
     return "grouped_pallas" if use_kernel else "grouped_xla"
 
@@ -579,7 +695,8 @@ def routed_experts(xf: Array, weights: dict, gates: Array, idx: Array,
     if backend == "exact":
         out = _exact(xf, weights, gates, idx, activation, valid)
     elif backend == "gather":
-        out = _gather(xf, weights, gates, idx, activation, valid)
+        out = _gather(xf, weights, gates, idx, activation, valid,
+                      use_kernel=use_kernel)
     elif backend in ("grouped_xla", "grouped_pallas"):
         return _grouped(xf, weights, gates, idx, activation, valid,
                         use_kernel=backend == "grouped_pallas")

@@ -12,8 +12,11 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.flash_decode import flash_decode as _flash_decode
+from repro.kernels.moe_gather import moe_gather as _moe_gather
 from repro.kernels.moe_gmm import moe_gmm as _moe_gmm
 from repro.kernels.moe_gmm import moe_gmm_ragged as _moe_gmm_ragged
+from repro.kernels.paged_attention import mla_paged_decode as _mla_paged
+from repro.kernels.paged_attention import paged_attn_decode as _paged_attn
 from repro.kernels.router_score import router_score as _router
 from repro.kernels.ssd_scan import ssd_scan as _ssd
 from repro.kernels.swiglu import swiglu_ffn as _swiglu
@@ -172,6 +175,62 @@ def ssd_scan(xh: Array, dt: Array, b: Array, c: Array, a_log: Array,
     y = y + xh.astype(jnp.float32) * d_skip.astype(jnp.float32)[:, None]
     h_fin = h_fin.reshape(bsz, nh, hp, n)
     return y, h_fin
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def paged_attn_decode(q: Array, k_pool: Array, v_pool: Array, *,
+                      table: Array, pos: Array, window=0,
+                      scale: float) -> Array:
+    """GQA paged decode straight off the block pool. q: (B, 1, H, hd);
+    k_pool/v_pool: (nblocks, bs, KH, hd); table: (B, nblk) int32 block
+    tables (0 = trash/unallocated); pos: (B,) int32 last valid logical
+    index per lane; window: int32 scalar sliding window (0 = full; may be
+    traced — it rides scalar prefetch). Returns (B, 1, H, hd). No VJP."""
+    b, s, h, hd = q.shape
+    assert s == 1, s
+    kh = k_pool.shape[2]
+    grp = h // kh
+    qg = q[:, 0].reshape(b, kh, grp, hd)
+    tbl = table.astype(jnp.int32).reshape(-1)
+    ps = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    win = jnp.asarray(window, jnp.int32).reshape(1)
+    out = _paged_attn(qg, k_pool, v_pool, tbl, ps, win, scale=scale,
+                      interpret=_interpret())
+    return out.reshape(b, 1, h, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def mla_paged_decode(q_abs: Array, q_pe: Array, cc_pool: Array,
+                     cp_pool: Array, *, table: Array, pos: Array,
+                     scale: float) -> Array:
+    """MLA absorbed paged decode off the latent/rope-key pools. q_abs:
+    (B, H, r) W_uk-absorbed queries; q_pe: (B, H, dr); cc_pool:
+    (nblocks, bs, r); cp_pool: (nblocks, bs, dr); table: (B, nblk); pos:
+    (B,). Returns o_lat (B, H, r) — caller expands through W_uv. No VJP."""
+    b = q_abs.shape[0]
+    tbl = table.astype(jnp.int32).reshape(-1)
+    ps = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    return _mla_paged(q_abs, q_pe, cc_pool, cp_pool, tbl, ps, scale=scale,
+                      interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("top_k", "activation",
+                                             "block_m"))
+def moe_gather(xf: Array, eidx: Array, wg: Array, wu: Array, wd: Array, *,
+               top_k: int, activation: str = "swiglu",
+               block_m: int = 128) -> Array:
+    """Per-assignment gather expert FFN rows without gathered weight
+    copies. xf: (T, d); eidx: (T*k,) flat expert ids (clamped here — the
+    XLA path's ``jnp.take`` clips identically); wg/wu: (E, d, m); wd:
+    (E, m, d) -> (T*k, d) rows, pre gate-combine. glu banks only."""
+    block_m = _shrink_block(block_m, wg.shape[2])
+    wg_p, _ = _pad_to(wg, 2, block_m)
+    wu_p, _ = _pad_to(wu, 2, block_m)
+    wd_p, _ = _pad_to(wd, 1, block_m)
+    eidx = jnp.clip(eidx.astype(jnp.int32), 0, wg.shape[0] - 1)
+    return _moe_gather(xf, eidx, wg_p, wu_p, wd_p, top_k=top_k,
+                       activation=activation, block_m=block_m,
+                       interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("block_k",))

@@ -124,3 +124,70 @@ def flash_decode_ref(q: Array, k: Array, v: Array, pos) -> Array:
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v,
                       preferred_element_type=jnp.float32).astype(v.dtype)
+
+
+def paged_attn_decode_ref(q: Array, k_pool: Array, v_pool: Array,
+                          table: Array, pos: Array, window,
+                          *, scale: float) -> Array:
+    """Materializing oracle for the GQA paged decode kernel: assemble each
+    lane's logical view via the table, then masked softmax attention.
+
+    q: (B, KH, grp, hd); k_pool/v_pool: (nblocks, bs, KH, hd);
+    table: (B, nblk) int32; pos: (B,) int32; window: () int32 (0 = full).
+    Returns (B, KH, grp, hd)."""
+    b, kh, grp, hd = q.shape
+    bs = k_pool.shape[1]
+    nblk = table.shape[1]
+    t = nblk * bs
+    # (B, nblk, bs, KH, hd) -> (B, T, KH, hd): the logical view
+    kv_k = k_pool[table].reshape(b, t, kh, hd)
+    kv_v = v_pool[table].reshape(b, t, kh, hd)
+    s = jnp.einsum("bhgd,bthd->bhgt", q, kv_k,
+                   preferred_element_type=jnp.float32) * scale
+    kpos = jnp.arange(t)[None, None, None, :]
+    mask = kpos <= pos[:, None, None, None]
+    mask &= jnp.where(window > 0, kpos > pos[:, None, None, None] - window,
+                      True)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgt,bthd->bhgd", p.astype(kv_v.dtype), kv_v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+def mla_paged_decode_ref(q_abs: Array, q_pe: Array, cc_pool: Array,
+                         cp_pool: Array, table: Array, pos: Array,
+                         *, scale: float) -> Array:
+    """Materializing oracle for the MLA absorbed paged decode kernel.
+
+    q_abs: (B, H, r); q_pe: (B, H, dr); cc_pool: (nblocks, bs, r);
+    cp_pool: (nblocks, bs, dr); table: (B, nblk); pos: (B,). Returns the
+    softmax-weighted latent o_lat (B, H, r)."""
+    b, h, r = q_abs.shape
+    bs = cc_pool.shape[1]
+    t = table.shape[1] * bs
+    cc = cc_pool[table].reshape(b, t, r)
+    cp = cp_pool[table].reshape(b, t, cp_pool.shape[-1])
+    s = (jnp.einsum("bhr,btr->bht", q_abs, cc,
+                    preferred_element_type=jnp.float32) +
+         jnp.einsum("bhp,btp->bht", q_pe, cp,
+                    preferred_element_type=jnp.float32)) * scale
+    mask = jnp.arange(t)[None, None, :] <= pos[:, None, None]
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bht,btr->bhr", p.astype(cc.dtype), cc,
+                      preferred_element_type=jnp.float32).astype(q_abs.dtype)
+
+
+def moe_gather_ref(xf: Array, eidx: Array, wg: Array, wu: Array, wd: Array,
+                   *, top_k: int, activation: str = "swiglu") -> Array:
+    """Oracle for the gather decode kernel: the XLA gathered-weight rows
+    of `core.experts._gather` (pre gate-weight combine). xf: (T, d);
+    eidx: (T*k,) flat expert ids -> (T*k, d)."""
+    xr = jnp.repeat(xf, top_k, axis=0)
+    g = jnp.einsum("bd,bdm->bm", xr, jnp.take(wg, eidx, axis=0),
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("bd,bdm->bm", xr, jnp.take(wu, eidx, axis=0),
+                   preferred_element_type=jnp.float32)
+    h = (_act(activation)(g) * u).astype(xf.dtype)
+    return jnp.einsum("bm,bmd->bd", h, jnp.take(wd, eidx, axis=0),
+                      preferred_element_type=jnp.float32).astype(xf.dtype)

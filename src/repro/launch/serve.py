@@ -206,6 +206,13 @@ def main(argv=None):
                          "other axis — unchunked, or contiguous under "
                          "--paged — and assert token-identical streams + "
                          "zero reported drops")
+    ap.add_argument("--use-kernel", action="store_true", default=None,
+                    help="run the Pallas kernel paths (paged-attention "
+                         "decode, gather/grouped MoE kernels). Default: "
+                         "auto — on when a TPU is attached. Setting it "
+                         "explicitly off-TPU runs the kernels in interpret "
+                         "mode: a correctness gate (e.g. with --paged "
+                         "--parity), not a speed run")
     args = ap.parse_args(argv)
 
     if args.continuous and args.smoke and not args.cmoe:
@@ -222,9 +229,16 @@ def main(argv=None):
         cfg = override(cfg, moe=dataclasses.replace(
             cfg.moe, capacity_factor=args.capacity_factor))
     # inference-only: safe to opt into the Pallas kernels on TPU (they
-    # have no VJP, so training paths must leave use_kernel off)
+    # have no VJP, so training paths must leave use_kernel off). An
+    # explicit --use-kernel off-TPU is honored in interpret mode rather
+    # than raising — that's the CI parity gate's path.
     from repro.kernels import ops as kops
-    model = build_model(cfg, use_kernel=kops.on_tpu(), backend=backend)
+    use_kernel = kops.on_tpu() if args.use_kernel is None \
+        else args.use_kernel
+    if use_kernel and not kops.on_tpu():
+        print("[kernels] warning: no TPU attached — Pallas kernels run in "
+              "interpret mode (correctness validation, not speed)")
+    model = build_model(cfg, use_kernel=use_kernel, backend=backend)
     params = model.init(jax.random.PRNGKey(args.seed))
 
     if args.cmoe:

@@ -359,9 +359,18 @@ def paged_ragged_attention(q: Array, k_pool: Array, v_pool: Array, *,
 def paged_decode_attention(q: Array, k_pool: Array, v_pool: Array, *,
                            table: Array, pos: Array,
                            window: Array | int = 0,
-                           scale: Optional[float] = None) -> Array:
+                           scale: Optional[float] = None,
+                           use_kernel: bool = False) -> Array:
     """The S=1 case of `paged_ragged_attention` (same delegation shape as
-    decode_attention -> ragged_attention)."""
+    decode_attention -> ragged_attention). With ``use_kernel`` the Pallas
+    paged kernel attends the pool directly — the block table rides scalar
+    prefetch and only live physical blocks are read; the materializing
+    path stays as the parity reference."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+        sc = scale if scale is not None else q.shape[-1] ** -0.5
+        return kops.paged_attn_decode(q, k_pool, v_pool, table=table,
+                                      pos=pos, window=window, scale=sc)
     return paged_ragged_attention(q, k_pool, v_pool, table=table, pos=pos,
                                   window=window, scale=scale)
 
@@ -406,7 +415,8 @@ def gqa_attention(x: Array, p: dict, cfg, *,
                   cache_pos: Optional[Array] = None,
                   cross_kv: Optional[tuple[Array, Array]] = None,
                   use_rope: bool = True,
-                  block_table: Optional[Array] = None):
+                  block_table: Optional[Array] = None,
+                  use_kernel: bool = False):
     """Full GQA block: project, rope, attend, output-project.
 
     Returns (out (B,S,d), new_kv or None).
@@ -416,7 +426,9 @@ def gqa_attention(x: Array, p: dict, cfg, *,
     - cross_kv: precomputed encoder K/V (whisper cross-attention).
     - block_table (B, nblk): kv_cache is a PAGED pool (nblocks, bs, KH,
       hd) per leaf — writes scatter through the table, reads assemble the
-      logical view per lane (see paged_cache_update / paged_view).
+      logical view per lane (see paged_cache_update / paged_view);
+      use_kernel routes paged DECODE through the Pallas paged-attention
+      kernel (no logical view materialized; inference only — no VJP).
     """
     b, s, _ = x.shape
     hd = cfg.resolved_head_dim
@@ -446,10 +458,13 @@ def gqa_attention(x: Array, p: dict, cfg, *,
             ck = paged_cache_update(ck, k, start, block_table)
             cv = paged_cache_update(cv, v, start, block_table)
             new_kv = (ck, cv)
-            attend = paged_decode_attention if s == 1 \
-                else paged_ragged_attention
-            out = attend(q, ck, cv, table=block_table, pos=start,
-                         window=window)
+            if s == 1:
+                out = paged_decode_attention(q, ck, cv, table=block_table,
+                                             pos=start, window=window,
+                                             use_kernel=use_kernel)
+            else:
+                out = paged_ragged_attention(q, ck, cv, table=block_table,
+                                             pos=start, window=window)
             out = matmul(out.reshape(b, s, -1),
                          p["wo"].reshape(-1, cfg.d_model))
             return out, new_kv
@@ -488,7 +503,8 @@ def mla_attention(x: Array, p: dict, cfg, *,
                   positions: Array,
                   kv_cache: Optional[tuple[Array, Array]] = None,
                   cache_pos: Optional[Array] = None,
-                  block_table: Optional[Array] = None):
+                  block_table: Optional[Array] = None,
+                  use_kernel: bool = False):
     """DeepSeek-v2 multi-head latent attention.
 
     Cache holds the compressed latent c_kv (B,T,r) + rope key (B,T,dr) —
@@ -497,7 +513,10 @@ def mla_attention(x: Array, p: dict, cfg, *,
     against the latent directly; values likewise) — the TPU-friendly matvec.
     With `block_table` the cache is a PAGED latent pool ((nblocks, bs, r)
     and (nblocks, bs, dr) leaves): writes scatter through the table and
-    the absorbed/ragged math runs on the table-assembled logical view.
+    the absorbed/ragged math runs on the table-assembled logical view —
+    except paged DECODE with ``use_kernel``, where the Pallas MLA paged
+    kernel runs the absorbed math straight off the pools (no view is
+    assembled; inference only — no VJP).
     Returns (out, new_cache).
     """
     m = cfg.mla
@@ -521,17 +540,23 @@ def mla_attention(x: Array, p: dict, cfg, *,
     c_kv = _rms(c_kv, p["kv_norm"])
     k_pe = apply_rope(k_pe[..., None, :], positions, cfg.rope_theta)[..., 0, :]
 
+    pools = None
     if kv_cache is not None:
         cc, cp = kv_cache
         start = cache_pos if cache_pos is not None else 0
         if block_table is not None:
             # paged: the pool is the cache state; attention below runs on
-            # the logical per-lane view assembled through the table
+            # the logical per-lane view assembled through the table —
+            # unless the kernel decode path attends the pools directly
             pool_c = paged_cache_update(cc, c_kv, start, block_table)
             pool_p = paged_cache_update(cp, k_pe, start, block_table)
             new_cache = (pool_c, pool_p)
-            cc = paged_view(pool_c, block_table)
-            cp = paged_view(pool_p, block_table)
+            if s == 1 and use_kernel:
+                pools = (pool_c, pool_p)
+                cc, cp = pool_c, pool_p
+            else:
+                cc = paged_view(pool_c, block_table)
+                cp = paged_view(pool_p, block_table)
         elif is_per_slot(start):
             cc = slot_cache_update(cc, c_kv, start)
             cp = slot_cache_update(cp, k_pe, start)
@@ -553,20 +578,29 @@ def mla_attention(x: Array, p: dict, cfg, *,
         # absorbed decode: score_t = q_nopeᵀ W_uk c_t + q_peᵀ k_pe_t
         q_abs = jnp.einsum("bqhd,rhd->bqhr", q_nope, wk.astype(q_nope.dtype),
                            preferred_element_type=jnp.float32)
-        s_lat = jnp.einsum("bqhr,btr->bhqt", q_abs.astype(cc.dtype), cc,
-                           preferred_element_type=jnp.float32)
-        s_pe = jnp.einsum("bqhd,btd->bhqt", q_pe, cp,
-                          preferred_element_type=jnp.float32)
-        scores = (s_lat + s_pe) * scale
-        t = cc.shape[1]
-        start_b = jnp.broadcast_to(jnp.asarray(start),
-                                   (b,))[:, None, None, None]
-        mask = jnp.arange(t)[None, None, None, :] <= start_b
-        scores = jnp.where(mask, scores, NEG_INF)
-        probs = jax.nn.softmax(scores, axis=-1)
-        # value in latent space, then expand: (B,H,q,r) @ (r,H,dv)
-        o_lat = jnp.einsum("bhqt,btr->bhqr", probs.astype(cc.dtype), cc,
-                           preferred_element_type=jnp.float32)
+        if pools is not None:
+            # paged kernel decode: the absorbed score/softmax/latent-value
+            # math runs inside the Pallas kernel straight off the pools
+            from repro.kernels import ops as kops
+            o_lat = kops.mla_paged_decode(
+                q_abs[:, 0].astype(pools[0].dtype), q_pe[:, 0],
+                pools[0], pools[1], table=block_table, pos=start,
+                scale=scale)[:, :, None, :]           # (B,H,1,r)
+        else:
+            s_lat = jnp.einsum("bqhr,btr->bhqt", q_abs.astype(cc.dtype), cc,
+                               preferred_element_type=jnp.float32)
+            s_pe = jnp.einsum("bqhd,btd->bhqt", q_pe, cp,
+                              preferred_element_type=jnp.float32)
+            scores = (s_lat + s_pe) * scale
+            t = cc.shape[1]
+            start_b = jnp.broadcast_to(jnp.asarray(start),
+                                       (b,))[:, None, None, None]
+            mask = jnp.arange(t)[None, None, None, :] <= start_b
+            scores = jnp.where(mask, scores, NEG_INF)
+            probs = jax.nn.softmax(scores, axis=-1)
+            # value in latent space, then expand: (B,H,q,r) @ (r,H,dv)
+            o_lat = jnp.einsum("bhqt,btr->bhqr", probs.astype(cc.dtype), cc,
+                               preferred_element_type=jnp.float32)
         out = jnp.einsum("bhqr,rhd->bqhd", o_lat.astype(x.dtype),
                          wv.astype(x.dtype),
                          preferred_element_type=jnp.float32).astype(x.dtype)

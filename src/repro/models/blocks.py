@@ -191,7 +191,7 @@ def dense_block(x: Array, p: dict, cfg, ctx: BlockCtx):
         rms_norm(x, p["norm1"], cfg.norm_eps), p["attn"], cfg,
         positions=ctx.positions, causal=ctx.causal, window=ctx.window,
         kv_cache=ctx.cache, cache_pos=ctx.cache_pos, use_rope=ctx.use_rope,
-        block_table=ctx.block_table)
+        block_table=ctx.block_table, use_kernel=ctx.use_kernel)
     x = x + h
     ffn_in = rms_norm(x, p["norm2"], cfg.norm_eps)
     y, aux = _apply_ffn(ffn_in, p, cfg, ctx)
@@ -244,7 +244,7 @@ def moe_block(x: Array, p: dict, cfg, ctx: BlockCtx):
         rms_norm(x, p["norm1"], cfg.norm_eps), p["attn"], cfg,
         positions=ctx.positions, causal=ctx.causal, window=ctx.window,
         kv_cache=ctx.cache, cache_pos=ctx.cache_pos,
-        block_table=ctx.block_table)
+        block_table=ctx.block_table, use_kernel=ctx.use_kernel)
     x = x + h
     ffn_in = rms_norm(x, p["norm2"], cfg.norm_eps)
     if cfg.cmoe is not None and "cmoe" in p:
@@ -274,7 +274,7 @@ def mla_moe_block(x: Array, p: dict, cfg, ctx: BlockCtx):
     h, new_cache = mla_attention(
         rms_norm(x, p["norm1"], cfg.norm_eps), p["attn"], cfg,
         positions=ctx.positions, kv_cache=ctx.cache, cache_pos=ctx.cache_pos,
-        block_table=ctx.block_table)
+        block_table=ctx.block_table, use_kernel=ctx.use_kernel)
     x = x + h
     ffn_in = rms_norm(x, p["norm2"], cfg.norm_eps)
     if cfg.cmoe is not None and "cmoe" in p:

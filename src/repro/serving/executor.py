@@ -26,7 +26,14 @@ block tables instead of slot indices: the pool is the cache, writes
 scatter through the table inside the jitted step, and a resumed chunk's
 prefix window is a per-block table lookup instead of a gathered [0, hist)
 copy. Free/dummy lanes carry all-trash tables (physical block 0), the
-paged analogue of the overwrite-before-attend argument above.
+paged analogue of the overwrite-before-attend argument above. When the
+model was built with ``use_kernel`` (serve.py --use-kernel, default on
+TPU), the paged decode step inside ``decode_paged`` routes attention
+through the Pallas paged-attention kernels (block tables as scalar
+prefetch, one live block DMA'd per tile — no materialized logical view)
+and gather MoE through the gather kernel; the flag rides
+``ModelCtx.use_kernel`` through model -> blocks, so the executor itself
+is kernel-agnostic.
 
 Each call also returns the routed-expert backend this micro-batch runs
 (``microbatch_backend`` — the same policy ``routed_experts`` applies, with
