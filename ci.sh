@@ -15,37 +15,52 @@ if [[ "${1:-}" != "--fast" ]]; then
     echo "== smoke: convert + serve (CMoE S3A3E8) =="
     python -m repro.launch.serve --smoke --cmoe S3A3E8 --gen 4
     echo "== smoke: continuous-batching serve (staggered arrivals) =="
-    # asserts the phase policy inside serve: prefill micro-batches grouped,
-    # decode micro-batches gather, all slots recycled to completion
+    # runs the default OVERLAPPED engine (fused ragged dispatch, expert
+    # backend by fused width); all slots recycled to completion
     python -m repro.launch.serve --smoke --continuous --batch 4 \
         --requests 8 --rate 0.5 --prompt-len 32 --gen 8
     echo "== smoke: chunked-prefill serve (long prompts, 16-token budget) =="
-    # long-prompt mix: prompts up to 32 tokens against a 16-token per-step
-    # prefill budget, so every long prompt prefills as interleaved chunks
-    # (grouped backend) while decode lanes keep stepping (gather backend)
+    # sequential engine: prompts up to 32 tokens against a 16-token
+    # per-step prefill budget, so every long prompt prefills as
+    # interleaved chunks (grouped backend) while decode lanes keep
+    # stepping (gather backend)
     python -m repro.launch.serve --smoke --continuous --batch 4 \
         --requests 8 --rate 0.5 --prompt-len 32 --gen 8 \
-        --max-prefill-tokens 16
+        --max-prefill-tokens 16 --no-overlap
     echo "== smoke: grouped-parity (chunked == unchunked at cf 0.75) =="
-    # width-invariance gate: the chunked run must reproduce the unchunked
-    # run token-for-token with ZERO reported drops even at a tight
-    # capacity factor — the ragged grouped backends have no capacity
-    # buffer to overflow, so chunk width is numerically invisible
+    # width-invariance gate ON THE GROUPED BACKENDS (sequential engine):
+    # the chunked run must reproduce the unchunked run token-for-token
+    # with ZERO reported drops even at a tight capacity factor — the
+    # ragged grouped backends have no capacity buffer to overflow, so
+    # chunk width is numerically invisible
     python -m repro.launch.serve --smoke --continuous --batch 4 \
         --requests 8 --rate 0.5 --prompt-len 32 --gen 8 \
-        --max-prefill-tokens 16 --capacity-factor 0.75 --parity
+        --max-prefill-tokens 16 --capacity-factor 0.75 --parity \
+        --no-overlap
     echo "== smoke: paged-KV serve (block tables, paged == contiguous) =="
-    # paging-invariance gate: the paged run (block pool + per-request
-    # block tables, admission gated on pool headroom) must reproduce the
-    # contiguous run token-for-token with zero dropped pairs
+    # paging-invariance gate (sequential engine): the paged run (block
+    # pool + per-request block tables, admission gated on pool headroom)
+    # must reproduce the contiguous run token-for-token with zero
+    # dropped pairs
     python -m repro.launch.serve --smoke --continuous --batch 4 \
         --requests 8 --rate 0.5 --prompt-len 32 --gen 8 \
-        --max-prefill-tokens 16 --paged --block-size 8 --parity
+        --max-prefill-tokens 16 --paged --block-size 8 --parity \
+        --no-overlap
+    echo "== smoke: overlapped engine parity (fused dispatch == sequential) =="
+    # overlap-invariance gate: the fused double-buffered loop (one ragged
+    # dispatch per step, on-device sampling, readback lagging one step)
+    # must reproduce the sequential run token-for-token — and, being
+    # paged, the contiguous run too — with zero dropped pairs
+    python -m repro.launch.serve --smoke --continuous --batch 4 \
+        --requests 8 --rate 0.5 --prompt-len 32 --gen 8 \
+        --max-prefill-tokens 16 --paged --block-size 8 --overlap --parity
     echo "== smoke: paged kernel parity (Pallas interpret == XLA) =="
     # kernel-correctness gate: the paged run with --use-kernel routes
     # decode attention through the Pallas paged-attention kernel and
     # gather MoE through the gather kernel (interpret mode off-TPU); it
-    # must reproduce the contiguous XLA run token-for-token
+    # must reproduce the contiguous XLA run token-for-token (overlapped
+    # by default, so the fused per-row-table dispatch rides the kernels
+    # too)
     python -m repro.launch.serve --smoke --continuous --batch 4 \
         --requests 8 --rate 0.5 --prompt-len 32 --gen 8 \
         --max-prefill-tokens 16 --paged --block-size 8 --parity \
@@ -54,14 +69,20 @@ if [[ "${1:-}" != "--fast" ]]; then
     # --no-gate: CI asserts the bench RUNS; the speedup gate is timing-based
     # and too noisy to fail CI on a loaded runner (run without the flag to
     # enforce it). --out refreshes the measured-crossover artifact that
-    # select_backend consumes for shape-matched calls.
-    python benchmarks/bench_decode_backends.py --iters 5 --batches 1 4 8 \
-        --no-gate --out
+    # select_backend consumes for shape-matched calls — the sweep must
+    # extend PAST the gather/grouped crossover (~16 tokens on this shape)
+    # or the refreshed file records crossover: null and the measured
+    # policy for this shape silently falls back to the heuristic.
+    python benchmarks/bench_decode_backends.py --iters 5 \
+        --batches 1 4 8 16 32 64 --no-gate --out
     echo "== smoke: serving goodput + HOL + paged-concurrency bench (cmoe) =="
     # --cmoe exercises the per-micro-batch backend split in all sections;
-    # the paged section compares concurrency-per-HBM against contiguous
-    # lanes at equal cache memory
+    # the HOL section additionally serves the chunked workload through
+    # the overlapped engine (token identity + compute-utilization gates,
+    # soft under --no-gate); --out refreshes the committed
+    # BENCH_serving.json baseline (goodput, TTFT/TPOT percentiles,
+    # compute utilization, overlap occupancy per section)
     python benchmarks/bench_serving.py --requests 8 --cmoe --samples 2 \
-        --no-gate
+        --no-gate --out
 fi
 echo "CI OK"

@@ -586,7 +586,14 @@ def select_backend(t: int, cfg, phase: str, *, use_kernel: bool = False,
     thing that can move decode off gather — every backend is drop-free
     and width-invariant, so the switch is pure throughput, never
     correctness). Shapes the file wasn't measured on keep today's
-    behavior: decode -> gather unconditionally, prefill by ~E/k."""
+    behavior: decode -> gather unconditionally, prefill by ~E/k.
+
+    Phase "mixed" is the overlapped engine's FUSED micro-batch (decode
+    lanes + flattened prefill-chunk rows in one (R, 1) dispatch): it
+    skips decode's unconditional gather and applies the width threshold
+    to the true fused width — R is static per compiled shape, so a
+    chunk-heavy step runs grouped while a decode-only step stays on
+    gather."""
     if num_experts is None or top_k is None:
         spec = getattr(cfg, "cmoe", None) or getattr(cfg, "moe", None)
         if spec is not None:
@@ -665,7 +672,9 @@ def routed_experts(xf: Array, weights: dict, gates: Array, idx: Array,
       idx:     (T, k) int32 selected expert ids.
       cfg:     model config (only ``cfg.activation`` is read).
       backend: one of BACKENDS, or None/"auto" to use ``select_backend``.
-      phase:   "prefill" | "decode" — drives auto backend selection.
+      phase:   "prefill" | "decode" | "mixed" — drives auto backend
+               selection ("mixed" = the fused serving micro-batch,
+               width-thresholded like prefill).
       capacity_factor: retained for API compatibility with the bounded-
                buffer callers; the engine backends are buffer-free and
                ignore it (no capacity exists to factor).

@@ -3,12 +3,17 @@
 Static mode (default) keeps the classic fixed-batch prefill + decode
 timing loop. `--continuous` runs the continuous-batching engine on a
 staggered-arrival mixed-length request set: prompts prefill into freed
-slots while other slots keep decoding, prefill micro-batches run the
+slots while other slots keep decoding. The engine defaults to the
+OVERLAPPED loop (one fused ragged dispatch per step, on-device sampling,
+host readback lagging one step — `--no-overlap` falls back to the
+sequential two-dispatch baseline, where prefill micro-batches run the
 grouped routed-expert backend and decode micro-batches the drop-free
-gather path. `--max-prefill-tokens` chunks long prompts across steps so
+gather path). `--max-prefill-tokens` chunks long prompts across steps so
 prefill cannot stall decode lanes (head-of-line fix). `--paged` swaps
 the contiguous slot lanes for the block-pool KV cache (per-request
-block tables; `--parity` then asserts paged == contiguous streams).
+block tables). `--parity` replays the same requests on the other axes
+(overlap off, and contiguous / unchunked) and asserts token-identical
+streams.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
         --cmoe S3A3E8 --batch 4 --prompt-len 32 --gen 16
@@ -32,7 +37,7 @@ import numpy as np
 from repro.config import CMoEConfig, override
 from repro.configs import get_config, get_smoke_config
 from repro.core.convert import convert_dense_model
-from repro.core.experts import BACKENDS
+from repro.core.experts import BACKENDS, microbatch_backend
 from repro.data import make_calibration_batch
 from repro.models import build_model
 from repro.serving import ServingEngine, make_requests, make_sampler
@@ -55,11 +60,13 @@ def serve_continuous(model, params, args) -> int:
     with decode (the head-of-line fix; see serving.scheduler).
     --paged swaps the contiguous slot lanes for the block-pool cache
     (per-request block tables, admission gated on pool headroom).
-    --parity replays the same requests on the OTHER axis and asserts
-    token-identical streams with zero reported drops: without --paged it
-    compares chunked vs unchunked (the width-invariance contract); with
-    --paged it compares the paged run against a contiguous run at the
-    same settings (the paging-invariance contract)."""
+    --parity replays the same requests on the OTHER axes and asserts
+    token-identical streams with zero reported drops: under --overlap
+    (the default) it first compares against a sequential (--no-overlap)
+    run at the same settings — the overlap-invariance contract — then,
+    with --paged, against a contiguous run (paging invariance), or with
+    --max-prefill-tokens, against an unchunked run (width invariance);
+    every baseline runs overlap-off, so one gate spans both axes."""
     cfg = model.cfg
     max_len = args.prompt_len + args.gen
     lo_p = min(max(4, args.prompt_len // 2), args.prompt_len)
@@ -72,11 +79,12 @@ def serve_continuous(model, params, args) -> int:
                            max_prefill_tokens=args.max_prefill_tokens,
                            temperature=args.temperature, seed=args.seed,
                            paged=args.paged, block_size=args.block_size,
-                           num_blocks=args.num_blocks)
+                           num_blocks=args.num_blocks,
+                           overlap=args.overlap)
     report = engine.run(reqs)
     print(f"[continuous] {report.summary()}")
     assert all(r.done for r in report.requests), "unfinished requests"
-    if args.max_prefill_tokens is not None:
+    if args.max_prefill_tokens is not None and not args.overlap:
         n_chunks = len([1 for _, ph, *_ in engine.backend_log
                         if ph == "prefill"])
         longest = max(r.prompt_len for r in report.requests)
@@ -91,43 +99,55 @@ def serve_continuous(model, params, args) -> int:
               f"{report.pool_deferrals} admission deferrals, "
               f"{report.truncated} truncated")
     if args.parity:
+        # every baseline runs overlap-off, so under --overlap (the
+        # default) each comparison also certifies the fused double-
+        # buffered loop against the sequential one
+        comparisons = []   # (what, fork_msg, engine kwargs)
+        common = dict(max_slots=args.batch, max_len=max_len,
+                      temperature=args.temperature, seed=args.seed)
+        if args.overlap:
+            comparisons.append((
+                "overlap == sequential",
+                "the overlapped engine forked the generated streams — "
+                "the fused dispatch or the one-step emission lag leaked "
+                "into the tokens",
+                dict(common, max_prefill_tokens=args.max_prefill_tokens,
+                     paged=args.paged, block_size=args.block_size,
+                     num_blocks=args.num_blocks, overlap=False)))
         if args.paged:
-            base_engine = ServingEngine(
-                model, params, max_slots=args.batch, max_len=max_len,
-                max_prefill_tokens=args.max_prefill_tokens,
-                temperature=args.temperature, seed=args.seed)
-            fork_msg = ("paged and contiguous serving forked the "
-                        "generated streams — the block tables leaked "
-                        "into the numerics")
-            what = "paged == contiguous"
-        else:
-            if args.max_prefill_tokens is None:
-                raise SystemExit("--parity needs --max-prefill-tokens "
-                                 "(it compares the chunked run against "
-                                 "unchunked)")
-            base_engine = ServingEngine(model, params,
-                                        max_slots=args.batch,
-                                        max_len=max_len,
-                                        max_prefill_tokens=None,
-                                        temperature=args.temperature,
-                                        seed=args.seed)
-            fork_msg = ("chunked and unchunked prefill forked the "
-                        "generated streams — chunk width leaked into "
-                        "the numerics")
-            what = "chunked == unchunked"
-        base = base_engine.run(reqs)
+            comparisons.append((
+                "paged == contiguous",
+                "paged and contiguous serving forked the generated "
+                "streams — the block tables leaked into the numerics",
+                dict(common, max_prefill_tokens=args.max_prefill_tokens,
+                     overlap=False)))
+        elif args.max_prefill_tokens is not None:
+            comparisons.append((
+                "chunked == unchunked",
+                "chunked and unchunked prefill forked the generated "
+                "streams — chunk width leaked into the numerics",
+                dict(common, max_prefill_tokens=None, overlap=False)))
+        if not comparisons:
+            raise SystemExit("--parity needs an axis to compare: "
+                             "--overlap (default), --paged, or "
+                             "--max-prefill-tokens")
         toks = {r.rid: tuple(r.generated) for r in report.requests}
-        toks_base = {r.rid: tuple(r.generated) for r in base.requests}
-        assert toks == toks_base, fork_msg
-        assert report.dropped_pairs == 0 and base.dropped_pairs == 0, (
-            "routed pairs were dropped", report.dropped_pairs,
-            base.dropped_pairs)
-        print(f"[continuous] parity OK: {what} token-for-token "
-              f"({sum(len(t) for t in toks.values())} tokens), "
-              f"0 dropped pairs in both runs")
+        assert report.dropped_pairs == 0, (
+            "routed pairs were dropped", report.dropped_pairs)
+        for what, fork_msg, kw in comparisons:
+            base = ServingEngine(model, params, **kw).run(reqs)
+            toks_base = {r.rid: tuple(r.generated) for r in base.requests}
+            assert toks == toks_base, fork_msg
+            assert base.dropped_pairs == 0, (
+                "routed pairs were dropped", base.dropped_pairs)
+            print(f"[continuous] parity OK: {what} token-for-token "
+                  f"({sum(len(t) for t in toks.values())} tokens), "
+                  f"0 dropped pairs in both runs")
 
     # the acceptance contract: decode micro-batches on the gather path,
-    # prefill micro-batches above the gather break-even on a grouped path.
+    # prefill micro-batches above the gather break-even on a grouped path;
+    # a fused (overlapped) step picks by its TRUE padded width — phase
+    # "mixed" — so each logged row must match the policy for its width.
     # Only meaningful under the auto policy — a pinned --backend is the
     # user's own (bench-mode) choice, reported but not asserted.
     bc = report.backend_counts
@@ -136,10 +156,25 @@ def serve_continuous(model, params, args) -> int:
         # ("all" is a static-mode flag; the engine itself ran auto)
         decode_b = set(bc["decode"])
         prefill_b = set(bc["prefill"])
-        assert decode_b == {"gather"}, f"decode ran {decode_b}"
-        assert prefill_b <= {"grouped_xla", "grouped_pallas", "gather"} and \
-            prefill_b & {"grouped_xla", "grouped_pallas"}, \
-            f"prefill ran {prefill_b}"
+        if args.overlap:
+            # a fused step is one (R, 1) micro-batch logged under the
+            # decode cadence: no prefill micro-batch exists, and the
+            # backend each step ran must be the width policy's choice
+            # for its padded row count (gather for decode-only widths,
+            # grouped once chunk rows push R over the break-even)
+            assert not prefill_b, f"fused mode dispatched prefill " \
+                f"micro-batches: {prefill_b}"
+            for _, _, padded, _, backend, _ in engine.backend_log:
+                want = microbatch_backend(cfg, padded, "mixed",
+                                          use_kernel=model.use_kernel)
+                assert backend == want, \
+                    f"fused width {padded} ran {backend}, policy {want}"
+        else:
+            assert decode_b == {"gather"}, f"decode ran {decode_b}"
+            assert prefill_b <= {"grouped_xla", "grouped_pallas",
+                                 "gather"} and \
+                prefill_b & {"grouped_xla", "grouped_pallas"}, \
+                f"prefill ran {prefill_b}"
         print(f"[continuous] backend policy OK: prefill={sorted(prefill_b)} "
               f"decode={sorted(decode_b)}")
     elif has_experts:
@@ -201,11 +236,19 @@ def main(argv=None):
                     help="[--paged] pool size in blocks (default: the "
                          "same token capacity as the contiguous cache, "
                          "batch x max_len)")
+    ap.add_argument("--overlap", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="[--continuous] overlapped engine: one fused "
+                         "ragged dispatch per step, on-device sampling, "
+                         "host readback lagging one step (default on; "
+                         "--no-overlap runs the sequential two-dispatch "
+                         "baseline)")
     ap.add_argument("--parity", action="store_true",
                     help="[--continuous] replay the request set on the "
-                         "other axis — unchunked, or contiguous under "
-                         "--paged — and assert token-identical streams + "
-                         "zero reported drops")
+                         "other axes — sequential under --overlap, "
+                         "contiguous under --paged, unchunked under "
+                         "--max-prefill-tokens — and assert "
+                         "token-identical streams + zero reported drops")
     ap.add_argument("--use-kernel", action="store_true", default=None,
                     help="run the Pallas kernel paths (paged-attention "
                          "decode, gather/grouped MoE kernels). Default: "

@@ -416,6 +416,7 @@ def gqa_attention(x: Array, p: dict, cfg, *,
                   cross_kv: Optional[tuple[Array, Array]] = None,
                   use_rope: bool = True,
                   block_table: Optional[Array] = None,
+                  row_slots: Optional[Array] = None,
                   use_kernel: bool = False):
     """Full GQA block: project, rope, attend, output-project.
 
@@ -429,6 +430,12 @@ def gqa_attention(x: Array, p: dict, cfg, *,
       logical view per lane (see paged_cache_update / paged_view);
       use_kernel routes paged DECODE through the Pallas paged-attention
       kernel (no logical view materialized; inference only — no VJP).
+    - row_slots (R,): FUSED ragged serving over the contiguous GLOBAL
+      cache (B here is R rows, S must be 1, kv_cache leaves are the full
+      (max_slots, T, ...) cache). Row r writes at
+      (row_slots[r], cache_pos[r]) and attends its lane's updated view —
+      rows sharing a lane (a flattened prefill chunk) see earlier
+      siblings through the shared cache and mask later ones causally.
     """
     b, s, _ = x.shape
     hd = cfg.resolved_head_dim
@@ -468,6 +475,29 @@ def gqa_attention(x: Array, p: dict, cfg, *,
             out = matmul(out.reshape(b, s, -1),
                          p["wo"].reshape(-1, cfg.d_model))
             return out, new_kv
+        if row_slots is not None:
+            # fused ragged step: every row is a width-1 token addressed to
+            # GLOBAL cache lane row_slots[r] at position start[r]. Rows may
+            # share a lane (a prefill chunk flattened into consecutive
+            # positions), so the new K/V scatter into the SHARED cache
+            # first — distinct (lane, position) cells; padding rows
+            # duplicate row 0's cell with row 0's value, a no-op — and each
+            # row then attends its lane's UPDATED view: earlier siblings
+            # are already present, later ones sit past start[r] where the
+            # decode mask never looks. Gathering per-row copies before the
+            # write would lose sibling keys — write-then-view is load-
+            # bearing for fusion correctness.
+            pcols = jnp.broadcast_to(jnp.asarray(start), (b,))
+            ck = ck.at[row_slots, pcols].set(k[:, 0].astype(ck.dtype),
+                                             mode="drop")
+            cv = cv.at[row_slots, pcols].set(v[:, 0].astype(cv.dtype),
+                                             mode="drop")
+            new_kv = (ck, cv)
+            out = decode_attention(q, ck[row_slots], cv[row_slots],
+                                   pos=start, window=window)
+            out = matmul(out.reshape(b, s, -1),
+                         p["wo"].reshape(-1, cfg.d_model))
+            return out, new_kv
         if is_per_slot(start):
             # slot-aware path: each batch lane writes/reads at its own depth
             ck = slot_cache_update(ck, k, start)
@@ -504,6 +534,7 @@ def mla_attention(x: Array, p: dict, cfg, *,
                   kv_cache: Optional[tuple[Array, Array]] = None,
                   cache_pos: Optional[Array] = None,
                   block_table: Optional[Array] = None,
+                  row_slots: Optional[Array] = None,
                   use_kernel: bool = False):
     """DeepSeek-v2 multi-head latent attention.
 
@@ -516,7 +547,10 @@ def mla_attention(x: Array, p: dict, cfg, *,
     the absorbed/ragged math runs on the table-assembled logical view —
     except paged DECODE with ``use_kernel``, where the Pallas MLA paged
     kernel runs the absorbed math straight off the pools (no view is
-    assembled; inference only — no VJP).
+    assembled; inference only — no VJP). With ``row_slots`` (R,) the
+    cache is the contiguous GLOBAL latent cache and each width-1 row
+    writes at (row_slots[r], cache_pos[r]) then attends its lane's
+    updated view (the fused ragged serving step; see gqa_attention).
     Returns (out, new_cache).
     """
     m = cfg.mla
@@ -557,6 +591,20 @@ def mla_attention(x: Array, p: dict, cfg, *,
             else:
                 cc = paged_view(pool_c, block_table)
                 cp = paged_view(pool_p, block_table)
+        elif row_slots is not None:
+            # fused ragged step over the contiguous latent cache: scatter
+            # every row's latent + rope-key into the GLOBAL pools first
+            # (rows may share a lane; write-then-view as in gqa_attention),
+            # then hand each row its lane's updated view to the absorbed
+            # decode math below, whose mask (<= start[r]) keeps same-step
+            # siblings causal.
+            pcols = jnp.broadcast_to(jnp.asarray(start), (b,))
+            gcc = cc.at[row_slots, pcols].set(c_kv[:, 0].astype(cc.dtype),
+                                              mode="drop")
+            gcp = cp.at[row_slots, pcols].set(k_pe[:, 0].astype(cp.dtype),
+                                              mode="drop")
+            new_cache = (gcc, gcp)
+            cc, cp = gcc[row_slots], gcp[row_slots]
         elif is_per_slot(start):
             cc = slot_cache_update(cc, c_kv, start)
             cp = slot_cache_update(cp, k_pe, start)

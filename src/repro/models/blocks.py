@@ -37,7 +37,9 @@ class BlockCtx(NamedTuple):
     use_kernel: bool
     cross_kv: Any = None             # whisper decoder cross K/V slice
     capture: bool = False            # add pre-FFN activations to aux
-    phase: str = "prefill"           # "prefill" | "decode" — expert engine
+    phase: str = "prefill"           # "prefill" | "decode" | "mixed" —
+    #   expert backend policy ("mixed" = fused serving step: decode-style
+    #   attention, backend by true fused width); attention ignores it
     backend: Optional[str] = None    # routed-expert backend override
     token_valid: Optional[Array] = None   # (B, S) bool: False = padding.
     #   Threaded to the routed-expert engine as its `valid` mask so
@@ -48,6 +50,15 @@ class BlockCtx(NamedTuple):
     #   shared by all lanes and lane b's logical block j lives in physical
     #   block block_table[b, j] (0 = the trash block). The table is layer-
     #   invariant — one table serves every layer of the stacked pool.
+    row_slots: Optional[Array] = None     # (R,) int32: FUSED ragged serving
+    #   over the contiguous slot cache. Row r is a width-1 token addressed
+    #   to cache lane row_slots[r] at position cache_pos[r]; several rows
+    #   may share a lane (a prefill chunk flattened to consecutive
+    #   positions), so attention scatters all rows' K/V into the GLOBAL
+    #   cache first and each row then attends its lane's updated view —
+    #   the causal mask (kv_pos <= cache_pos[r]) keeps same-step sibling
+    #   rows exactly causal. The paged layout needs no analogue: its rows
+    #   already address the shared pool through per-row block tables.
 
 
 def _lecun(key, shape, dtype, fan_in=None):
@@ -191,7 +202,8 @@ def dense_block(x: Array, p: dict, cfg, ctx: BlockCtx):
         rms_norm(x, p["norm1"], cfg.norm_eps), p["attn"], cfg,
         positions=ctx.positions, causal=ctx.causal, window=ctx.window,
         kv_cache=ctx.cache, cache_pos=ctx.cache_pos, use_rope=ctx.use_rope,
-        block_table=ctx.block_table, use_kernel=ctx.use_kernel)
+        block_table=ctx.block_table, row_slots=ctx.row_slots,
+        use_kernel=ctx.use_kernel)
     x = x + h
     ffn_in = rms_norm(x, p["norm2"], cfg.norm_eps)
     y, aux = _apply_ffn(ffn_in, p, cfg, ctx)
@@ -244,7 +256,8 @@ def moe_block(x: Array, p: dict, cfg, ctx: BlockCtx):
         rms_norm(x, p["norm1"], cfg.norm_eps), p["attn"], cfg,
         positions=ctx.positions, causal=ctx.causal, window=ctx.window,
         kv_cache=ctx.cache, cache_pos=ctx.cache_pos,
-        block_table=ctx.block_table, use_kernel=ctx.use_kernel)
+        block_table=ctx.block_table, row_slots=ctx.row_slots,
+        use_kernel=ctx.use_kernel)
     x = x + h
     ffn_in = rms_norm(x, p["norm2"], cfg.norm_eps)
     if cfg.cmoe is not None and "cmoe" in p:
@@ -274,7 +287,8 @@ def mla_moe_block(x: Array, p: dict, cfg, ctx: BlockCtx):
     h, new_cache = mla_attention(
         rms_norm(x, p["norm1"], cfg.norm_eps), p["attn"], cfg,
         positions=ctx.positions, kv_cache=ctx.cache, cache_pos=ctx.cache_pos,
-        block_table=ctx.block_table, use_kernel=ctx.use_kernel)
+        block_table=ctx.block_table, row_slots=ctx.row_slots,
+        use_kernel=ctx.use_kernel)
     x = x + h
     ffn_in = rms_norm(x, p["norm2"], cfg.norm_eps)
     if cfg.cmoe is not None and "cmoe" in p:

@@ -151,7 +151,7 @@ class Model:
     def _stack(self, params, x: Array, *, caches=None, cache_pos=None,
                enc_out=None, remat: bool = False, capture: bool = False,
                phase: str = "prefill", token_valid=None,
-               block_tables=None):
+               block_tables=None, row_slots=None):
         """Run the layer stack. Returns (x, new_caches, aux)."""
         cfg = self.cfg
         seq = x.shape[1]
@@ -168,7 +168,8 @@ class Model:
                         window=0, causal=True, use_rope=True,
                         use_kernel=self.use_kernel, capture=capture,
                         phase=phase, backend=self.backend,
-                        token_valid=token_valid, block_table=block_tables)
+                        token_valid=token_valid, block_table=block_tables,
+                        row_slots=row_slots)
         _, block_fn = B.BLOCKS[self.kind]
         moe_every = cfg.moe.moe_every if cfg.moe is not None else 1
 
@@ -413,7 +414,8 @@ class Model:
              lengths: Optional[Array] = None,
              extras: Optional[dict] = None,
              return_stats: bool = False,
-             block_tables: Optional[Array] = None):
+             block_tables: Optional[Array] = None,
+             row_slots: Optional[Array] = None):
         """Unified slot-aware step — the serving engine's one entry point.
 
         Runs `tokens` (B, S) against `cache`, writing K/V at per-slot
@@ -428,10 +430,13 @@ class Model:
         dynamic-slice path, so `prefill` and `decode_step` are thin views
         over this method with zero cost.
 
-        `phase` ("prefill" | "decode", default by S) is threaded to the
-        routed-expert engine so every micro-batch picks its own backend
-        (ragged grouped for prefill chunks, gather for decode — all
-        drop-free under the engine's per-token capacity contract).
+        `phase` ("prefill" | "decode" | "mixed", default by S) is threaded
+        to the routed-expert engine so every micro-batch picks its own
+        backend (ragged grouped for prefill chunks, gather for decode,
+        width-thresholded for a fused "mixed" (R, 1) step — all drop-free
+        under the engine's per-token capacity contract). Attention never
+        reads it: the per-row fused path triggers on `row_slots` /
+        per-row `block_tables`, not on phase.
         `lengths` (B,) marks each row's valid token count when prompts are
         right-padded: logits are taken at position lengths-1 and padded
         keys land beyond the valid range where masks never look (they are
@@ -443,6 +448,15 @@ class Model:
         lane's logical view from the pool — same rope positions, same
         ragged masks, so a paged step computes the same function as the
         contiguous slot step.
+        `row_slots` (B,) switches the CONTIGUOUS cache to the FUSED ragged
+        layout (S must be 1): batch row r is an independent width-1 token
+        addressed to global cache lane row_slots[r] at position
+        slot_pos[r] — several rows may share a lane (a prefill chunk
+        flattened into consecutive positions), and attention writes all
+        rows into the shared cache before any row reads its lane's view,
+        so intra-step siblings compose exactly causally. The paged layout
+        needs no row_slots: per-row block tables already address the
+        shared pool.
 
         Returns (logits (B, V) at each row's last valid position,
         new_cache) — or, with ``return_stats=True``, (logits, new_cache,
@@ -474,7 +488,8 @@ class Model:
         x, ncaches, aux = self._stack(params, x, caches=cache,
                                       cache_pos=slot_pos, phase=phase,
                                       token_valid=token_valid,
-                                      block_tables=block_tables)
+                                      block_tables=block_tables,
+                                      row_slots=row_slots)
         if lengths is None:
             xl = x[:, -1:]
         else:

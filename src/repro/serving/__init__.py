@@ -33,32 +33,47 @@ batch lane busy on mixed traffic. Three pieces, three contracts:
     recycled block — is never attended (proved by the parity tests).
 
 ``StepExecutor`` (`executor.py`)
-    jit-compiled step functions over ``Model.step``. A prefill
-    micro-batch is one CHUNK per row: it gathers the slots' prefix
-    window [0, hist), runs the slot-aware step at per-slot START
-    positions (0 for a fresh or recycled slot, the cursor for a resumed
-    chunk; right-padded with per-row lengths), and scatters back only
-    each row's write window [start, start+width). Decode micro-batches
-    run full-width over all slots with per-slot positions. Each call
-    reports the routed-expert backend the engine ran
-    (``core.experts.microbatch_backend`` — the same policy
-    ``routed_experts`` executes): grouped for prefill chunks, drop-free
-    gather for decode.
+    jit-compiled step functions over ``Model.step``. The OVERLAPPED
+    engine's workhorse is ``step_fused`` (+ paged twin): decode lanes
+    and flattened prefill-chunk tokens fused into ONE (R, 1) ragged
+    micro-batch — per-row (slot, position) metadata, sampling inlined in
+    the jit, the sampled tokens kept in an on-device per-lane carry so
+    consecutive steps chain without a host readback. The sequential
+    engine keeps the two classic shapes: a prefill micro-batch is one
+    CHUNK per row (gather the prefix window, step at per-slot START
+    positions, scatter back each row's write window) and decode runs
+    full-width over all slots. Each call reports the routed-expert
+    backend the micro-batch ran (``core.experts.microbatch_backend``):
+    sequential prefill chunks run grouped and decode gather; a fused
+    step runs expert phase "mixed" — backend by its true padded width,
+    so decode-only steps stay on gather and chunk-heavy steps run
+    grouped past the break-even.
 
 ``ServingEngine`` (`engine.py`)
-    The loop: each iteration takes the scheduler's prefill plan (resume
-    chunks + new admissions, budget-bounded), runs it as one prefill
-    micro-batch — width-1 chunks piggyback on the decode dispatch
-    instead — then decodes every RUNNING slot; finished requests
-    (EOS / max_new / max_len) free their slots. Returns an
-    ``EngineReport`` with goodput, TTFT (arrival to first token), TPOT
-    p50/p95 decode-gap percentiles (the head-of-line stall signal
-    chunked prefill bounds), slot utilization, slot-reuse count, and the
-    per-micro-batch backend log.
+    Two loops over the same scheduler/cache/executor. Overlapped
+    (``overlap=True``, serve.py's default): one fused dispatch per step,
+    double-buffered — step t+1 is issued from dispatch-time snapshots
+    before step t's tokens are read back, so host readback (emission,
+    EOS checks) LAGS one step; max_new/max_len finishes are decided at
+    dispatch, and a one-step rollback path handles lanes whose EOS
+    surfaces while their next row is already in flight. Sequential
+    (``overlap=False``): one prefill micro-batch (width-1 chunks
+    piggyback on decode) then one full-width decode dispatch, syncing
+    every step — the fused path's parity baseline. Both serve identical
+    token streams (schedule-invariant sampling + per-token capacity
+    contract). Returns an ``EngineReport``: goodput, step-clock TTFT and
+    wall-clock ttft_p50/p95_s (stamped at EMISSION, so the overlap lag
+    is included), TPOT p50/p95 completion-gap percentiles next to
+    dispatch-gap percentiles (under overlap, dispatch gaps measure host
+    issue rate; completion gaps what a client observes),
+    overlap_occupancy (fraction of dispatches issued while the previous
+    step was in flight), compute utilization (live/padded tokens), and
+    the per-micro-batch backend log.
 
 CLI usage (``repro.launch.serve`` is a thin shell over this package)::
 
-    # staggered Poisson arrivals, mixed prompt/gen lengths, slot recycling
+    # staggered Poisson arrivals, mixed prompt/gen lengths, slot
+    # recycling, overlapped engine (--no-overlap for the sequential one)
     PYTHONPATH=src python -m repro.launch.serve --smoke --continuous \
         --batch 4 --requests 8 --rate 0.5 --gen 8
 

@@ -228,3 +228,14 @@ class PagedKVCache:
         """A COPY of the block tables safe to hand to an asynchronously
         dispatched step."""
         return self.tables.copy()
+
+    def table_rows(self, slots) -> np.ndarray:
+        """Per-ROW block-table snapshot for a fused micro-batch: row i is
+        a copy of tables[slots[i]] (rows sharing a lane repeat its table).
+        Fancy indexing copies, so the snapshot is immune to frees or
+        allocations the host performs while the step is still in flight —
+        the overlapped engine's dispatch-time invariant. Take it BEFORE
+        applying the step's dispatch-time finishes: a finish zeroes the
+        live table, and the in-flight rows must keep addressing the
+        blocks they were scheduled against."""
+        return self.tables[np.asarray(slots, np.int32)]

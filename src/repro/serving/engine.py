@@ -1,28 +1,46 @@
-"""The continuous-batching serving loop, with chunked prefill.
+"""The continuous-batching serving loop: overlapped single-dispatch, or
+the sequential two-dispatch baseline.
 
-Each engine iteration:
-  1. plan prefill work under the `max_prefill_tokens` budget: resume
-     partially-prefilled prompts (state PREFILLING, cursor
-     `Request.prefill_pos`), then admit due requests into free slots while
-     budget remains — a long prompt becomes a sequence of per-step chunks
-     instead of one O(S^2) stall;
-  2. run the planned chunks as ONE prefill micro-batch (right-padded to a
-     width bucket, per-row valid lengths, per-slot START positions — a
-     resumed chunk lands at its cursor, a fresh or recycled slot at 0);
-     width-1 chunks piggyback on the decode micro-batch instead (same
-     (B, 1) shape — a dispatch that either runs anyway or is already
-     compiled);
-  3. decode every RUNNING slot full-width with per-slot positions;
-  4. finish requests on EOS / max_new / max_len and recycle their slots
-     (max_len finishes before max_new mark the request ``truncated``).
+OVERLAPPED mode (``overlap=True`` — serve.py's default) runs ONE fused
+ragged micro-batch per step and double-buffers the host loop:
 
-The phase is threaded per micro-batch down to the routed-expert engine,
-so prefill chunks run the grouped (ragged segment) backend while decode
-steps run the gather path — `backend_log` records what each micro-batch
-ran and how many routed (token, expert) pairs it dropped (zero on every
-engine backend; nonzero only if a bounded-buffer stage overflowed —
-`EngineReport.dropped_pairs` aggregates the column so chunk width can be
-audited as numerically invisible).
+  1. plan prefill under the `max_prefill_tokens` budget (resume
+     PREFILLING cursors, admit due requests into free slots);
+  2. flatten every decode lane and every planned chunk token into width-1
+     rows of a single (R, 1) dispatch — per-row (slot, position) metadata
+     over one padded token buffer; the width-1 piggyback path of the old
+     loop generalized until it IS the whole step (no separate prefill
+     micro-batch exists);
+  3. sample ON DEVICE inside the jitted step and keep the tokens in a
+     per-lane device carry, so step t+1 is dispatched from snapshots of
+     tables/positions taken at dispatch BEFORE step t's tokens are read
+     back (block allocation is host-only bookkeeping — `PagedKVCache.
+     ensure` touches no device state, so paged overlaps as cleanly as
+     contiguous);
+  4. read step t's tokens back while t+1 computes: emission therefore
+     LAGS DISPATCH BY ONE STEP. max_new/max_len finishes are decided at
+     dispatch (host-deterministic); only EOS is discovered at readback,
+     and the lane's speculative row in the one newer in-flight step is
+     rolled back (invalidated — its device writes land in freed cells no
+     mask can reach).
+
+SEQUENTIAL mode (``overlap=False`` — the constructor default, and the
+fused path's parity baseline) keeps the classic shape: one padded prefill
+micro-batch for the planned chunks (width-1 chunks piggyback on decode),
+then one full-width decode dispatch, with a host sync for sampling every
+step.
+
+The phase is threaded per micro-batch down to the routed-expert engine —
+in sequential mode prefill chunks run the grouped (ragged segment)
+backend while decode runs gather; a fused step runs phase "mixed",
+picking its backend by the TRUE padded row count R (static per compiled
+shape): decode-only widths stay on gather, chunk-heavy steps cross the
+gather break-even and run grouped. Every backend is bitwise identical
+under the engine's per-token capacity contract, which is what makes
+overlap-on == overlap-off token parity hold across the switch. `backend_log` records what each
+micro-batch ran, its padded vs live rows (a fused step charges its
+actual padded row count, not max_slots), and its routed drop count
+(`EngineReport.dropped_pairs` aggregates; zero on every engine backend).
 The cache behind the loop is either contiguous slot lanes or — with
 ``paged=True`` — a block pool with per-request block tables
 (`serving.cache.PagedKVCache`): admission then reserves each request's
@@ -30,21 +48,28 @@ worst-case block count against POOL headroom (not just a free slot), so
 concurrency is bounded by actual footprint, pool pressure surfaces as
 admission deferrals (`EngineReport.pool_deferrals`), and both layouts
 serve token-identical streams (tests/test_paged.py).
-Decode-stall telemetry: the wall gap between consecutive decode steps is
-the inter-token latency every decode lane paid that step (a prefill chunk
-dispatched between them lands inside the gap — the head-of-line signal
-chunking bounds); `EngineReport` summarizes the gaps as TPOT p50/p95.
-Gaps are only recorded — and the chain only continues — across steps
-where at least one lane is RUNNING: a piggyback-only dispatch (width-1
-prefill chunks riding the decode shape with no decode lane live) is a
-stall no decode token paid, so it breaks the chain instead of inflating
-the percentiles.
+
+Latency telemetry under overlap splits in two. A DISPATCH gap
+(`dispatch_gaps_s`) is the wall time between consecutive fused
+dispatches — how fast the host issues work; it can undercut the device
+step time because issuing never waits on results. A DECODE/COMPLETION
+gap (`decode_gaps_s`, the TPOT percentiles) is the wall time between
+consecutive READBACKS — the inter-token latency a client actually
+observes, including the one-step emission lag. In sequential mode the
+two coincide and both columns carry the same gaps. Either chain only
+continues across steps where a decode lane is live (a chunk-only step is
+a stall no decode token paid, so it breaks the chain), and
+`overlap_occupancy` reports the fraction of dispatches issued while the
+previous step was still in flight — ~1.0 means the device never waited
+on the host. Wall-clock TTFT (`ttft_p50_s`/`ttft_p95_s`, from
+`Request.arrival_t` to `Request.first_token_t`) is stamped at EMISSION,
+so it too includes the lag the client would see.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import Counter
+from collections import Counter, deque
 from typing import Optional
 
 import jax.numpy as jnp
@@ -96,8 +121,22 @@ class EngineReport:
     #   work (decode: RUNNING + piggyback lanes; prefill: real chunk
     #   tokens), summed over backend_log
     padded_tokens: int              # what the dispatches actually
-    #   charged (decode: max_slots per step; prefill: rows x padded
-    #   width) — live/padded is the engine's compute utilization
+    #   charged (sequential decode: max_slots per step; prefill: rows x
+    #   padded width; fused: the step's granule-rounded row count) —
+    #   live/padded is the engine's compute utilization
+    dispatch_gaps_s: list = dataclasses.field(default_factory=list)
+    #   wall gap between consecutive fused DISPATCHES — host issue rate.
+    #   Under overlap it can undercut the device step time (issuing
+    #   never waits on results); in sequential mode it equals
+    #   decode_gaps_s, where dispatch and completion coincide.
+    ttft_s: list = dataclasses.field(default_factory=list)
+    #   wall-clock arrival -> first EMITTED token per finished-prefill
+    #   request (includes the overlapped engine's one-step emission lag —
+    #   what a client would measure, where mean_ttft_steps counts
+    #   scheduler steps)
+    overlap_occupancy: float = 0.0  # dispatches issued while the previous
+    #   step was still in flight / total dispatches — ~1.0 means the
+    #   device never waited on host readback (0.0 in sequential mode)
 
     @property
     def goodput(self) -> float:
@@ -118,6 +157,16 @@ class EngineReport:
             if self.decode_gaps_s else 0.0
 
     @property
+    def ttft_p50_s(self) -> float:
+        """Median wall-clock time-to-first-token (seconds)."""
+        return float(np.percentile(self.ttft_s, 50)) if self.ttft_s else 0.0
+
+    @property
+    def ttft_p95_s(self) -> float:
+        """p95 wall-clock time-to-first-token (seconds)."""
+        return float(np.percentile(self.ttft_s, 95)) if self.ttft_s else 0.0
+
+    @property
     def compute_utilization(self) -> float:
         """Live tokens / padded tokens over every dispatched micro-batch
         — how much of the charged compute backed real lanes."""
@@ -128,15 +177,49 @@ class EngineReport:
         return (f"{self.num_requests} requests in {self.steps} steps / "
                 f"{self.wall_s:.2f}s: {self.total_new_tokens} tokens, "
                 f"goodput {self.goodput:.1f} tok/s, mean TTFT "
-                f"{self.mean_ttft_steps:.1f} steps, TPOT p50/p95 "
+                f"{self.mean_ttft_steps:.1f} steps, TTFT p50/p95 "
+                f"{self.ttft_p50_s * 1e3:.1f}/{self.ttft_p95_s * 1e3:.1f} "
+                f"ms, TPOT p50/p95 "
                 f"{self.tpot_p50_s * 1e3:.1f}/{self.tpot_p95_s * 1e3:.1f} "
-                f"ms, slot busy {self.slot_busy_frac * 100:.0f}%, peak "
+                f"ms, overlap occupancy "
+                f"{self.overlap_occupancy * 100:.0f}%, slot busy "
+                f"{self.slot_busy_frac * 100:.0f}%, peak "
                 f"occupancy {self.peak_occupancy}, slot reuse "
                 f"{self.slot_reuse}, truncated {self.truncated}, pool "
                 f"deferrals {self.pool_deferrals}, live/padded tokens "
                 f"{self.live_tokens}/{self.padded_tokens} "
                 f"({self.compute_utilization * 100:.0f}%), dropped pairs "
                 f"{self.dropped_pairs}, backends {bc}")
+
+
+@dataclasses.dataclass
+class _FusedRow:
+    """One width-1 row of a fused dispatch (host-side descriptor)."""
+    req: Request
+    kind: str            # "decode" | "mid" (chunk token) | "first" (final
+    #                      chunk token — its logits row is the request's
+    #                      first sampled token)
+    slot: int
+    pos: int             # absolute cache position the row writes at
+    base: int            # staged input token (a prompt token; 0 = unused)
+    use_prev: bool       # True: input is the lane's device-carried token
+    tidx: int            # schedule-invariant sampling token index
+    carry: bool          # write the sample back into the device carry
+    valid: bool = True   # cleared by EOS rollback — emission is skipped
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """A dispatched fused step whose results have not been read back."""
+    step: int
+    nxt: object          # (R_pad,) sampled tokens — ON DEVICE
+    dropped: object      # device scalar; an int() at dispatch would sync
+    #                      the step and forfeit the overlap
+    rows: list           # _FusedRow per real row, index-aligned with nxt
+    running: int         # decode rows (gap-chain bookkeeping)
+    padded: int          # granule-rounded row count the dispatch charged
+    live: int            # real rows
+    backend: Optional[str]
 
 
 class ServingEngine:
@@ -163,6 +246,11 @@ class ServingEngine:
     CLIPPED at the max_len wall: it finishes early with
     ``Request.truncated`` set (counted in `EngineReport.truncated`) —
     never silently. Prompts longer than max_len are rejected.
+    overlap=True switches run() to the OVERLAPPED loop: one fused ragged
+    dispatch per step, on-device sampling, host readback lagging one step
+    (see the module docstring) — token streams are identical to
+    overlap=False by the schedule-invariance contract; only wall-clock
+    telemetry and the backend_log shape differ.
     """
 
     def __init__(self, model, params, *, max_slots: int, max_len: int,
@@ -171,7 +259,8 @@ class ServingEngine:
                  max_prefill_tokens: Optional[int] = None,
                  temperature: float = 0.0, seed: int = 0,
                  paged: bool = False, block_size: int = 16,
-                 num_blocks: Optional[int] = None):
+                 num_blocks: Optional[int] = None,
+                 overlap: bool = False):
         kind = getattr(model, "kind", None)
         if model.cfg.family in ("ssm", "hybrid", "audio") or kind not in (
                 "dense", "moe", "mla_moe"):
@@ -188,7 +277,15 @@ class ServingEngine:
         self.paged = paged
         self.block_size = block_size
         self.num_blocks = num_blocks
-        self.executor = StepExecutor(model)
+        self.overlap = overlap
+        # built once: at temperature>0 the keyed sampler is a jitted
+        # closure, and rebuilding it per run() would retrace inside the
+        # timed window (the engine always samples in keyed mode, which is
+        # stateless, so reuse across runs is exact). The executor inlines
+        # the same closure inside the fused jitted step, so overlap-on
+        # and overlap-off draw identical tokens per (rid, token index).
+        self._sampler = make_sampler(temperature, seed)
+        self.executor = StepExecutor(model, sampler=self._sampler)
         # one padding granule shared with the scheduler, so the planner's
         # padded-compute budget accounting matches what actually runs
         self._granule = self.prefill_bucket if max_prefill_tokens is None \
@@ -196,11 +293,9 @@ class ServingEngine:
         self.scheduler = Scheduler(max_slots, policy=policy,
                                    max_prefill_tokens=max_prefill_tokens,
                                    prefill_granule=self._granule)
-        # built once: at temperature>0 the keyed sampler is a jitted
-        # closure, and rebuilding it per run() would retrace inside the
-        # timed window (the engine always samples in keyed mode, which is
-        # stateless, so reuse across runs is exact)
-        self._sampler = make_sampler(temperature, seed)
+        # fused dispatches round their row count up to this granule —
+        # compiled fused shapes stay O(budget / granule) per run
+        self._row_granule = 4
         self.kv: Optional[SlotKVCache | PagedKVCache] = None
         # (step, phase, padded tokens, live tokens, backend, dropped
         # pairs) per micro-batch — the drop column is the surfaced form
@@ -245,6 +340,8 @@ class ServingEngine:
         self.backend_log = []
         self._decode_gaps: list[float] = []
         self._last_decode_t: Optional[float] = None
+        self._dispatch_gaps: list[float] = []
+        self._last_dispatch_t: Optional[float] = None
         if max_steps is None:
             # every iteration with occupied slots prefills >= 1 prompt
             # token or decodes >= 1 token, so the loop is bounded by
@@ -253,12 +350,15 @@ class ServingEngine:
             max_steps = int(horizon) + sum(
                 r.prompt_len + r.max_new for r in requests) + 16
         self.scheduler.submit(requests)
+        if self.overlap:
+            return self._run_fused(requests, max_steps)
 
         step = 0
         busy = 0
         peak = 0
         t0 = time.perf_counter()
         while not self.scheduler.all_done():
+            self._stamp_arrivals(requests, step)
             plan = self.scheduler.plan_prefill(step)
             # width-1 chunks ALWAYS ride the decode micro-batch: with
             # decode lanes live their compute rides a dispatch that runs
@@ -284,8 +384,18 @@ class ServingEngine:
                 raise RuntimeError(f"engine made no progress in "
                                    f"{max_steps} steps")
         wall = time.perf_counter() - t0
+        # sequential mode: dispatch and completion coincide, so the
+        # dispatch-gap column carries the same gaps as the decode gaps
+        return self._mk_report(requests, step=step, wall=wall, busy=busy,
+                               peak=peak,
+                               dispatch_gaps=list(self._decode_gaps),
+                               overlap_occupancy=0.0)
 
+    def _mk_report(self, requests, *, step, wall, busy, peak,
+                   dispatch_gaps, overlap_occupancy) -> EngineReport:
         ttft = [r.first_token_step - r.arrival for r in requests]
+        ttft_s = [r.first_token_t - r.arrival_t for r in requests
+                  if r.first_token_t >= 0 and r.arrival_t >= 0]
         return EngineReport(
             num_requests=len(requests),
             steps=step,
@@ -305,7 +415,18 @@ class ServingEngine:
             live_tokens=sum(lv for _, _, _, lv, _, _ in self.backend_log),
             padded_tokens=sum(pd for _, _, pd, _, _, _ in
                               self.backend_log),
+            dispatch_gaps_s=dispatch_gaps,
+            ttft_s=ttft_s,
+            overlap_occupancy=overlap_occupancy,
         )
+
+    def _stamp_arrivals(self, requests, step: int) -> None:
+        """Stamp the wall clock on requests that just became due — the
+        TTFT numerator's zero point."""
+        now = time.perf_counter()
+        for r in requests:
+            if r.arrival_t < 0 and r.arrival <= step:
+                r.arrival_t = now
 
     def backend_counts(self) -> dict:
         out: dict[str, Counter] = {"prefill": Counter(), "decode": Counter()}
@@ -474,6 +595,8 @@ class ServingEngine:
 
     def _emit(self, req: Request, token: int, step: int) -> None:
         req.generated.append(token)
+        if len(req.generated) == 1:
+            req.first_token_t = time.perf_counter()
         hit_eos = req.eos_id is not None and token == req.eos_id
         # the next decode would write this token's K/V at position
         # lengths[slot]; finish when that write would fall off the cache
@@ -488,3 +611,233 @@ class ServingEngine:
                 req.truncated = True
             self.scheduler.finish(req, step)
             self.kv.free_request(req)
+
+    # ------------------------------------------------- overlapped (fused)
+
+    def _run_fused(self, requests: list[Request],
+                   max_steps: int) -> EngineReport:
+        """The overlapped loop: one fused ragged dispatch per step, host
+        readback lagging one step behind (double buffer). Dispatch-time
+        state (plan, positions, max_new/max_len finishes) is
+        host-deterministic — it never needs the step's results — so only
+        EOS discovery waits for a readback, and only by one step."""
+        sched = self.scheduler
+        slot_tokens = jnp.zeros((self.max_slots,), jnp.int32)
+        # tokens dispatched (= sampled on device) per request — runs one
+        # step AHEAD of len(r.generated), which counts emissions
+        self._disp_counts: dict[int, int] = {r.rid: 0 for r in requests}
+        inflight: deque[_InFlight] = deque()
+        step = busy = peak = 0
+        n_disp = n_overlapped = 0
+        t0 = time.perf_counter()
+        while not (sched.all_done() and not inflight):
+            self._stamp_arrivals(requests, step)
+            rec = None
+            if not sched.all_done():
+                rec, slot_tokens, occ = self._dispatch_fused(step,
+                                                             slot_tokens)
+                busy += occ
+                peak = max(peak, occ)
+            if rec is not None:
+                n_disp += 1
+                if inflight:
+                    n_overlapped += 1
+                if rec.running:
+                    now = time.perf_counter()
+                    if self._last_dispatch_t is not None:
+                        self._dispatch_gaps.append(
+                            now - self._last_dispatch_t)
+                    self._last_dispatch_t = now
+                else:
+                    self._last_dispatch_t = None
+                inflight.append(rec)
+            else:
+                self._last_dispatch_t = None
+            # double buffer: with a fresh dispatch in flight, read back
+            # everything OLDER than it (steady state: exactly the
+            # previous step); with nothing dispatched this tick there is
+            # nothing to overlap with, so drain fully
+            while len(inflight) > (1 if rec is not None else 0):
+                self._readback_fused(inflight.popleft(), inflight)
+            step += 1
+            if step > max_steps:
+                raise RuntimeError(f"engine made no progress in "
+                                   f"{max_steps} steps")
+        wall = time.perf_counter() - t0
+        return self._mk_report(requests, step=step, wall=wall, busy=busy,
+                               peak=peak,
+                               dispatch_gaps=list(self._dispatch_gaps),
+                               overlap_occupancy=(n_overlapped /
+                                                  max(n_disp, 1)))
+
+    def _dispatch_fused(self, step: int, slot_tokens):
+        """Plan, flatten, and dispatch ONE fused ragged micro-batch
+        without waiting on its results.
+
+        Returns (record | None, new slot_tokens, occupied lanes). Decode
+        rows read their input from the device carry; chunk rows stage
+        prompt tokens. max_new/max_len finishes are applied here — they
+        are functions of dispatch counts and positions, both host-known —
+        but only AFTER every row (and its paged table snapshot) is
+        collected: freeing a slot or table mid-collection could hand this
+        same dispatch's later rows a recycled cell, and two live rows
+        sharing a scatter cell inside one jitted step is the one
+        collision the write-before-attend invariant cannot absorb."""
+        sched = self.scheduler
+        plan = sched.plan_prefill(step)
+        rows: list[_FusedRow] = []
+        finishes: list[Request] = []
+        promotions: list[Request] = []
+        running = 0
+        for r in sched.active():
+            # RUNNING lanes decode one token at their current depth
+            pos = int(self.kv.lengths[r.slot])
+            if self.paged:
+                self.kv.ensure(r, pos + 1)
+            idx = self._disp_counts[r.rid]
+            rows.append(_FusedRow(req=r, kind="decode", slot=r.slot,
+                                  pos=pos, base=0, use_prev=True,
+                                  tidx=idx, carry=True))
+            self.kv.lengths[r.slot] = pos + 1
+            self._disp_counts[r.rid] = idx + 1
+            running += 1
+            full = pos + 1 >= self.max_len
+            if idx + 1 >= r.max_new or full:
+                if full and idx + 1 < r.max_new:
+                    # speculative: readback clears it if this very token
+                    # (or an in-flight earlier one) turns out to be EOS
+                    r.truncated = True
+                finishes.append(r)
+        for r, c in plan:
+            # a planned chunk contributes c width-1 rows at consecutive
+            # positions — the generalized piggyback: no separate prefill
+            # micro-batch shape exists in this loop
+            if r.admit_step < 0:
+                r.admit_step = step
+            if self.paged:
+                self.kv.ensure(r, r.prefill_pos + c)
+            for j in range(c):
+                pos = r.prefill_pos + j
+                last = pos == r.prompt_len - 1
+                rows.append(_FusedRow(req=r,
+                                      kind="first" if last else "mid",
+                                      slot=r.slot, pos=pos,
+                                      base=int(r.prompt[pos]),
+                                      use_prev=False, tidx=0, carry=last))
+            r.prefill_pos += c
+            self.kv.lengths[r.slot] = r.prefill_pos
+            if r.prefill_pos == r.prompt_len:
+                promotions.append(r)
+                self._disp_counts[r.rid] = 1
+                full = r.prompt_len >= self.max_len
+                if r.max_new <= 1 or full:
+                    if full and r.max_new > 1:
+                        r.truncated = True
+                    finishes.append(r)
+        occupied = len(sched.occupied())
+        if not rows:
+            return None, slot_tokens, occupied
+        n = len(rows)
+        g = self._row_granule
+        rp = -(-n // g) * g
+        base = np.zeros(rp, np.int32)
+        use_prev = np.zeros(rp, bool)
+        slots = np.zeros(rp, np.int32)
+        pos_a = np.zeros(rp, np.int32)
+        rids = np.zeros(rp, np.int32)
+        tidx = np.zeros(rp, np.int32)
+        carry = np.zeros(rp, bool)
+        for i, row in enumerate(rows):
+            base[i] = row.base
+            use_prev[i] = row.use_prev
+            slots[i] = row.slot
+            pos_a[i] = row.pos
+            rids[i] = row.req.rid
+            tidx[i] = row.tidx
+            carry[i] = row.carry
+        # padding rows duplicate row 0 — same scatter cell, same value, a
+        # no-op rewrite — with carry=False so they never touch the token
+        # carry (and their sampled rows are simply never read)
+        base[n:] = base[0]
+        use_prev[n:] = use_prev[0]
+        slots[n:] = slots[0]
+        pos_a[n:] = pos_a[0]
+        rids[n:] = rids[0]
+        tidx[n:] = tidx[0]
+        if self.paged:
+            tables = self.kv.table_rows(slots)
+            nxt, slot_tokens, cache, backend, dropped = \
+                self.executor.step_fused_paged(
+                    self.params, self.kv.cache, jnp.asarray(base),
+                    jnp.asarray(use_prev), slot_tokens,
+                    jnp.asarray(slots), jnp.asarray(tables),
+                    jnp.asarray(pos_a), jnp.asarray(rids),
+                    jnp.asarray(tidx), jnp.asarray(carry))
+        else:
+            nxt, slot_tokens, cache, backend, dropped = \
+                self.executor.step_fused(
+                    self.params, self.kv.cache, jnp.asarray(base),
+                    jnp.asarray(use_prev), slot_tokens,
+                    jnp.asarray(slots), jnp.asarray(pos_a),
+                    jnp.asarray(rids), jnp.asarray(tidx),
+                    jnp.asarray(carry))
+        self.kv.cache = cache
+        for r in promotions:
+            sched.prefill_done(r)
+        for r in finishes:
+            sched.finish(r, step)
+            self.kv.free_request(r)
+        return (_InFlight(step=step, nxt=nxt, dropped=dropped, rows=rows,
+                          running=running, padded=rp, live=n,
+                          backend=backend), slot_tokens, occupied)
+
+    def _readback_fused(self, rec: _InFlight,
+                        inflight: "deque[_InFlight]") -> None:
+        """Read one lagged step's device results and apply the host
+        effects the dispatch speculated past: emission (and wall-clock
+        TTFT), the backend_log row (its dropped column is a device scalar
+        until here), completion-gap accounting, and EOS finishes."""
+        nxt = np.asarray(rec.nxt)           # the one host sync per step
+        now = time.perf_counter()
+        self.backend_log.append((rec.step, "decode", rec.padded, rec.live,
+                                 rec.backend,
+                                 int(np.asarray(rec.dropped))))
+        if rec.running:
+            if self._last_decode_t is not None:
+                self._decode_gaps.append(now - self._last_decode_t)
+            self._last_decode_t = now
+        else:
+            self._last_decode_t = None
+        for i, row in enumerate(rec.rows):
+            if row.kind == "mid" or not row.valid:
+                continue
+            r = row.req
+            tok = int(nxt[i])
+            if row.kind == "first":
+                r.first_token_step = rec.step
+                r.first_token_t = now
+            r.generated.append(tok)
+            if r.eos_id is not None and tok == r.eos_id:
+                self._eos_rollback(r, rec.step, inflight)
+
+    def _eos_rollback(self, r: Request, step: int,
+                      inflight: "deque[_InFlight]") -> None:
+        """EOS surfaced one step late. The lane may already have a
+        speculative row in the newer in-flight dispatch — invalidate it
+        (its device writes land at positions/blocks past the finished
+        stream or in freed cells; masks stop at valid lengths and the
+        next tenant overwrites before attending, so they are garbage no
+        one reads) — and finish the request now unless the dispatch-time
+        state machine already finished it for max_new/max_len on this
+        same token (then only the speculative `truncated` flag and the
+        finish step need correcting)."""
+        r.truncated = False
+        for later in inflight:
+            for row in later.rows:
+                if row.req is r:
+                    row.valid = False
+        if r.state == RUNNING:
+            self.scheduler.finish(r, step)
+            self.kv.free_request(r)
+        else:
+            r.finish_step = step

@@ -21,6 +21,19 @@ Two compiled shapes do all the work:
       before anything can attend it; a PREFILLING lane idling this step
       likewise has its dummy write overwritten by its own next chunk.
 
+  step_fused(base (R,), use_prev, slot_tokens, row_slots, positions, ...)
+      the OVERLAPPED engine's single dispatch per step: decode lanes and
+      flattened prefill-chunk tokens fused into one (R, 1) ragged
+      micro-batch (R rounded up to a small granule; padding rows
+      duplicate row 0). Sampling runs inside the jit and the sampled
+      tokens live in an on-device (max_slots,) carry keyed by lane, so
+      step t+1 can be dispatched before step t's tokens reach the host.
+      The routed-expert phase is "mixed": backend chosen by the TRUE
+      fused width R (trace-time per compiled shape) — decode-only widths
+      gather, chunk-heavy widths grouped past the break-even. The
+      separate prefill/decode shapes above remain the sequential
+      (--no-overlap) engine's path and the fused path's parity baseline.
+
 Each has a PAGED twin (`prefill_paged` / `decode_paged`) taking per-slot
 block tables instead of slot indices: the pool is the cache, writes
 scatter through the table inside the jitted step, and a resumed chunk's
@@ -61,8 +74,16 @@ Array = jax.Array
 
 
 class StepExecutor:
-    def __init__(self, model):
+    def __init__(self, model, sampler=None):
         self.model = model
+        # `sampler(logits (R, V), rids (R,), token_idx (R,)) -> (R,) int32`
+        # runs INSIDE the fused jitted step (greedy argmax when None) so
+        # the sampled-token array never has to visit the host between
+        # steps — the overlapped engine's double-buffering hinges on this.
+        # Schedule-invariant keyed sampling (repro.serving.sampling) is a
+        # pure fold_in closure, so inlining it is trace-safe.
+        self._sample = sampler if sampler is not None else \
+            (lambda logits, rids, token_idx: jnp.argmax(logits, axis=-1))
         # note: the cache is NOT donated — measured slower on CPU (the
         # functional update already fuses; donation forced a layout copy)
         self._prefill = jax.jit(self._prefill_impl,
@@ -70,6 +91,8 @@ class StepExecutor:
         self._decode = jax.jit(self._decode_impl)
         self._prefill_paged = jax.jit(self._prefill_paged_impl)
         self._decode_paged = jax.jit(self._decode_paged_impl)
+        self._step_fused = jax.jit(self._step_fused_impl)
+        self._step_fused_paged = jax.jit(self._step_fused_paged_impl)
 
     def _backend(self, num_tokens: int, phase: str):
         m = self.model
@@ -175,4 +198,90 @@ class StepExecutor:
         logits, cache, dropped = self._decode_paged(params, cache, tokens,
                                                     positions, tables)
         return (logits, cache, self._backend(int(tokens.shape[0]), "decode"),
+                dropped)
+
+    # ------------------------------------------------------------- fused
+
+    def _fused_tokens(self, base, use_prev, slot_tokens, row_slots):
+        # row r's input token: the prompt token staged at dispatch, or —
+        # for a decode row — the token ITS OWN LANE sampled last step,
+        # read from the on-device carry so the host never sees it first
+        return jnp.where(use_prev, slot_tokens[row_slots], base)
+
+    def _fused_carry(self, slot_tokens, row_slots, carry, nxt):
+        # at most one carry row per lane (its decode row, or the final row
+        # of its completing chunk): rows with carry=False scatter to an
+        # out-of-range index and are dropped
+        n = slot_tokens.shape[0]
+        idx = jnp.where(carry, row_slots, n)
+        return slot_tokens.at[idx].set(nxt, mode="drop")
+
+    def _step_fused_impl(self, params, cache, base, use_prev, slot_tokens,
+                         row_slots, positions, rids, tidx, carry):
+        tokens = self._fused_tokens(base, use_prev, slot_tokens, row_slots)
+        logits, ncache, stats = self.model.step(
+            params, tokens[:, None], cache, positions, phase="mixed",
+            row_slots=row_slots, return_stats=True)
+        nxt = self._sample(logits, rids, tidx).astype(jnp.int32)
+        return (nxt, self._fused_carry(slot_tokens, row_slots, carry, nxt),
+                ncache, stats["dropped"])
+
+    def step_fused(self, params, cache, base: Array, use_prev: Array,
+                   slot_tokens: Array, row_slots: Array, positions: Array,
+                   rids: Array, token_idx: Array, carry: Array):
+        """ONE fused ragged micro-batch: decode lanes and flattened
+        prefill-chunk tokens ride the same (R, 1) dispatch — the width-1
+        piggyback path generalized until it IS the whole step.
+
+        Row r is a width-1 token for cache lane row_slots[r] at position
+        positions[r]: `base[r]` if use_prev[r] is False (a staged prompt
+        token), else the token lane row_slots[r] sampled LAST step, read
+        from the on-device `slot_tokens` (max_slots,) carry. Sampling
+        runs inside the jit and rows with carry[r] write their sample
+        back into the carry, so consecutive fused steps chain without a
+        host readback — the overlapped engine reads `nxt` one step late.
+        Padding rows must duplicate row 0 (same cell, same value — a
+        no-op rewrite) with carry=False.
+
+        The micro-batch runs expert phase "mixed": attention is
+        decode-style per row, but the routed-expert backend is chosen by
+        the TRUE fused width R — a step carrying a prefill chunk's worth
+        of rows crosses the gather break-even and runs grouped, while a
+        decode-only step stays on gather (R is static per compiled
+        shape, so the choice is trace-time, same policy as the report).
+
+        Returns (nxt (R,) device, new_slot_tokens device, new_cache,
+        backend, dropped device scalar). `nxt` and `dropped` are NOT
+        synced to host here — call sites that want overlap read them a
+        step later."""
+        nxt, st, cache, dropped = self._step_fused(
+            params, cache, base, use_prev, slot_tokens, row_slots,
+            positions, rids, token_idx, carry)
+        return (nxt, st, cache, self._backend(int(base.shape[0]), "mixed"),
+                dropped)
+
+    def _step_fused_paged_impl(self, params, cache, base, use_prev,
+                               slot_tokens, row_slots, tables, positions,
+                               rids, tidx, carry):
+        tokens = self._fused_tokens(base, use_prev, slot_tokens, row_slots)
+        logits, ncache, stats = self.model.step(
+            params, tokens[:, None], cache, positions, phase="mixed",
+            block_tables=tables, return_stats=True)
+        nxt = self._sample(logits, rids, tidx).astype(jnp.int32)
+        return (nxt, self._fused_carry(slot_tokens, row_slots, carry, nxt),
+                ncache, stats["dropped"])
+
+    def step_fused_paged(self, params, cache, base: Array, use_prev: Array,
+                         slot_tokens: Array, row_slots: Array,
+                         tables: Array, positions: Array, rids: Array,
+                         token_idx: Array, carry: Array):
+        """Paged twin of `step_fused`: row r addresses the pool through
+        its own block-table SNAPSHOT `tables[r]` (rows of one lane share a
+        table; padding rows duplicate row 0's), so the model needs no
+        row_slots — per-row tables already express lane sharing. row_slots
+        still drives the token composition and the sampled-token carry."""
+        nxt, st, cache, dropped = self._step_fused_paged(
+            params, cache, base, use_prev, slot_tokens, row_slots, tables,
+            positions, rids, token_idx, carry)
+        return (nxt, st, cache, self._backend(int(base.shape[0]), "mixed"),
                 dropped)

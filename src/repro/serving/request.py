@@ -39,6 +39,11 @@ class Request:
     prefill_pos: int = 0              # prompt tokens already in the cache
     admit_step: int = -1              # step the request got its slot
     first_token_step: int = -1        # step the first token was sampled
+    arrival_t: float = -1.0           # wall clock the request became due
+    first_token_t: float = -1.0       # wall clock the first token was
+    #   EMITTED (host-visible) — under the overlapped engine this lags
+    #   the sampling dispatch by one step, which is exactly the latency
+    #   a client would see; ttft_p50_s/p95_s on EngineReport use these
     finish_step: int = -1
     truncated: bool = False           # finished because the slot hit
     #   max_len before max_new (and before EOS) — surfaced on
@@ -59,5 +64,7 @@ class Request:
         self.prefill_pos = 0
         self.admit_step = -1
         self.first_token_step = -1
+        self.arrival_t = -1.0
+        self.first_token_t = -1.0
         self.finish_step = -1
         self.truncated = False

@@ -30,6 +30,12 @@ def make_sampler(temperature: float = 0.0, seed: int = 0):
         sampled under. That is what makes continuous==static and
         chunked==unchunked token parity hold beyond greedy. Rows the
         caller discards (free/dummy lanes) may carry any key.
+
+    Both greedy and keyed mode are pure functions of their arguments, so
+    `StepExecutor` inlines them INSIDE the fused jitted step (sampling on
+    device is what lets the overlapped engine dispatch step t+1 before
+    reading step t's tokens back). Stream mode is host-stateful and must
+    stay outside jit — the engine never uses it.
     """
     if temperature <= 0:
         def greedy(logits, rids=None, token_idx=None):

@@ -7,6 +7,14 @@ prompts into per-step chunks bounded by ``max_prefill_tokens``;
 ``prefill_done(req)`` promotes a fully-prefilled request to a decode lane;
 ``finish(req, step)`` recycles the slot for the next admission.
 
+Under the OVERLAPPED engine the clock is DISPATCH time: promotions and
+max_new/max_len finishes are applied the step their last token is
+dispatched (host-deterministic, no device sync), so a freed slot is
+re-admittable one step earlier than its tokens are host-visible; only an
+EOS finish arrives a step late, via the engine's readback rollback. The
+scheduler itself is oblivious — the same plan/promote/finish calls, made
+at dispatch instead of completion.
+
 Data structures are O(log max_slots) per admission: free slots live in a
 min-heap (lowest slot index first, matching the historical fill order) and
 the pending queue is an arrival-sorted deque popped from the left.

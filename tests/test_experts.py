@@ -197,6 +197,11 @@ def test_select_backend_policy():
         "grouped_pallas"
     assert select_backend(4096, None, "prefill") in ("grouped_xla",
                                                      "grouped_pallas")
+    # phase "mixed" (the fused serving micro-batch): width-thresholded
+    # like prefill — decode's unconditional gather does NOT apply, so a
+    # chunk-heavy fused step escapes gather's per-row weight traffic
+    assert select_backend(GATHER_TOKEN_THRESHOLD, None, "mixed") == "gather"
+    assert select_backend(4096, None, "mixed") == "grouped_xla"
 
 
 def test_select_backend_measured_crossover(tmp_path, monkeypatch):
