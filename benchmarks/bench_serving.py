@@ -37,7 +37,19 @@ overlap_occupancy, overlap on vs off — as JSON next to the printed
 report, so the committed baseline tracks the same numbers the gates
 read.
 
-Section 3 — paged concurrency. The same mixed long/short HOL-style mix
+Section 3 — SLO mix (activation tiers). A CMoE model serves one
+co-batched request set where half the requests carry ``tier=1`` (one
+routed expert per token) and half run the config default. Tiers are
+routing DATA — per-row k flows router -> ragged dispatch -> kernels —
+so both tiers share every fused step of ONE overlapped engine run; no
+second model, no second compiled graph. The report's
+``tier_metrics()`` gives per-tier TTFT/TPOT/goodput and active
+expert-pair counts, and the gate is the paper's point: the low tier is
+STRICTLY cheaper in active-pair compute (pairs per token) than the
+default tier inside the same run, with active-pair utilization below
+token utilization and zero drops.
+
+Section 4 — paged concurrency. The same mixed long/short HOL-style mix
 is served by the contiguous engine (every request owns a max_len lane,
 so concurrency = slot count) and by the paged engine at EQUAL cache
 memory (the block pool, trash block included, holds exactly the same
@@ -282,6 +294,97 @@ def bench_hol(args, results: dict) -> int:
     return 0 if args.no_gate else 1
 
 
+def bench_slo_mix(args, results: dict) -> int:
+    """Mixed activation tiers co-batched through one overlapped engine
+    run: half the requests at tier=1, half at the default tier (the
+    config top_k). Per-request k is routing data, so both tiers share
+    every fused ragged dispatch; the gate checks the low tier really
+    buys its cheaper operating point — strictly fewer active expert
+    pairs per token than the default tier IN THE SAME RUN — and that
+    the run's active-pair utilization sits below its token utilization
+    (the padded-width accounting can't see tiers; the pair accounting
+    must)."""
+    from repro.config import CMoEConfig, override
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+    from repro.serving import ServingEngine, make_requests
+
+    # this section IS the tier demo — it builds a CMoE model regardless
+    # of --cmoe (tiers on a dense model are a config error by design)
+    cfg = override(get_smoke_config(args.arch), dtype="float32",
+                   d_model=args.d_model, num_layers=args.layers,
+                   d_ff=args.d_model * 3,
+                   cmoe=CMoEConfig(num_experts=8, num_shared=2,
+                                   top_k=2, k_activation=4))
+    k_max = cfg.cmoe.top_k
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    reqs = make_requests(
+        args.requests, cfg.vocab_size,
+        prompt_range=(min(max(4, args.prompt_len // 2), args.prompt_len),
+                      args.prompt_len),
+        gen_range=(max(1, args.gen // 4), args.gen),
+        rate=0.5, seed=args.seed,
+        tiers=[1, None])                   # interleave low / default tier
+
+    engine = ServingEngine(model, params, max_slots=args.slots,
+                           max_len=args.prompt_len + args.gen,
+                           prefill_bucket=args.prompt_len,
+                           max_prefill_tokens=args.prompt_len,
+                           overlap=True)
+    engine.run(reqs)                       # warm-up: compiles every shape
+    best = None
+    for _ in range(args.samples):
+        rep = engine.run(reqs)
+        if best is None or rep.wall_s < best.wall_s:
+            best = rep
+
+    print(f"# SLO mix — {cfg.name} cmoe {cfg.cmoe.tag()} "
+          f"slots={args.slots} requests={args.requests} "
+          f"tiers 1/default({k_max}) interleaved, overlapped")
+    tm = best.tier_metrics()
+    ppt = {}                               # active pairs per token, by tier
+    for k in sorted(tm):
+        m = tm[k]
+        ppt[k] = m["pairs"] / max(m["tokens"], 1)
+        print(f"    tier k={k}: {m['requests']:2d} req, "
+              f"{m['tokens']:4d} tok ({m['tokens'] / best.wall_s:7.1f} "
+              f"tok/s), {ppt[k]:.2f} pairs/tok, TTFT p50/p95 "
+              f"{m['ttft_p50_s'] * 1e3:6.1f}/{m['ttft_p95_s'] * 1e3:6.1f} "
+              f"ms, TPOT p50/p95 {m['tpot_p50_s'] * 1e3:6.1f}/"
+              f"{m['tpot_p95_s'] * 1e3:6.1f} ms")
+    print(f"    run: goodput {best.goodput:7.1f} tok/s, util "
+          f"{best.compute_utilization * 100:.0f}% tokens / "
+          f"{best.active_pair_utilization * 100:.0f}% pairs, dropped "
+          f"{best.dropped_pairs}")
+    results["slo_mix"] = {
+        "mixed": _metrics(best),
+        "tiers": {str(k): dict(tm[k],
+                               goodput_tok_s=round(
+                                   tm[k]["tokens"] / best.wall_s, 2),
+                               pairs_per_token=round(ppt[k], 3))
+                  for k in tm},
+        "active_pair_utilization": round(best.active_pair_utilization, 4),
+    }
+
+    done = all(r.done for r in best.requests)
+    both = set(tm) == {1, k_max}
+    cheaper = both and ppt[1] < ppt[k_max]
+    pair_util = best.active_pair_utilization < best.compute_utilization
+    no_drops = best.dropped_pairs == 0
+    ok = done and cheaper and pair_util and no_drops
+    print(f"RESULT: tier 1 {'is' if cheaper else 'is NOT'} strictly "
+          f"cheaper in active pairs "
+          f"({ppt.get(1, 0):.2f} vs {ppt.get(k_max, 0):.2f} pairs/tok "
+          f"co-batched), pair util "
+          f"{'<' if pair_util else 'NOT <'} token util, drops "
+          f"{'none' if no_drops else 'REPORTED'} — "
+          f"{'PASS' if ok else 'FAIL'}")
+    if ok:
+        return 0
+    return 0 if args.no_gate else 1
+
+
 def bench_paged(args, results: dict) -> int:
     """Contiguous lanes vs the paged block pool at EQUAL cache memory on
     a mixed long/short mix: the contiguous engine binds every request to
@@ -413,6 +516,7 @@ def main(argv=None):
                          "per-micro-batch backend split is exercised")
     ap.add_argument("--skip-goodput", action="store_true")
     ap.add_argument("--skip-hol", action="store_true")
+    ap.add_argument("--skip-slo-mix", action="store_true")
     ap.add_argument("--skip-paged", action="store_true")
     ap.add_argument("--no-gate", action="store_true",
                     help="report only; don't exit nonzero when a gate "
@@ -438,6 +542,8 @@ def main(argv=None):
         rc |= bench_goodput(args, results)
     if not args.skip_hol:
         rc |= bench_hol(args, results)
+    if not args.skip_slo_mix:
+        rc |= bench_slo_mix(args, results)
     if not args.skip_paged:
         rc |= bench_paged(args, results)
     if args.out:

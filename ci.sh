@@ -54,6 +54,16 @@ if [[ "${1:-}" != "--fast" ]]; then
     python -m repro.launch.serve --smoke --continuous --batch 4 \
         --requests 8 --rate 0.5 --prompt-len 32 --gen 8 \
         --max-prefill-tokens 16 --paged --block-size 8 --overlap --parity
+    echo "== smoke: activation-tier mix parity (tier 1 + default co-batched) =="
+    # tier gate: half the requests run at tier 1 (one routed expert per
+    # token), half at the config default; per-row k is routing data, so
+    # both tiers share every fused step (overlapped engine). --parity
+    # replays the SAME tiered request set sequentially and gates token
+    # identity plus zero dropped pairs — per-token streams must be
+    # invariant to co-batched neighbors running a different tier
+    python -m repro.launch.serve --smoke --continuous --batch 4 \
+        --requests 8 --rate 0.5 --prompt-len 32 --gen 8 \
+        --max-prefill-tokens 16 --tier 1,default --parity
     echo "== smoke: paged kernel parity (Pallas interpret == XLA) =="
     # kernel-correctness gate: the paged run with --use-kernel routes
     # decode attention through the Pallas paged-attention kernel and

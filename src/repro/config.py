@@ -67,7 +67,16 @@ class VisionConfig:
 @dataclass(frozen=True)
 class CMoEConfig:
     """The paper's conversion configuration. SxAyEz notation:
-    num_shared shared + top_k active routed out of num_experts total."""
+    num_shared shared + top_k active routed out of num_experts total.
+
+    ``top_k`` (and so the ``S{s}A{k}E{e}`` tag) names the DEFAULT
+    activation tier, not a structural bound on the weights: one
+    converted weight set serves any effective routed k in [1, top_k],
+    because per-request k is routing DATA threaded through the stack
+    (``serving.request.Request.tier`` -> ``Model.step(row_k=...)`` ->
+    ``core.router.cmoe_gate(k_row=...)``). A request without a tier runs
+    at top_k — what this config, the sparsity property, and the tag all
+    describe."""
     num_experts: int = 8             # total experts N (shared + routed)
     num_shared: int = 3              # N_s
     top_k: int = 3                   # N_k active routed
@@ -89,6 +98,9 @@ class CMoEConfig:
         return 1.0 - (self.num_shared + self.top_k) / self.num_experts
 
     def tag(self) -> str:
+        """Names the DEFAULT tier: A{top_k} is what tier-less requests
+        run at; per-request tiers pick any k in [1, top_k] from the same
+        weights."""
         return f"S{self.num_shared}A{self.top_k}E{self.num_experts}"
 
 

@@ -34,6 +34,23 @@ from repro.models.model import Model, build_model
 Array = jax.Array
 
 
+def _fold_shared(cm: CMoEConfig,
+                 effective_k: Optional[int] = None) -> CMoEConfig:
+    """Baseline configs fold CMoE's always-on shared experts into routed
+    k (no shared experts, k = num_shared + top_k) so both sides activate
+    the same expert count. The fold is pinned to ONE activation tier:
+    config top_k names only the DEFAULT tier (per-request k is routing
+    data — see serving.request.Request.tier), so a baseline compared
+    against a tiered CMoE run must re-fold at that tier's k via
+    `effective_k`; the default fold silently assuming it would misstate
+    the baseline's active set."""
+    k = cm.top_k if effective_k is None else int(effective_k)
+    if not 1 <= k <= cm.top_k:
+        raise ValueError(f"effective_k {k} outside [1, {cm.top_k}] "
+                         f"(K_max = config top_k, the default tier)")
+    return dataclasses.replace(cm, num_shared=0, top_k=cm.num_shared + k)
+
+
 # ----------------------------------------------------------- partitions
 
 def _as_partition(shared_idx: np.ndarray, routed_idx: np.ndarray,
@@ -99,7 +116,8 @@ def ridge_router_fit(x_calib: Array, h: Array, part: PartitionResult,
 
 def convert_with_partition(model: Model, params: dict, calib_batch: dict,
                            cm: CMoEConfig, method: str,
-                           router: str = "ridge"):
+                           router: str = "ridge",
+                           effective_k: Optional[int] = None):
     """Full-model conversion using a baseline partition/router.
 
     method: moefication | uniform | random — each activates
@@ -108,13 +126,14 @@ def convert_with_partition(model: Model, params: dict, calib_batch: dict,
     router: "ridge" (calibration-fit linear — a STRONG learned baseline) or
     "random" (random-init linear, the paper's split-only training-free
     regime: LLaMA-MoE-v2 before its fine-tune).
+    effective_k: activation tier to compare at (default: the config
+    top_k — the default tier); the shared-expert fold uses it.
     """
     from repro.core.convert import ConversionReport
     import time
     cfg = model.cfg
     # no shared experts; same number of ACTIVE experts for fair sparsity
-    cm_b = dataclasses.replace(cm, num_shared=0,
-                               top_k=cm.num_shared + cm.top_k)
+    cm_b = _fold_shared(cm, effective_k)
     t0 = time.perf_counter()
     taps = jax.device_get(model.ffn_inputs(params, calib_batch))
     l, b, s, d = taps.shape
@@ -156,15 +175,17 @@ def convert_with_partition(model: Model, params: dict, calib_batch: dict,
 
 
 def hybrid_router_swap(model: Model, params: dict, calib_batch: dict,
-                       cm: CMoEConfig, method: str):
+                       cm: CMoEConfig, method: str,
+                       effective_k: Optional[int] = None):
     """Table-5 middle rows: baseline clustering + OUR analytical router.
-    Uses the representative-neuron router on the baseline's clusters."""
+    Uses the representative-neuron router on the baseline's clusters.
+    effective_k pins the shared-expert fold to an activation tier
+    (default: the config top_k, i.e. the default tier)."""
     from repro.core.convert import ConversionReport
     from repro.core.clustering import representative_neurons, ClusterResult
     import time
     cfg = model.cfg
-    cm_b = dataclasses.replace(cm, num_shared=0,
-                               top_k=cm.num_shared + cm.top_k)
+    cm_b = _fold_shared(cm, effective_k)
     t0 = time.perf_counter()
     taps = jax.device_get(model.ffn_inputs(params, calib_batch))
     l, b, s, d = taps.shape

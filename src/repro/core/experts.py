@@ -444,18 +444,26 @@ def _gather(xf, weights, gates, idx, activation, valid, *,
         y = kops.moe_gather(xf, flat, weights["wg"], weights["wu"],
                             weights["wd"], top_k=k, activation=activation)
     else:
+        # invalidated assignments (per-token activation tiers / padding)
+        # carry the sentinel id E: jnp.take's OOB default FILLS (NaN for
+        # floats), and 0 * NaN would poison the gate-zeroed combine — so
+        # clamp them onto a live slab and let the zeroed gate erase the
+        # contribution exactly (the kernel branch above instead keeps the
+        # sentinel and skips the dead slab's DMA + FLOPs outright)
+        n_e = weights["wd"].shape[0]
+        flat_c = jnp.minimum(flat, n_e - 1)
         xr = jnp.repeat(xf, k, axis=0)                        # (T*k, d)
-        wd = jnp.take(weights["wd"], flat, axis=0)            # (T*k, m, d)
+        wd = jnp.take(weights["wd"], flat_c, axis=0)          # (T*k, m, d)
         if _is_glu(weights):
-            wg = jnp.take(weights["wg"], flat, axis=0)        # (T*k, d, m)
-            wu = jnp.take(weights["wu"], flat, axis=0)
+            wg = jnp.take(weights["wg"], flat_c, axis=0)      # (T*k, d, m)
+            wu = jnp.take(weights["wu"], flat_c, axis=0)
             g = jnp.einsum("bd,bdm->bm", xr, wg.astype(xf.dtype),
                            preferred_element_type=jnp.float32)
             u = jnp.einsum("bd,bdm->bm", xr, wu.astype(xf.dtype),
                            preferred_element_type=jnp.float32)
             h = (act(g) * u).astype(xf.dtype)
         else:
-            wi = jnp.take(weights["wi"], flat, axis=0)
+            wi = jnp.take(weights["wi"], flat_c, axis=0)
             g = jnp.einsum("bd,bdm->bm", xr, wi.astype(xf.dtype),
                            preferred_element_type=jnp.float32)
             h = act(g).astype(xf.dtype)
@@ -566,7 +574,8 @@ def _reset_measured_crossover():
 
 def select_backend(t: int, cfg, phase: str, *, use_kernel: bool = False,
                    num_experts: Optional[int] = None,
-                   top_k: Optional[int] = None) -> str:
+                   top_k: Optional[int] = None,
+                   effective_k: Optional[float] = None) -> str:
     """Backend policy: decode (and prefills under the gather break-even)
     -> ``gather``; larger prefill -> grouped, Pallas only when a kernel
     path is requested (``moe_gmm_ragged`` has no VJP, so autodiff must
@@ -593,7 +602,17 @@ def select_backend(t: int, cfg, phase: str, *, use_kernel: bool = False,
     skips decode's unconditional gather and applies the width threshold
     to the true fused width — R is static per compiled shape, so a
     chunk-heavy step runs grouped while a decode-only step stays on
-    gather."""
+    gather.
+
+    ``effective_k`` is the PER-ROW k story ("k as data"): under
+    activation tiers top_k is only the static K_max — a micro-batch's
+    mean effective k can sit well below it, and gather's weight traffic
+    is t * k̄ slabs, not t * K_max. When given, the ~E/k heuristic uses
+    it directly, and a measured crossover (keyed on the static
+    (num_experts, top_k=K_max) bank shape it was benched at) has its
+    gather-wins-up-to count rescaled by top_k / k̄ — the break-even
+    t·k ≈ const is linear in 1/k, so a half-activation co-batch keeps
+    gather to twice the measured width."""
     if num_experts is None or top_k is None:
         spec = getattr(cfg, "cmoe", None) or getattr(cfg, "moe", None)
         if spec is not None:
@@ -603,12 +622,15 @@ def select_backend(t: int, cfg, phase: str, *, use_kernel: bool = False,
     threshold = GATHER_TOKEN_THRESHOLD
     measured = False
     if num_experts and top_k:
-        threshold = max(threshold, num_experts // max(top_k, 1))
+        k_eff = max(float(effective_k), 1.0) if effective_k else \
+            float(top_k)
+        threshold = max(threshold, int(num_experts / max(k_eff, 1.0)))
         cx = _measured_crossover()
         if cx is not None and cx.get("num_experts") == num_experts \
                 and cx.get("top_k") == top_k:
             threshold = max(GATHER_TOKEN_THRESHOLD,
-                            int(cx["gather_max_tokens"]))
+                            int(int(cx["gather_max_tokens"]) *
+                                top_k / k_eff))
             measured = True
     if phase == "decode" and not measured:
         return "gather"
@@ -619,7 +641,9 @@ def select_backend(t: int, cfg, phase: str, *, use_kernel: bool = False,
 
 def microbatch_backend(cfg, num_tokens: int, phase: str, *,
                        use_kernel: bool = False,
-                       override: Optional[str] = None) -> Optional[str]:
+                       override: Optional[str] = None,
+                       effective_k: Optional[float] = None
+                       ) -> Optional[str]:
     """The backend ``routed_experts`` will run for a (phase, num_tokens)
     micro-batch of this model — the serving engine's reporting seam, so
     what the step executor logs per micro-batch is the same policy the
@@ -636,6 +660,13 @@ def microbatch_backend(cfg, num_tokens: int, phase: str, *,
     shard_map-local EP layouts pick per-shard (multi-device serving is a
     ROADMAP item); this reports the single-device global paths the
     serving engine runs.
+
+    ``effective_k`` (mean per-row k of the micro-batch, from request
+    activation tiers) rescales the gather/grouped break-even — see
+    ``select_backend``. The engine passes the policy's choice back INTO
+    the jitted step as a static override, so the executed backend and
+    this report agree by construction even when the choice depends on
+    per-row k (which trace-time auto-selection could never see).
     """
     cm = getattr(cfg, "cmoe", None)
     moe = getattr(cfg, "moe", None)
@@ -649,9 +680,11 @@ def microbatch_backend(cfg, num_tokens: int, phase: str, *,
         p_total = round_up(num_tokens * moe.top_k +
                            e * (RAGGED_BLOCK_XLA - 1), RAGGED_BLOCK_XLA)
         be = select_backend(p_total, cfg, phase, use_kernel=use_kernel,
-                            num_experts=e * cm.num_routed, top_k=cm.top_k)
+                            num_experts=e * cm.num_routed, top_k=cm.top_k,
+                            effective_k=effective_k)
     else:
-        be = select_backend(num_tokens, cfg, phase, use_kernel=use_kernel)
+        be = select_backend(num_tokens, cfg, phase, use_kernel=use_kernel,
+                            effective_k=effective_k)
     if be == "grouped_pallas" and cfg.activation not in ("swiglu", "geglu"):
         be = "grouped_xla"           # mirrors the auto fallback below
     return be

@@ -113,7 +113,8 @@ def convert_moe_model(model: Model, params: dict, calib_batch: dict,
 def hierarchical_moe_ffn(x: Array, p: dict, cfg, *, use_kernel: bool = False,
                          backend: str | None = None,
                          phase: str = "prefill",
-                         valid: Array | None = None):
+                         valid: Array | None = None,
+                         k_row: Array | None = None):
     """Two-level MoE forward on a converted block. x: (B, S, d).
 
     The outer stage is RAGGED: the T*k (token, expert) assignments are
@@ -127,7 +128,12 @@ def hierarchical_moe_ffn(x: Array, p: dict, cfg, *, use_kernel: bool = False,
 
     valid: optional (B*S, 1) bool — False rows (padded serving prompts)
     are dropped at the layout scatter, so they cannot displace real
-    tokens or leak into the load stats."""
+    tokens or leak into the load stats.
+    k_row: optional (B*S,) int32 per-token effective SUB-level k in
+    [1, cm.top_k] (activation tiers; cm.top_k is the static K_max). Each
+    token's k rides the outer layout permutation to its P-rows, where
+    sub-assignments past it are invalidated like padding: gate zeroed,
+    flat sub-expert id re-aimed out of range (e * N_r')."""
     moe = cfg.moe
     cm = cfg.cmoe
     b, s, d = x.shape
@@ -193,6 +199,20 @@ def hierarchical_moe_ffn(x: Array, p: dict, cfg, *, use_kernel: bool = False,
     # (ragged — no sub-level pair can drop either); decode forwards the
     # phase so small row counts take the cheaper gather path
     flat_sub = owner_row[:, None] * n_r + sub_idx
+    if k_row is not None:
+        # per-token effective k, carried through the outer permutation:
+        # assignment i of the T*k flat outer pairs serves token i // k,
+        # so its layout row inherits that token's k (unoccupied rows get
+        # 0 — already dead via `occ`). Note the re-aim target is the
+        # FLATTENED bank's out-of-range id e*N_r', never owner*N_r'+N_r'
+        # (which would alias the next expert's sub-expert 0).
+        tok_k = jnp.repeat(jnp.asarray(k_row, jnp.int32).reshape(-1), k)
+        k_rows = jnp.zeros((p_total,), jnp.int32).at[slot].set(
+            tok_k, mode="drop")                              # (P,)
+        sub_live = (jnp.arange(cm.top_k, dtype=jnp.int32)[None, :] <
+                    k_rows[:, None])                         # (P, k')
+        flat_sub = jnp.where(sub_live, flat_sub, e * n_r)
+        sub_gates = sub_gates * sub_live.astype(sub_gates.dtype)
     y_routed, _ = routed_experts(
         xp,
         {"wg": cp["routed"]["wg"].reshape(e * n_r, d, -1),

@@ -48,12 +48,17 @@ def _shared_ffn(xf: Array, p: dict, activation: str) -> Array:
 def cmoe_ffn(x: Array, p: dict, cfg, *, use_kernel: bool = False,
              capacity_factor: float = 1.25,
              backend: str | None = None, phase: str = "prefill",
-             valid: Array | None = None):
+             valid: Array | None = None,
+             k_row: Array | None = None):
     """x: (B, S, d) or (T, d). Returns (out, aux{load, router_probs_mean}).
 
     valid: optional (T, 1) bool — False rows (right-padded serving
     prompts) contribute nothing: they neither occupy grouped-backend
     expert capacity nor count toward the load stats.
+    k_row: optional (T,) int32 per-token effective k in [1, cm.top_k]
+    (request activation tiers — cm.top_k is only the static K_max);
+    assignments past each token's k are invalidated by the gate exactly
+    like padding, so every backend runs unchanged.
     """
     cm = cfg.cmoe
     squeeze = x.ndim == 2
@@ -68,7 +73,7 @@ def cmoe_ffn(x: Array, p: dict, cfg, *, use_kernel: bool = False,
     gates, idx, probs = cmoe_gate(
         scores, cm.top_k,
         u=p.get("u") if cm.learnable_scaling else None,
-        bias=p.get("bias"))
+        bias=p.get("bias"), k_row=k_row)
 
     out, keep = routed_experts(xf, p["routed"], gates, idx, cfg,
                                backend=backend, phase=phase,
@@ -91,7 +96,8 @@ def cmoe_ffn_local(x: Array, p: dict, cfg, mesh, *,
                    use_kernel: bool = False,
                    backend: str | None = None,
                    phase: str = "prefill",
-                   valid: Array | None = None):
+                   valid: Array | None = None,
+                   k_row: Array | None = None):
     """Beyond-paper optimization (§Perf): shard_map DATA-LOCAL dispatch.
 
     The naive GSPMD lowering of the token->expert scatter materializes the
@@ -109,6 +115,8 @@ def cmoe_ffn_local(x: Array, p: dict, cfg, mesh, *,
         1.5x the dense FFN's own TP traffic (gather x + scatter y).
 
     x: (B, S, d). Requires B % dp == 0 (caller falls back otherwise).
+    k_row: optional (B, S) int32 per-token effective k — sharded like
+    `valid` and threaded to the gate inside each shard's local dispatch.
     """
     from repro.compat import shard_map
     from repro.distributed.policy import _dp  # local import, no cycle
@@ -123,6 +131,11 @@ def cmoe_ffn_local(x: Array, p: dict, cfg, mesh, *,
     v_spec = P(dp, "model" if seq_sharded else None)
     if valid is None:
         valid = jnp.ones((b, s), bool)
+    has_k = k_row is not None
+    if k_row is None:
+        k_row = jnp.full((b, s), cm.top_k, jnp.int32)
+    else:
+        k_row = jnp.broadcast_to(jnp.asarray(k_row, jnp.int32), (b, s))
     routed_specs = {k: P(None, "data", "model") if k != "wd"
                     else P(None, "model", "data")
                     for k in p["routed"]}
@@ -132,7 +145,7 @@ def cmoe_ffn_local(x: Array, p: dict, cfg, mesh, *,
     p_specs = {"shared": shared_specs, "routed": routed_specs,
                "router": router_specs, "u": P(None), "bias": P(None)}
 
-    def local_ffn(x_loc, p_loc, v_loc):
+    def local_ffn(x_loc, p_loc, v_loc, k_loc):
         # ZeRO-style param regather (FSDP over data)
         routed = {k: jax.lax.all_gather(v, "data", axis=1, tiled=True)
                   if k != "wd" else
@@ -147,8 +160,9 @@ def cmoe_ffn_local(x: Array, p: dict, cfg, mesh, *,
         if seq_sharded:
             xg = jax.lax.all_gather(x_loc, "model", axis=1, tiled=True)
             vg = jax.lax.all_gather(v_loc, "model", axis=1, tiled=True)
+            kg = jax.lax.all_gather(k_loc, "model", axis=1, tiled=True)
         else:
-            xg, vg = x_loc, v_loc
+            xg, vg, kg = x_loc, v_loc, k_loc
         bl, sl, _ = xg.shape
         xf = xg.reshape(bl * sl, d)
         vf = vg.reshape(bl * sl, 1)
@@ -157,7 +171,8 @@ def cmoe_ffn_local(x: Array, p: dict, cfg, mesh, *,
         gates, idx, probs = cmoe_gate(
             scores, cm.top_k,
             u=p_loc.get("u") if cm.learnable_scaling else None,
-            bias=p_loc.get("bias"))
+            bias=p_loc.get("bias"),
+            k_row=kg.reshape(bl * sl) if has_k else None)
         y, keep = routed_experts(xf, routed, gates, idx, cfg,
                                  backend=backend, phase=phase,
                                  capacity_factor=capacity_factor,
@@ -185,8 +200,8 @@ def cmoe_ffn_local(x: Array, p: dict, cfg, mesh, *,
     out_specs = (x_spec, P(None), P(None), P(None))
     y, load, pm, dropped = shard_map(
         local_ffn, mesh=mesh,
-        in_specs=(x_spec, p_specs, v_spec), out_specs=out_specs)(
+        in_specs=(x_spec, p_specs, v_spec, v_spec), out_specs=out_specs)(
             x, {k: p[k] for k in
                 ("shared", "routed", "router", "u", "bias")
-                if k in p}, valid)
+                if k in p}, valid, k_row)
     return y, {"load": load, "router_probs_mean": pm, "dropped": dropped}

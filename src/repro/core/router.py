@@ -30,12 +30,23 @@ def router_scores(x: Array, router_p: dict, activation: str) -> Array:
 
 def cmoe_gate(scores: Array, top_k: int, *,
               u: Array | None = None,
-              bias: Array | None = None):
-    """Top-N_k gating (Eq. 9).
+              bias: Array | None = None,
+              k_row: Array | None = None):
+    """Top-N_k gating (Eq. 9) with per-token effective k ("k as data").
 
     scores: (T, N_r) raw router scores. Returns (gates (T,k), idx (T,k),
     probs (T,N_r)). Training-free: u=0 -> gates are exactly 1.
     The balance bias shifts SELECTION only, never the gate value.
+
+    k_row: optional (T,) int32 per-token effective k in [1, top_k]. top_k
+    is the static K_max — shapes never change with the tier. Assignment
+    columns j >= k_row[t] are invalidated exactly like padding: their id
+    is re-aimed at the out-of-range expert N_r (the ragged layout gives
+    such assignments slot P and the mode="drop" scatter discards them;
+    the gather paths' clamped reads are zeroed by the gate) and their
+    gate is zeroed, so every downstream backend absorbs variable k with
+    no dispatch changes. A uniform k_row == top_k is value-identical to
+    k_row=None (the where/multiply are no-ops).
     """
     probs = jax.nn.softmax(scores, axis=-1)                     # s'
     sel = probs if bias is None else probs + bias[None, :]
@@ -46,6 +57,12 @@ def cmoe_gate(scores: Array, top_k: int, *,
     else:
         gates = 1.0 + p_sel * jnp.take_along_axis(
             jnp.broadcast_to(u[None, :], probs.shape), idx, axis=1)
+    if k_row is not None:
+        n_r = scores.shape[-1]
+        live = (jnp.arange(top_k, dtype=jnp.int32)[None, :] <
+                jnp.asarray(k_row, jnp.int32)[:, None])        # (T, k)
+        idx = jnp.where(live, idx, n_r)
+        gates = gates * live.astype(gates.dtype)
     return gates, idx, probs
 
 
@@ -58,7 +75,10 @@ def update_balance_bias(bias: Array, load: Array, gamma: float) -> Array:
 
 
 def expert_load(idx: Array, keep: Array, num_experts: int) -> Array:
-    """Utilization fraction per expert from selected indices (T, k)."""
+    """Utilization fraction per expert from selected indices (T, k).
+    Invalidated assignments (per-token k / padding) carry the
+    out-of-range id ``num_experts`` and are dropped by the scatter, so
+    they never count toward load."""
     counts = jnp.zeros((num_experts,), jnp.float32).at[idx.reshape(-1)].add(
-        keep.reshape(-1).astype(jnp.float32))
+        keep.reshape(-1).astype(jnp.float32), mode="drop")
     return counts / jnp.maximum(counts.sum(), 1.0)

@@ -31,22 +31,30 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(eidx_ref, x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref, *,
-            activation: str):
+            activation: str, num_experts: int):
+    i = pl.program_id(0)
     k = pl.program_id(1)
 
     @pl.when(k == 0)
     def _():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    x = x_ref[...]                                   # (1, d)
-    g = jnp.dot(x, wg_ref[0], preferred_element_type=jnp.float32)
-    u = jnp.dot(x, wu_ref[0], preferred_element_type=jnp.float32)
-    if activation == "swiglu":
-        h = g * jax.nn.sigmoid(g) * u
-    else:
-        h = jax.nn.gelu(g) * u
-    acc_ref[...] += jnp.dot(h.astype(x.dtype), wd_ref[0],
-                            preferred_element_type=jnp.float32)
+    # invalidated assignments (per-token k / padding) carry the sentinel
+    # id E: their index_maps aim at slab 0 (dead runs coalesce to at most
+    # one redundant fetch — consecutive identical block indices are not
+    # re-DMA'd) and the FLOPs are skipped entirely; the output row stays
+    # the zeroed accumulator, matching the zeroed gate downstream
+    @pl.when(eidx_ref[i] < num_experts)
+    def _():
+        x = x_ref[...]                               # (1, d)
+        g = jnp.dot(x, wg_ref[0], preferred_element_type=jnp.float32)
+        u = jnp.dot(x, wu_ref[0], preferred_element_type=jnp.float32)
+        if activation == "swiglu":
+            h = g * jax.nn.sigmoid(g) * u
+        else:
+            h = jax.nn.gelu(g) * u
+        acc_ref[...] += jnp.dot(h.astype(x.dtype), wd_ref[0],
+                                preferred_element_type=jnp.float32)
 
     @pl.when(k == pl.num_programs(1) - 1)
     def _():
@@ -57,29 +65,40 @@ def moe_gather(xf: jax.Array, eidx: jax.Array, wg: jax.Array, wu: jax.Array,
                wd: jax.Array, *, top_k: int, activation: str = "swiglu",
                block_m: int = 128, interpret: bool = True) -> jax.Array:
     """xf: (T, d) token activations; eidx: (T*k,) int32 flat expert id per
-    assignment (row i serves token i // top_k), already clamped to
-    [0, E); wg/wu: (E, d, m); wd: (E, m, d) -> (T*k, d) per-assignment
-    expert outputs (pre gate-weight combine). Caller pads m to a block_m
-    multiple."""
+    assignment (row i serves token i // top_k), in [0, E] where the
+    SENTINEL id E marks an invalidated assignment (a token routing fewer
+    than K_max experts under per-row activation tiers, or padding):
+    sentinel rows DMA no live weight slab (their index_maps collapse to
+    slab 0, coalescing consecutive dead fetches), run no FLOPs, and
+    output a zero row. wg/wu: (E, d, m); wd: (E, m, d) -> (T*k, d)
+    per-assignment expert outputs (pre gate-weight combine). Caller pads
+    m to a block_m multiple."""
     t, d = xf.shape
+    n_e = wg.shape[0]
     m = wg.shape[2]
     assert m % block_m == 0, (m, block_m)
     n = eidx.shape[0]
     assert n == t * top_k, (n, t, top_k)
+
+    def slab(e, i):
+        # sentinel-safe slab index: dead rows all aim at slab 0, so a run
+        # of them re-uses one resident block instead of E-1's slab
+        return jnp.where(e[i] < n_e, e[i], 0)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(n, m // block_m),
         in_specs=[
             pl.BlockSpec((1, d), lambda i, k, e: (i // top_k, 0)),
-            pl.BlockSpec((1, d, block_m), lambda i, k, e: (e[i], 0, k)),
-            pl.BlockSpec((1, d, block_m), lambda i, k, e: (e[i], 0, k)),
-            pl.BlockSpec((1, block_m, d), lambda i, k, e: (e[i], k, 0)),
+            pl.BlockSpec((1, d, block_m), lambda i, k, e: (slab(e, i), 0, k)),
+            pl.BlockSpec((1, d, block_m), lambda i, k, e: (slab(e, i), 0, k)),
+            pl.BlockSpec((1, block_m, d), lambda i, k, e: (slab(e, i), k, 0)),
         ],
         out_specs=pl.BlockSpec((1, d), lambda i, k, e: (i, 0)),
         scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
     )
     return pl.pallas_call(
-        functools.partial(_kernel, activation=activation),
+        functools.partial(_kernel, activation=activation, num_experts=n_e),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n, d), xf.dtype),
         interpret=interpret,

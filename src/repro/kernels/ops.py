@@ -220,14 +220,18 @@ def moe_gather(xf: Array, eidx: Array, wg: Array, wu: Array, wd: Array, *,
                top_k: int, activation: str = "swiglu",
                block_m: int = 128) -> Array:
     """Per-assignment gather expert FFN rows without gathered weight
-    copies. xf: (T, d); eidx: (T*k,) flat expert ids (clamped here — the
-    XLA path's ``jnp.take`` clips identically); wg/wu: (E, d, m); wd:
-    (E, m, d) -> (T*k, d) rows, pre gate-combine. glu banks only."""
+    copies. xf: (T, d); eidx: (T*k,) flat expert ids in [0, E] — the
+    out-of-range SENTINEL id E (per-row activation tiers / padding
+    invalidation) is PRESERVED here, so the kernel can skip the dead
+    assignment's weight-slab DMAs and FLOPs and zero its output row
+    (where the XLA path's ``jnp.take`` clips and relies on the zeroed
+    gate alone); wg/wu: (E, d, m); wd: (E, m, d) -> (T*k, d) rows, pre
+    gate-combine. glu banks only."""
     block_m = _shrink_block(block_m, wg.shape[2])
     wg_p, _ = _pad_to(wg, 2, block_m)
     wu_p, _ = _pad_to(wu, 2, block_m)
     wd_p, _ = _pad_to(wd, 1, block_m)
-    eidx = jnp.clip(eidx.astype(jnp.int32), 0, wg.shape[0] - 1)
+    eidx = jnp.clip(eidx.astype(jnp.int32), 0, wg.shape[0])
     return _moe_gather(xf, eidx, wg_p, wu_p, wd_p, top_k=top_k,
                        activation=activation, block_m=block_m,
                        interpret=_interpret())

@@ -13,7 +13,11 @@ prefill cannot stall decode lanes (head-of-line fix). `--paged` swaps
 the contiguous slot lanes for the block-pool KV cache (per-request
 block tables). `--parity` replays the same requests on the other axes
 (overlap off, and contiguous / unchunked) and asserts token-identical
-streams.
+streams. `--tier` assigns per-request activation tiers (effective routed
+top-k, cycled over a comma list; "default" = config top_k): k is routing
+DATA, so mixed tiers co-batch into the same compiled steps and the
+report grows per-tier TTFT/TPOT plus k-weighted (active-pair) compute
+utilization.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
         --cmoe S3A3E8 --batch 4 --prompt-len 32 --gen 16
@@ -66,14 +70,27 @@ def serve_continuous(model, params, args) -> int:
     run at the same settings — the overlap-invariance contract — then,
     with --paged, against a contiguous run (paging invariance), or with
     --max-prefill-tokens, against an unchunked run (width invariance);
-    every baseline runs overlap-off, so one gate spans both axes."""
+    every baseline runs overlap-off, so one gate spans both axes.
+    --tier cycles per-request activation tiers over the request set; the
+    parity replays reuse the SAME tiered requests, so each gate also
+    certifies mixed-tier co-batching on its axis."""
     cfg = model.cfg
     max_len = args.prompt_len + args.gen
+    tiers = None
+    if args.tier:
+        tiers = [None if t.strip().lower() == "default" else int(t)
+                 for t in args.tier.split(",")]
+        if cfg.cmoe is None:
+            raise SystemExit("--tier needs a CMoE-routed model (--cmoe): "
+                             "tiers are a routed-k knob")
+    k_max = cfg.cmoe.top_k if cfg.cmoe is not None else 1
+    tiered = bool(tiers) and any(t is not None and t != k_max
+                                 for t in tiers)
     lo_p = min(max(4, args.prompt_len // 2), args.prompt_len)
     reqs = make_requests(args.requests, cfg.vocab_size,
                          prompt_range=(lo_p, args.prompt_len),
                          gen_range=(max(1, args.gen // 2), args.gen),
-                         rate=args.rate, seed=args.seed)
+                         rate=args.rate, seed=args.seed, tiers=tiers)
     engine = ServingEngine(model, params, max_slots=args.batch,
                            max_len=max_len,
                            max_prefill_tokens=args.max_prefill_tokens,
@@ -84,6 +101,19 @@ def serve_continuous(model, params, args) -> int:
     report = engine.run(reqs)
     print(f"[continuous] {report.summary()}")
     assert all(r.done for r in report.requests), "unfinished requests"
+    if tiers:
+        for k, m in sorted(report.tier_metrics().items()):
+            print(f"[continuous] tier k={k}: {m['requests']} requests, "
+                  f"{m['tokens']} tokens ({m['pairs']} routed pairs), "
+                  f"TTFT p50/p95 {m['ttft_p50_s'] * 1e3:.1f}/"
+                  f"{m['ttft_p95_s'] * 1e3:.1f} ms, TPOT p50/p95 "
+                  f"{m['tpot_p50_s'] * 1e3:.1f}/"
+                  f"{m['tpot_p95_s'] * 1e3:.1f} ms")
+        print(f"[continuous] active-pair utilization "
+              f"{report.active_pair_utilization * 100:.0f}% vs token "
+              f"utilization {report.compute_utilization * 100:.0f}% "
+              f"(K_max={report.k_max}; the gap is compute the tier mix "
+              f"did not charge)")
     if args.max_prefill_tokens is not None and not args.overlap:
         n_chunks = len([1 for _, ph, *_ in engine.backend_log
                         if ph == "prefill"])
@@ -164,9 +194,16 @@ def serve_continuous(model, params, args) -> int:
             # grouped once chunk rows push R over the break-even)
             assert not prefill_b, f"fused mode dispatched prefill " \
                 f"micro-batches: {prefill_b}"
-            for _, _, padded, _, backend, _ in engine.backend_log:
+            for _, _, padded, live, backend, _, active in \
+                    engine.backend_log:
+                # under a tier mix the policy break-even shifts by the
+                # dispatch's mean live k — recompute with the SAME
+                # effective_k the engine handed the executor, so the
+                # assertion stays exact rather than approximate
+                eff = (active / max(live, 1)) if tiered else None
                 want = microbatch_backend(cfg, padded, "mixed",
-                                          use_kernel=model.use_kernel)
+                                          use_kernel=model.use_kernel,
+                                          effective_k=eff)
                 assert backend == want, \
                     f"fused width {padded} ran {backend}, policy {want}"
         else:
@@ -243,6 +280,16 @@ def main(argv=None):
                          "host readback lagging one step (default on; "
                          "--no-overlap runs the sequential two-dispatch "
                          "baseline)")
+    ap.add_argument("--tier", default=None,
+                    help="[--continuous] per-request activation tier(s): "
+                         "an int (uniform effective routed top-k) or a "
+                         "comma list cycled over requests, e.g. "
+                         "'1,default' — 'default' is the config top_k "
+                         "(K_max). Tiers are routing data, not shape: "
+                         "mixed tiers co-batch into the same fused steps, "
+                         "and the report adds per-tier TTFT/TPOT and "
+                         "active-pair (k-weighted) utilization. Needs "
+                         "--cmoe")
     ap.add_argument("--parity", action="store_true",
                     help="[--continuous] replay the request set on the "
                          "other axes — sequential under --overlap, "

@@ -59,6 +59,14 @@ class BlockCtx(NamedTuple):
     #   the causal mask (kv_pos <= cache_pos[r]) keeps same-step sibling
     #   rows exactly causal. The paged layout needs no analogue: its rows
     #   already address the shared pool through per-row block tables.
+    row_k: Optional[Array] = None         # (B,) int32: per-row effective
+    #   routed top-k (request activation TIERS — "k as data, not shape").
+    #   Every token of row b routes through row_k[b] experts; the config
+    #   top_k is only the static K_max bound. None = K_max everywhere
+    #   (the default tier — bitwise-identical to pre-tier behavior).
+    #   Threaded to the gate, which invalidates assignments past each
+    #   token's k via the same out-of-range-id mechanism padding uses;
+    #   attention ignores it.
 
 
 def _lecun(key, shape, dtype, fan_in=None):
@@ -125,6 +133,16 @@ def _token_valid_flat(x: Array, ctx: BlockCtx):
     return ctx.token_valid.reshape(-1, 1)
 
 
+def _row_k_flat(x: Array, ctx: BlockCtx):
+    """ctx.row_k (B,) -> (B*S,) per-token effective k matching x's token
+    flattening (every token of a row shares the row's tier)."""
+    if ctx.row_k is None:
+        return None
+    b, s = x.shape[0], x.shape[1]
+    rk = jnp.asarray(ctx.row_k, jnp.int32)
+    return jnp.broadcast_to(rk[:, None], (b, s)).reshape(-1)
+
+
 def _apply_ffn(x: Array, p: dict, cfg, ctx: BlockCtx):
     """Dense FFN or (if converted) the CMoE sparse FFN. Returns (y, aux)."""
     if cfg.cmoe is not None and "cmoe" in p:
@@ -135,15 +153,22 @@ def _apply_ffn(x: Array, p: dict, cfg, ctx: BlockCtx):
         valid = _token_valid_flat(x, ctx) if x.ndim == 3 else None
         mesh = local_dispatch_mesh(x.shape[0]) if x.ndim == 3 else None
         if mesh is not None:
+            k_bs = None
+            if ctx.row_k is not None:
+                k_bs = jnp.broadcast_to(
+                    jnp.asarray(ctx.row_k, jnp.int32)[:, None],
+                    (x.shape[0], x.shape[1]))
             return cmoe_ffn_local(x, p["cmoe"], cfg, mesh,
                                   capacity_factor=cap,
                                   use_kernel=ctx.use_kernel,
                                   backend=ctx.backend, phase=ctx.phase,
-                                  valid=ctx.token_valid)
+                                  valid=ctx.token_valid, k_row=k_bs)
         return cmoe_ffn(x, p["cmoe"], cfg, capacity_factor=cap,
                         use_kernel=ctx.use_kernel,
                         backend=ctx.backend, phase=ctx.phase,
-                        valid=valid)
+                        valid=valid,
+                        k_row=_row_k_flat(x, ctx) if x.ndim == 3 else
+                        ctx.row_k)
     if ctx.use_kernel and cfg.activation in ("swiglu", "geglu"):
         from repro.kernels import ops as kops
         y = kops.swiglu_ffn(x, p["ffn"]["wg"], p["ffn"]["wu"],
@@ -265,7 +290,8 @@ def moe_block(x: Array, p: dict, cfg, ctx: BlockCtx):
         y, aux = hierarchical_moe_ffn(ffn_in, p, cfg,
                                       use_kernel=ctx.use_kernel,
                                       backend=ctx.backend, phase=ctx.phase,
-                                      valid=_token_valid_flat(ffn_in, ctx))
+                                      valid=_token_valid_flat(ffn_in, ctx),
+                                      k_row=_row_k_flat(ffn_in, ctx))
     else:
         y, aux = _apply_moe(ffn_in, p, cfg, ctx)
     if ctx.capture:
@@ -296,7 +322,8 @@ def mla_moe_block(x: Array, p: dict, cfg, ctx: BlockCtx):
         y, aux = hierarchical_moe_ffn(ffn_in, p, cfg,
                                       use_kernel=ctx.use_kernel,
                                       backend=ctx.backend, phase=ctx.phase,
-                                      valid=_token_valid_flat(ffn_in, ctx))
+                                      valid=_token_valid_flat(ffn_in, ctx),
+                                      k_row=_row_k_flat(ffn_in, ctx))
     else:
         y, aux = _apply_moe(ffn_in, p, cfg, ctx)
     if ctx.capture:

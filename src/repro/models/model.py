@@ -151,7 +151,8 @@ class Model:
     def _stack(self, params, x: Array, *, caches=None, cache_pos=None,
                enc_out=None, remat: bool = False, capture: bool = False,
                phase: str = "prefill", token_valid=None,
-               block_tables=None, row_slots=None):
+               block_tables=None, row_slots=None, row_k=None,
+               backend=None):
         """Run the layer stack. Returns (x, new_caches, aux)."""
         cfg = self.cfg
         seq = x.shape[1]
@@ -167,9 +168,11 @@ class Model:
         base = BlockCtx(positions=positions, cache=None, cache_pos=cache_pos,
                         window=0, causal=True, use_rope=True,
                         use_kernel=self.use_kernel, capture=capture,
-                        phase=phase, backend=self.backend,
+                        phase=phase,
+                        backend=backend if backend is not None
+                        else self.backend,
                         token_valid=token_valid, block_table=block_tables,
-                        row_slots=row_slots)
+                        row_slots=row_slots, row_k=row_k)
         _, block_fn = B.BLOCKS[self.kind]
         moe_every = cfg.moe.moe_every if cfg.moe is not None else 1
 
@@ -415,7 +418,9 @@ class Model:
              extras: Optional[dict] = None,
              return_stats: bool = False,
              block_tables: Optional[Array] = None,
-             row_slots: Optional[Array] = None):
+             row_slots: Optional[Array] = None,
+             row_k: Optional[Array] = None,
+             backend: Optional[str] = None):
         """Unified slot-aware step — the serving engine's one entry point.
 
         Runs `tokens` (B, S) against `cache`, writing K/V at per-slot
@@ -457,6 +462,16 @@ class Model:
         so intra-step siblings compose exactly causally. The paged layout
         needs no row_slots: per-row block tables already address the
         shared pool.
+        `row_k` (B,) int32 is the per-row effective routed top-k
+        (request activation TIERS): every token of row b routes through
+        row_k[b] experts, with the config top_k as the static K_max — k
+        is DATA, so mixed-tier rows co-batch in one compiled step. None
+        (the default tier everywhere) is bitwise-identical to the
+        pre-tier path. `backend` statically overrides the routed-expert
+        backend for this call (the serving executor passes its
+        per-row-k-aware policy choice here so the executed backend
+        matches the logged one); None keeps the model-level override /
+        auto selection.
 
         Returns (logits (B, V) at each row's last valid position,
         new_cache) — or, with ``return_stats=True``, (logits, new_cache,
@@ -489,7 +504,8 @@ class Model:
                                       cache_pos=slot_pos, phase=phase,
                                       token_valid=token_valid,
                                       block_tables=block_tables,
-                                      row_slots=row_slots)
+                                      row_slots=row_slots, row_k=row_k,
+                                      backend=backend)
         if lengths is None:
             xl = x[:, -1:]
         else:

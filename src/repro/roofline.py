@@ -300,14 +300,22 @@ def model_flops(cfg, shape, num_params: int) -> float:
     return mult * n * tokens
 
 
-def active_params(cfg, num_params: int) -> float:
-    """Per-token active parameter count (MoE / CMoE discount)."""
+def active_params(cfg, num_params: int,
+                  effective_k: float | None = None) -> float:
+    """Per-token active parameter count (MoE / CMoE discount).
+
+    `effective_k` overrides the CMoE routed top-k with a request's (or a
+    mix's mean) ACTIVATION TIER — config top_k only names the DEFAULT
+    tier, and per-request k is routing data, so the roofline of a tiered
+    operating point is the same model at a different activation
+    fraction. Bounded to [1, top_k]; None keeps the default."""
     if cfg.moe is None and cfg.cmoe is not None:
-        # CMoE-converted dense FFN: only (shared + top_k)/E of d_ff active
+        # CMoE-converted dense FFN: only (shared + k_eff)/E of d_ff active
         cm = cfg.cmoe
+        k_eff = float(cm.top_k) if effective_k is None else             min(max(float(effective_k), 1.0), float(cm.top_k))
         glu = 3 if cfg.activation in ("swiglu", "geglu") else 2
         ffn_total = cfg.num_layers * glu * cfg.d_model * cfg.d_ff
-        frac = (cm.num_shared + cm.top_k) / cm.num_experts
+        frac = (cm.num_shared + k_eff) / cm.num_experts
         return float(num_params - ffn_total * (1.0 - frac))
     if cfg.moe is None:
         return float(num_params)

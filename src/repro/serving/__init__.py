@@ -67,8 +67,24 @@ batch lane busy on mixed traffic. Three pieces, three contracts:
     dispatch-gap percentiles (under overlap, dispatch gaps measure host
     issue rate; completion gaps what a client observes),
     overlap_occupancy (fraction of dispatches issued while the previous
-    step was in flight), compute utilization (live/padded tokens), and
-    the per-micro-batch backend log.
+    step was in flight), compute utilization (live/padded tokens), the
+    k-weighted active-pair utilization, per-tier latency via
+    ``tier_metrics()``, and the per-micro-batch backend log.
+
+ACTIVATION TIERS (per-request effective routed top-k). CMoE's converted
+weights serve any routed k in [1, config top_k] — the ``S{s}A{k}E{e}``
+tag only names the DEFAULT tier — and the engine treats k as routing
+DATA, not shape: ``Request.tier`` becomes a per-row k vector threaded
+``Model.step(row_k=...)`` -> ``cmoe_gate(k_row=...)``, where
+assignments past a token's k are re-aimed at the out-of-range expert id
+(the invalidation mechanism padding already uses), so the sort-based
+ragged dispatch absorbs mixed tiers with zero layout changes. Mixed
+tiers therefore co-batch into the SAME fused steps (the scheduler is
+tier-oblivious), the backend break-even learns the dispatch's mean k,
+and the report splits TTFT/TPOT per tier plus an active-pair (k-
+weighted) utilization column where a k=1 row is visibly cheaper than a
+k=K_max row. An all-default run passes row_k=None end to end and traces
+the exact pre-tier graph — the uniform-tier parity gate is an identity.
 
 CLI usage (``repro.launch.serve`` is a thin shell over this package)::
 
@@ -76,6 +92,11 @@ CLI usage (``repro.launch.serve`` is a thin shell over this package)::
     # recycling, overlapped engine (--no-overlap for the sequential one)
     PYTHONPATH=src python -m repro.launch.serve --smoke --continuous \
         --batch 4 --requests 8 --rate 0.5 --gen 8
+
+    # mixed activation tiers (k=1 alongside the default tier) co-batched
+    # into the same fused steps, with per-tier TTFT/TPOT in the report
+    PYTHONPATH=src python -m repro.launch.serve --smoke --continuous \
+        --batch 4 --requests 8 --gen 8 --tier 1,default --parity
 
     # static-vs-continuous goodput on the same request mix
     PYTHONPATH=src python benchmarks/bench_serving.py --slots 4 \

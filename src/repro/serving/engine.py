@@ -137,6 +137,17 @@ class EngineReport:
     overlap_occupancy: float = 0.0  # dispatches issued while the previous
     #   step was still in flight / total dispatches — ~1.0 means the
     #   device never waited on host readback (0.0 in sequential mode)
+    active_pairs: int = 0           # k-weighted live work: sum over live
+    #   tokens of that row's effective routed top-k (its activation
+    #   TIER). Two tokens at k=1 and k=6 charge identical LIVE TOKENS but
+    #   6x different routed-expert compute — this column is the one that
+    #   sees the difference, which is what makes a low-activation tier
+    #   measurably cheaper inside the same co-batched run
+    padded_pairs: int = 0           # padded tokens x K_max — the routed
+    #   pairs the dispatches would charge if every row ran the default
+    #   tier; active/padded is k-aware compute utilization
+    k_max: int = 1                  # the DEFAULT tier: config top_k (what
+    #   Request.tier=None resolves to, and the bound tiers live under)
 
     @property
     def goodput(self) -> float:
@@ -169,8 +180,61 @@ class EngineReport:
     @property
     def compute_utilization(self) -> float:
         """Live tokens / padded tokens over every dispatched micro-batch
-        — how much of the charged compute backed real lanes."""
+        — how much of the charged compute backed real lanes. Token-
+        weighted: blind to activation tiers (a k=1 and a k=K_max token
+        count the same) — `active_pair_utilization` is the k-aware
+        column."""
         return self.live_tokens / max(self.padded_tokens, 1)
+
+    @property
+    def active_pair_utilization(self) -> float:
+        """Active routed (token, expert) pairs / padded pairs — compute
+        utilization weighted by each row's activation tier. Equals
+        compute_utilization x (mean live k / K_max): co-batching
+        low-activation tiers shows up here as headroom the token-weighted
+        column cannot see."""
+        return self.active_pairs / max(self.padded_pairs, 1)
+
+    def tier_metrics(self) -> dict:
+        """Per-tier latency/throughput table from the request snapshots:
+        {tier_k: {"requests", "tokens", "pairs", "ttft_p50_s",
+        "ttft_p95_s", "tpot_p50_s", "tpot_p95_s"}}. tier_k is the
+        RESOLVED effective routed top-k (Request.tier, with None -> the
+        default tier `k_max`); "pairs" is tokens x k — per-token routed
+        compute, so in a mixed run the low tier's pairs/token is strictly
+        below the default's by construction. Per-request TPOT is
+        (last_token_t - first_token_t) / (tokens - 1) — each request's
+        own mean inter-token latency, aggregated per tier (the global
+        tpot_p50_s percentiles mix tiers)."""
+        groups: dict[int, list[Request]] = {}
+        for r in self.requests:
+            k = r.tier if r.tier is not None else self.k_max
+            groups.setdefault(int(k), []).append(r)
+        out = {}
+        for k in sorted(groups):
+            reqs = groups[k]
+            ttft = [r.first_token_t - r.arrival_t for r in reqs
+                    if r.first_token_t >= 0 and r.arrival_t >= 0]
+            tpot = [(r.last_token_t - r.first_token_t) /
+                    (len(r.generated) - 1)
+                    for r in reqs
+                    if len(r.generated) > 1 and r.last_token_t
+                    > r.first_token_t >= 0]
+            tokens = sum(len(r.generated) for r in reqs)
+            out[k] = {
+                "requests": len(reqs),
+                "tokens": tokens,
+                "pairs": tokens * k,
+                "ttft_p50_s": float(np.percentile(ttft, 50)) if ttft
+                else 0.0,
+                "ttft_p95_s": float(np.percentile(ttft, 95)) if ttft
+                else 0.0,
+                "tpot_p50_s": float(np.percentile(tpot, 50)) if tpot
+                else 0.0,
+                "tpot_p95_s": float(np.percentile(tpot, 95)) if tpot
+                else 0.0,
+            }
+        return out
 
     def summary(self) -> str:
         bc = {ph: dict(c) for ph, c in self.backend_counts.items()}
@@ -188,8 +252,10 @@ class EngineReport:
                 f"{self.slot_reuse}, truncated {self.truncated}, pool "
                 f"deferrals {self.pool_deferrals}, live/padded tokens "
                 f"{self.live_tokens}/{self.padded_tokens} "
-                f"({self.compute_utilization * 100:.0f}%), dropped pairs "
-                f"{self.dropped_pairs}, backends {bc}")
+                f"({self.compute_utilization * 100:.0f}%), active/padded "
+                f"pairs {self.active_pairs}/{self.padded_pairs} "
+                f"({self.active_pair_utilization * 100:.0f}%), dropped "
+                f"pairs {self.dropped_pairs}, backends {bc}")
 
 
 @dataclasses.dataclass
@@ -220,6 +286,8 @@ class _InFlight:
     padded: int          # granule-rounded row count the dispatch charged
     live: int            # real rows
     backend: Optional[str]
+    active_pairs: int    # k-weighted live rows (sum of each real row's
+    #                      activation tier) — the 7th backend_log column
 
 
 class ServingEngine:
@@ -298,13 +366,16 @@ class ServingEngine:
         self._row_granule = 4
         self.kv: Optional[SlotKVCache | PagedKVCache] = None
         # (step, phase, padded tokens, live tokens, backend, dropped
-        # pairs) per micro-batch — the drop column is the surfaced form
-        # of what used to be silent capacity eviction; the live column is
-        # the real work next to what the dispatch charged (a decode row
-        # always charges max_slots padded lanes, so without it per-step
-        # compute accounting diverged from live work)
+        # pairs, active pairs) per micro-batch — the drop column is the
+        # surfaced form of what used to be silent capacity eviction; the
+        # live column is the real work next to what the dispatch charged
+        # (a decode row always charges max_slots padded lanes, so without
+        # it per-step compute accounting diverged from live work); the
+        # ACTIVE PAIRS column is live work weighted by each row's
+        # activation tier (its effective routed top-k), the only column
+        # where a k=1 row is cheaper than a k=K_max row
         self.backend_log: list[
-            tuple[int, str, int, int, Optional[str], int]] = []
+            tuple[int, str, int, int, Optional[str], int, int]] = []
 
     # ------------------------------------------------------------- loop
 
@@ -321,6 +392,25 @@ class ServingEngine:
             # prompt + max_new past max_len is allowed: the stream is
             # clipped at the wall and SURFACED via Request.truncated
             r.reset()
+        cm = getattr(self.model.cfg, "cmoe", None)
+        self._k_max = int(cm.top_k) if cm is not None else 1
+        for r in requests:
+            if r.tier is None:
+                continue
+            if cm is None:
+                raise ValueError(
+                    f"request {r.rid}: tier={r.tier} needs a CMoE-routed "
+                    f"model — activation tiers are a routed-k knob")
+            if not 1 <= r.tier <= self._k_max:
+                raise ValueError(
+                    f"request {r.rid}: tier {r.tier} outside [1, "
+                    f"{self._k_max}] (K_max = config top_k, the default "
+                    f"tier)")
+        # all-default runs keep row_k=None end to end: the compiled step
+        # is the exact pre-tier graph, so adding tiers costs nothing
+        # until a request actually asks for one
+        self._tiered = any(
+            r.tier is not None and r.tier != self._k_max for r in requests)
         self.scheduler.reset()
         if self.paged:
             self.kv = PagedKVCache(self.model, self.max_slots,
@@ -405,16 +495,19 @@ class ServingEngine:
             slot_busy_frac=busy / max(step * self.max_slots, 1),
             slot_reuse=self.scheduler.slot_reuse,
             backend_counts=self.backend_counts(),
-            dropped_pairs=sum(d for *_, d in self.backend_log),
+            dropped_pairs=sum(row[5] for row in self.backend_log),
             decode_gaps_s=list(self._decode_gaps),
             requests=[dataclasses.replace(r, generated=list(r.generated))
                       for r in requests],
             truncated=sum(1 for r in requests if r.truncated),
             pool_deferrals=self.scheduler.gate_deferrals,
             peak_occupancy=peak,
-            live_tokens=sum(lv for _, _, _, lv, _, _ in self.backend_log),
-            padded_tokens=sum(pd for _, _, pd, _, _, _ in
-                              self.backend_log),
+            live_tokens=sum(row[3] for row in self.backend_log),
+            padded_tokens=sum(row[2] for row in self.backend_log),
+            active_pairs=sum(row[6] for row in self.backend_log),
+            padded_pairs=sum(row[2] for row in self.backend_log)
+            * self._k_max,
+            k_max=self._k_max,
             dispatch_gaps_s=dispatch_gaps,
             ttft_s=ttft_s,
             overlap_occupancy=overlap_occupancy,
@@ -430,8 +523,8 @@ class ServingEngine:
 
     def backend_counts(self) -> dict:
         out: dict[str, Counter] = {"prefill": Counter(), "decode": Counter()}
-        for _, phase, _, _, backend, _ in self.backend_log:
-            out[phase][backend or "-"] += 1
+        for row in self.backend_log:
+            out[row[1]][row[4] or "-"] += 1
         return out
 
     # ------------------------------------------------------------- paged
@@ -447,6 +540,25 @@ class ServingEngine:
         block count against pool headroom (idempotent per rid — a
         deferred or budget-stalled head keeps its reservation)."""
         return self.kv.reserve(req, self._footprint(req))
+
+    # ------------------------------------------------------------- tiers
+
+    def _tier_k(self, req: Request) -> int:
+        """The request's RESOLVED activation tier: its effective routed
+        top-k, defaulting to K_max (the config top_k)."""
+        return req.tier if req.tier is not None else self._k_max
+
+    def _row_k_arg(self, row_k):
+        """None unless this run actually mixes tiers — an all-default run
+        must trace the exact pre-tier graph (the uniform-tier parity
+        gate is then an identity, not a numerical claim)."""
+        return jnp.asarray(row_k) if self._tiered else None
+
+    def _eff_k(self, active_pairs: int, live: int):
+        """Mean live-row k for the backend break-even, or None when the
+        run is all-default (policy then reads the static config top_k —
+        bitwise the pre-tier decision)."""
+        return active_pairs / max(live, 1) if self._tiered else None
 
     # ------------------------------------------------------ micro-batches
 
@@ -483,12 +595,16 @@ class ServingEngine:
         starts = np.zeros(n, np.int32)
         rids = np.zeros(n, np.int32)
         tidx = np.zeros(n, np.int32)
+        row_k = np.full(n, self._k_max, np.int32)
+        active = 0
         for i, (r, c) in enumerate(chunks):
             tokens[i, :c] = r.prompt[r.prefill_pos:r.prefill_pos + c]
             lengths[i] = c
             slots[i] = r.slot
             starts[i] = r.prefill_pos
             rids[i] = r.rid
+            row_k[i] = self._tier_k(r)
+            active += c * int(row_k[i])
             if r.admit_step < 0:
                 r.admit_step = step
             if self.paged:
@@ -508,16 +624,19 @@ class ServingEngine:
             logits, cache, backend, dropped = self.executor.prefill_paged(
                 self.params, self.kv.cache, jnp.asarray(tokens),
                 jnp.asarray(tables), jnp.asarray(lengths),
-                jnp.asarray(starts))
+                jnp.asarray(starts), row_k=self._row_k_arg(row_k),
+                effective_k=self._eff_k(active, int(lengths.sum())))
         else:
             logits, cache, backend, dropped = self.executor.prefill(
                 self.params, self.kv.cache, jnp.asarray(tokens),
                 jnp.asarray(slots), jnp.asarray(lengths),
-                jnp.asarray(starts), hist=hist)
+                jnp.asarray(starts), hist=hist,
+                row_k=self._row_k_arg(row_k),
+                effective_k=self._eff_k(active, int(lengths.sum())))
         self.kv.cache = cache
         self.backend_log.append((step, "prefill", n * w_pad,
                                  int(lengths.sum()), backend,
-                                 int(dropped)))
+                                 int(dropped), active))
         first = np.asarray(self._sampler(logits, rids, tidx))
         for i, (r, c) in enumerate(chunks):
             r.prefill_pos += c
@@ -532,12 +651,19 @@ class ServingEngine:
         tokens = np.zeros((self.max_slots, 1), np.int32)
         rids = np.zeros(self.max_slots, np.int32)
         tidx = np.zeros(self.max_slots, np.int32)
+        # free lanes keep the default tier: their rows are padding whose
+        # routed output no one reads, so any k is correct — K_max keeps
+        # the all-default run's row_k literally constant
+        row_k = np.full(self.max_slots, self._k_max, np.int32)
         running = 0
+        active = 0
         for slot, r in enumerate(self.scheduler.slots):
             if r is not None and r.state == RUNNING:
                 tokens[slot, 0] = r.generated[-1]
                 rids[slot] = r.rid
                 tidx[slot] = len(r.generated)
+                row_k[slot] = self._tier_k(r)
+                active += int(row_k[slot])
                 running += 1
                 if self.paged:
                     # the input token's K/V lands at lengths[slot]
@@ -549,24 +675,29 @@ class ServingEngine:
             tokens[r.slot, 0] = r.prompt[r.prefill_pos]
             rids[r.slot] = r.rid
             tidx[r.slot] = 0
+            row_k[r.slot] = self._tier_k(r)
+            active += int(row_k[r.slot])
             if r.admit_step < 0:
                 r.admit_step = step
             if self.paged:
                 self.kv.ensure(r, r.prefill_pos + 1)
         positions = self.kv.positions()
+        live = running + len(piggy)
         if self.paged:
             logits, cache, backend, dropped = self.executor.decode_paged(
                 self.params, self.kv.cache, jnp.asarray(tokens),
                 jnp.asarray(positions),
-                jnp.asarray(self.kv.tables_snapshot()))
+                jnp.asarray(self.kv.tables_snapshot()),
+                row_k=self._row_k_arg(row_k),
+                effective_k=self._eff_k(active, live))
         else:
             logits, cache, backend, dropped = self.executor.decode(
                 self.params, self.kv.cache, jnp.asarray(tokens),
-                jnp.asarray(positions))
+                jnp.asarray(positions), row_k=self._row_k_arg(row_k),
+                effective_k=self._eff_k(active, live))
         self.kv.cache = cache
         self.backend_log.append((step, "decode", self.max_slots,
-                                 running + len(piggy), backend,
-                                 int(dropped)))
+                                 live, backend, int(dropped), active))
         nxt = np.asarray(self._sampler(logits, rids, tidx))
         if running:
             # the gap is inter-token latency only for lanes that decoded:
@@ -595,8 +726,10 @@ class ServingEngine:
 
     def _emit(self, req: Request, token: int, step: int) -> None:
         req.generated.append(token)
+        now = time.perf_counter()
         if len(req.generated) == 1:
-            req.first_token_t = time.perf_counter()
+            req.first_token_t = now
+        req.last_token_t = now
         hit_eos = req.eos_id is not None and token == req.eos_id
         # the next decode would write this token's K/V at position
         # lengths[slot]; finish when that write would fall off the cache
@@ -747,6 +880,7 @@ class ServingEngine:
         rids = np.zeros(rp, np.int32)
         tidx = np.zeros(rp, np.int32)
         carry = np.zeros(rp, bool)
+        row_k = np.full(rp, self._k_max, np.int32)
         for i, row in enumerate(rows):
             base[i] = row.base
             use_prev[i] = row.use_prev
@@ -755,15 +889,20 @@ class ServingEngine:
             rids[i] = row.req.rid
             tidx[i] = row.tidx
             carry[i] = row.carry
+            row_k[i] = self._tier_k(row.req)
+        active = int(row_k[:n].sum())
         # padding rows duplicate row 0 — same scatter cell, same value, a
         # no-op rewrite — with carry=False so they never touch the token
-        # carry (and their sampled rows are simply never read)
+        # carry (and their sampled rows are simply never read); row 0's
+        # tier rides along so the padded row_k vector stays a function of
+        # the real rows only
         base[n:] = base[0]
         use_prev[n:] = use_prev[0]
         slots[n:] = slots[0]
         pos_a[n:] = pos_a[0]
         rids[n:] = rids[0]
         tidx[n:] = tidx[0]
+        row_k[n:] = row_k[0]
         if self.paged:
             tables = self.kv.table_rows(slots)
             nxt, slot_tokens, cache, backend, dropped = \
@@ -772,7 +911,9 @@ class ServingEngine:
                     jnp.asarray(use_prev), slot_tokens,
                     jnp.asarray(slots), jnp.asarray(tables),
                     jnp.asarray(pos_a), jnp.asarray(rids),
-                    jnp.asarray(tidx), jnp.asarray(carry))
+                    jnp.asarray(tidx), jnp.asarray(carry),
+                    row_k=self._row_k_arg(row_k),
+                    effective_k=self._eff_k(active, n))
         else:
             nxt, slot_tokens, cache, backend, dropped = \
                 self.executor.step_fused(
@@ -780,7 +921,8 @@ class ServingEngine:
                     jnp.asarray(use_prev), slot_tokens,
                     jnp.asarray(slots), jnp.asarray(pos_a),
                     jnp.asarray(rids), jnp.asarray(tidx),
-                    jnp.asarray(carry))
+                    jnp.asarray(carry), row_k=self._row_k_arg(row_k),
+                    effective_k=self._eff_k(active, n))
         self.kv.cache = cache
         for r in promotions:
             sched.prefill_done(r)
@@ -789,7 +931,8 @@ class ServingEngine:
             self.kv.free_request(r)
         return (_InFlight(step=step, nxt=nxt, dropped=dropped, rows=rows,
                           running=running, padded=rp, live=n,
-                          backend=backend), slot_tokens, occupied)
+                          backend=backend, active_pairs=active),
+                slot_tokens, occupied)
 
     def _readback_fused(self, rec: _InFlight,
                         inflight: "deque[_InFlight]") -> None:
@@ -801,7 +944,8 @@ class ServingEngine:
         now = time.perf_counter()
         self.backend_log.append((rec.step, "decode", rec.padded, rec.live,
                                  rec.backend,
-                                 int(np.asarray(rec.dropped))))
+                                 int(np.asarray(rec.dropped)),
+                                 rec.active_pairs))
         if rec.running:
             if self._last_decode_t is not None:
                 self._decode_gaps.append(now - self._last_decode_t)
@@ -817,6 +961,7 @@ class ServingEngine:
                 r.first_token_step = rec.step
                 r.first_token_t = now
             r.generated.append(tok)
+            r.last_token_t = now
             if r.eos_id is not None and tok == r.eos_id:
                 self._eos_rollback(r, rec.step, inflight)
 

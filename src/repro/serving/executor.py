@@ -87,23 +87,39 @@ class StepExecutor:
         # note: the cache is NOT donated — measured slower on CPU (the
         # functional update already fuses; donation forced a layout copy)
         self._prefill = jax.jit(self._prefill_impl,
-                                static_argnames=("hist",))
-        self._decode = jax.jit(self._decode_impl)
-        self._prefill_paged = jax.jit(self._prefill_paged_impl)
-        self._decode_paged = jax.jit(self._decode_paged_impl)
-        self._step_fused = jax.jit(self._step_fused_impl)
-        self._step_fused_paged = jax.jit(self._step_fused_paged_impl)
+                                static_argnames=("hist", "backend"))
+        self._decode = jax.jit(self._decode_impl,
+                               static_argnames=("backend",))
+        self._prefill_paged = jax.jit(self._prefill_paged_impl,
+                                      static_argnames=("backend",))
+        self._decode_paged = jax.jit(self._decode_paged_impl,
+                                     static_argnames=("backend",))
+        self._step_fused = jax.jit(self._step_fused_impl,
+                                   static_argnames=("backend",))
+        self._step_fused_paged = jax.jit(self._step_fused_paged_impl,
+                                         static_argnames=("backend",))
 
-    def _backend(self, num_tokens: int, phase: str):
+    def _backend(self, num_tokens: int, phase: str,
+                 effective_k: Optional[float] = None):
+        """The routed-expert backend policy for this micro-batch.
+
+        ``effective_k`` is the dispatch's mean per-row k (activation
+        tiers): it rescales the gather/grouped break-even, which
+        trace-time auto-selection inside the jit could never see — so
+        the choice made HERE is passed back into the jitted step as a
+        static override, keeping the executed backend and the logged one
+        equal by construction (at most a few distinct values ever
+        compile). None defers to the static config top_k."""
         m = self.model
         return microbatch_backend(m.cfg, num_tokens, phase,
                                   use_kernel=m.use_kernel,
-                                  override=m.backend)
+                                  override=m.backend,
+                                  effective_k=effective_k)
 
     # ----------------------------------------------------------- prefill
 
     def _prefill_impl(self, params, cache, tokens, slots, lengths, starts,
-                      hist):
+                      row_k, hist, backend):
         # gather the prefix window [0, hist): a chunk at per-slot start
         # positions attends everything its slot already holds, and hist
         # covers max(starts) + chunk width — O(W * hist) attention
@@ -113,6 +129,7 @@ class StepExecutor:
         logits, nsub, stats = self.model.step(params, tokens, sub, starts,
                                               lengths=lengths,
                                               phase="prefill",
+                                              row_k=row_k, backend=backend,
                                               return_stats=True)
         # only the chunk's write window changed: slice it back out of the
         # updated sub-cache and scatter just those columns
@@ -123,25 +140,31 @@ class StepExecutor:
 
     def prefill(self, params, cache, tokens: Array, slots: Array,
                 lengths: Array, starts: Optional[Array] = None,
-                hist: Optional[int] = None):
+                hist: Optional[int] = None,
+                row_k: Optional[Array] = None,
+                effective_k: Optional[float] = None):
         """Run one prefill-chunk micro-batch.
 
         starts (n,) are each row's absolute cache start position (default
         all-zero: the whole-prompt case); `hist` is the static gathered
         prefix width (default: the chunk width — correct only when all
-        starts are 0). Returns (logits (n, V) at each row's last valid
-        chunk token, new_cache, backend, dropped routed pairs)."""
+        starts are 0). `row_k` (n,) int32 carries each row's activation
+        tier (per-row effective routed k); `effective_k` is its live-
+        token-weighted mean, which tilts the backend break-even. Returns
+        (logits (n, V) at each row's last valid chunk token, new_cache,
+        backend, dropped routed pairs)."""
         if starts is None:
             starts = jnp.zeros_like(lengths)
         if hist is None:
             hist = tokens.shape[1]
+        be = self._backend(int(tokens.size), "prefill", effective_k)
         logits, cache, dropped = self._prefill(params, cache, tokens, slots,
-                                               lengths, starts, hist=hist)
-        return (logits, cache, self._backend(int(tokens.size), "prefill"),
-                dropped)
+                                               lengths, starts, row_k,
+                                               hist=hist, backend=be)
+        return (logits, cache, be, dropped)
 
     def _prefill_paged_impl(self, params, cache, tokens, tables, lengths,
-                            starts):
+                            starts, row_k, backend):
         # no [0, hist) sub-cache copy: the pool IS the cache, writes
         # scatter through the table inside the step, and attention
         # assembles each lane's prefix view per block. The table width
@@ -151,54 +174,66 @@ class StepExecutor:
                                                 starts, lengths=lengths,
                                                 phase="prefill",
                                                 block_tables=tables,
+                                                row_k=row_k, backend=backend,
                                                 return_stats=True)
         return logits, ncache, stats["dropped"]
 
     def prefill_paged(self, params, cache, tokens: Array, tables: Array,
-                      lengths: Array, starts: Array):
+                      lengths: Array, starts: Array,
+                      row_k: Optional[Array] = None,
+                      effective_k: Optional[float] = None):
         """Paged twin of `prefill`: `tables` (n, nblk) replaces the
         (slots, hist) pair — row i's chunk writes land at
         starts[i] + j through its block table and its queries attend the
         [0, nblk * block_size) logical window. Returns (logits (n, V),
         new_cache, backend, dropped routed pairs)."""
+        be = self._backend(int(tokens.size), "prefill", effective_k)
         logits, cache, dropped = self._prefill_paged(params, cache, tokens,
-                                                     tables, lengths, starts)
-        return (logits, cache, self._backend(int(tokens.size), "prefill"),
-                dropped)
+                                                     tables, lengths, starts,
+                                                     row_k, backend=be)
+        return (logits, cache, be, dropped)
 
     # ------------------------------------------------------------ decode
 
-    def _decode_impl(self, params, cache, tokens, positions):
+    def _decode_impl(self, params, cache, tokens, positions, row_k,
+                     backend):
         logits, ncache, stats = self.model.step(params, tokens, cache,
                                                 positions, phase="decode",
+                                                row_k=row_k, backend=backend,
                                                 return_stats=True)
         return logits, ncache, stats["dropped"]
 
-    def decode(self, params, cache, tokens: Array, positions: Array):
+    def decode(self, params, cache, tokens: Array, positions: Array,
+               row_k: Optional[Array] = None,
+               effective_k: Optional[float] = None):
         """Returns (logits (B, V), new_cache, backend, dropped pairs)."""
+        be = self._backend(int(tokens.shape[0]), "decode", effective_k)
         logits, cache, dropped = self._decode(params, cache, tokens,
-                                              positions)
-        return (logits, cache, self._backend(int(tokens.shape[0]), "decode"),
-                dropped)
+                                              positions, row_k, backend=be)
+        return (logits, cache, be, dropped)
 
-    def _decode_paged_impl(self, params, cache, tokens, positions, tables):
+    def _decode_paged_impl(self, params, cache, tokens, positions, tables,
+                           row_k, backend):
         logits, ncache, stats = self.model.step(params, tokens, cache,
                                                 positions, phase="decode",
                                                 block_tables=tables,
+                                                row_k=row_k, backend=backend,
                                                 return_stats=True)
         return logits, ncache, stats["dropped"]
 
     def decode_paged(self, params, cache, tokens: Array, positions: Array,
-                     tables: Array):
+                     tables: Array, row_k: Optional[Array] = None,
+                     effective_k: Optional[float] = None):
         """Paged twin of `decode`: full-width over all slots, each lane
         reading/writing its own blocks through `tables` (B,
         blocks_per_slot) — one compiled shape for the whole run, exactly
         like the contiguous decode. Free lanes' tables are all-trash, so
         their dummy writes land in block 0."""
+        be = self._backend(int(tokens.shape[0]), "decode", effective_k)
         logits, cache, dropped = self._decode_paged(params, cache, tokens,
-                                                    positions, tables)
-        return (logits, cache, self._backend(int(tokens.shape[0]), "decode"),
-                dropped)
+                                                    positions, tables,
+                                                    row_k, backend=be)
+        return (logits, cache, be, dropped)
 
     # ------------------------------------------------------------- fused
 
@@ -217,18 +252,22 @@ class StepExecutor:
         return slot_tokens.at[idx].set(nxt, mode="drop")
 
     def _step_fused_impl(self, params, cache, base, use_prev, slot_tokens,
-                         row_slots, positions, rids, tidx, carry):
+                         row_slots, positions, rids, tidx, carry, row_k,
+                         backend):
         tokens = self._fused_tokens(base, use_prev, slot_tokens, row_slots)
         logits, ncache, stats = self.model.step(
             params, tokens[:, None], cache, positions, phase="mixed",
-            row_slots=row_slots, return_stats=True)
+            row_slots=row_slots, row_k=row_k, backend=backend,
+            return_stats=True)
         nxt = self._sample(logits, rids, tidx).astype(jnp.int32)
         return (nxt, self._fused_carry(slot_tokens, row_slots, carry, nxt),
                 ncache, stats["dropped"])
 
     def step_fused(self, params, cache, base: Array, use_prev: Array,
                    slot_tokens: Array, row_slots: Array, positions: Array,
-                   rids: Array, token_idx: Array, carry: Array):
+                   rids: Array, token_idx: Array, carry: Array,
+                   row_k: Optional[Array] = None,
+                   effective_k: Optional[float] = None):
         """ONE fused ragged micro-batch: decode lanes and flattened
         prefill-chunk tokens ride the same (R, 1) dispatch — the width-1
         piggyback path generalized until it IS the whole step.
@@ -253,20 +292,23 @@ class StepExecutor:
         Returns (nxt (R,) device, new_slot_tokens device, new_cache,
         backend, dropped device scalar). `nxt` and `dropped` are NOT
         synced to host here — call sites that want overlap read them a
-        step later."""
+        step later. `row_k` (R,) carries each row's activation tier;
+        `effective_k` (their mean over live rows) tilts the width
+        break-even the "mixed" phase applies."""
+        be = self._backend(int(base.shape[0]), "mixed", effective_k)
         nxt, st, cache, dropped = self._step_fused(
             params, cache, base, use_prev, slot_tokens, row_slots,
-            positions, rids, token_idx, carry)
-        return (nxt, st, cache, self._backend(int(base.shape[0]), "mixed"),
-                dropped)
+            positions, rids, token_idx, carry, row_k, backend=be)
+        return (nxt, st, cache, be, dropped)
 
     def _step_fused_paged_impl(self, params, cache, base, use_prev,
                                slot_tokens, row_slots, tables, positions,
-                               rids, tidx, carry):
+                               rids, tidx, carry, row_k, backend):
         tokens = self._fused_tokens(base, use_prev, slot_tokens, row_slots)
         logits, ncache, stats = self.model.step(
             params, tokens[:, None], cache, positions, phase="mixed",
-            block_tables=tables, return_stats=True)
+            block_tables=tables, row_k=row_k, backend=backend,
+            return_stats=True)
         nxt = self._sample(logits, rids, tidx).astype(jnp.int32)
         return (nxt, self._fused_carry(slot_tokens, row_slots, carry, nxt),
                 ncache, stats["dropped"])
@@ -274,14 +316,16 @@ class StepExecutor:
     def step_fused_paged(self, params, cache, base: Array, use_prev: Array,
                          slot_tokens: Array, row_slots: Array,
                          tables: Array, positions: Array, rids: Array,
-                         token_idx: Array, carry: Array):
+                         token_idx: Array, carry: Array,
+                         row_k: Optional[Array] = None,
+                         effective_k: Optional[float] = None):
         """Paged twin of `step_fused`: row r addresses the pool through
         its own block-table SNAPSHOT `tables[r]` (rows of one lane share a
         table; padding rows duplicate row 0's), so the model needs no
         row_slots — per-row tables already express lane sharing. row_slots
         still drives the token composition and the sampled-token carry."""
+        be = self._backend(int(base.shape[0]), "mixed", effective_k)
         nxt, st, cache, dropped = self._step_fused_paged(
             params, cache, base, use_prev, slot_tokens, row_slots, tables,
-            positions, rids, token_idx, carry)
-        return (nxt, st, cache, self._backend(int(base.shape[0]), "mixed"),
-                dropped)
+            positions, rids, token_idx, carry, row_k, backend=be)
+        return (nxt, st, cache, be, dropped)

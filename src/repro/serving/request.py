@@ -31,6 +31,13 @@ class Request:
     max_new: int                      # tokens to generate (incl. the first)
     arrival: float = 0.0              # due time, in engine steps
     eos_id: Optional[int] = None
+    tier: Optional[int] = None        # activation TIER: the effective
+    #   routed top-k this request runs at, in [1, K_max] where K_max is
+    #   the model's config top_k (the DEFAULT tier — None means K_max).
+    #   k is routing DATA, not shape: mixed tiers co-batch into the same
+    #   compiled step, so picking an operating point of the converted
+    #   weight family is a per-request knob, not a model swap. Part of
+    #   the caller's identity block — reset() preserves it.
 
     # --- runtime (engine-owned) ---
     state: str = QUEUED
@@ -44,6 +51,9 @@ class Request:
     #   EMITTED (host-visible) — under the overlapped engine this lags
     #   the sampling dispatch by one step, which is exactly the latency
     #   a client would see; ttft_p50_s/p95_s on EngineReport use these
+    last_token_t: float = -1.0        # wall clock of the most recent
+    #   emission — (last - first) / (tokens - 1) is the request's own
+    #   mean TPOT, which EngineReport.tier_metrics() aggregates per tier
     finish_step: int = -1
     truncated: bool = False           # finished because the slot hit
     #   max_len before max_new (and before EOS) — surfaced on
@@ -66,5 +76,6 @@ class Request:
         self.first_token_step = -1
         self.arrival_t = -1.0
         self.first_token_t = -1.0
+        self.last_token_t = -1.0
         self.finish_step = -1
         self.truncated = False

@@ -18,6 +18,12 @@ at dispatch instead of completion.
 Data structures are O(log max_slots) per admission: free slots live in a
 min-heap (lowest slot index first, matching the historical fill order) and
 the pending queue is an arrival-sorted deque popped from the left.
+
+ACTIVATION TIERS are invisible here by design: a request's effective
+routed top-k (``Request.tier``) is routing data the engine threads into
+the dispatch as a per-row vector, not a shape — so mixed tiers co-batch
+into the same plan, the same slots, the same fused step, and the
+scheduler needs no tier-aware queueing for co-batching to be free.
 """
 from __future__ import annotations
 

@@ -25,12 +25,19 @@ def make_requests(n: int, vocab_size: int, *,
                   gen_range: tuple[int, int] = (4, 16),
                   rate: float = 0.5,
                   seed: int = 0,
-                  eos_id: Optional[int] = None) -> list[Request]:
+                  eos_id: Optional[int] = None,
+                  tiers: Optional[list] = None) -> list[Request]:
     """A mixed-length request set with staggered Poisson arrivals.
 
     Prompt and generation lengths are uniform over the given inclusive
     ranges — the length spread is what separates continuous from static
     batching (static drains at the slowest request of each batch).
+
+    `tiers` assigns each request an activation tier (effective routed
+    top-k; None = the model's default tier) by cycling the list across
+    rids — e.g. ``tiers=[1, None]`` interleaves a k=1 tier with the
+    default so every co-batched step mixes both. Tiers are routing DATA:
+    the engine serves the mix in the same compiled steps.
     """
     rng = np.random.default_rng(seed)
     arrivals = poisson_arrivals(n, rate, seed=seed + 1)
@@ -42,7 +49,8 @@ def make_requests(n: int, vocab_size: int, *,
         if eos_id is not None:
             prompt = np.where(prompt == eos_id, (eos_id + 1) % vocab_size,
                               prompt)
+        tier = tiers[i % len(tiers)] if tiers else None
         reqs.append(Request(rid=i, prompt=[int(t) for t in prompt],
                             max_new=gen, arrival=float(arrivals[i]),
-                            eos_id=eos_id))
+                            eos_id=eos_id, tier=tier))
     return reqs

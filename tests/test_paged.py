@@ -114,9 +114,9 @@ def test_paged_matches_contiguous_gqa(qwen_smoke):
     seen = []
     orig = engine.executor.decode_paged
 
-    def spy(params_, cache, tokens, positions, tables):
+    def spy(params_, cache, tokens, positions, tables, **kw):
         seen.append(np.asarray(tables).copy())
-        return orig(params_, cache, tokens, positions, tables)
+        return orig(params_, cache, tokens, positions, tables, **kw)
 
     engine.executor.decode_paged = spy
     rep = engine.run(reqs)
@@ -273,17 +273,15 @@ def test_backend_log_live_lane_accounting(qwen_smoke):
     engine = ServingEngine(model, params, max_slots=4, max_len=16,
                            prefill_bucket=4)
     rep = engine.run(reqs)
-    decode_rows = [(pd, lv) for _, ph, pd, lv, _, _ in engine.backend_log
+    decode_rows = [(pd, lv) for _, ph, pd, lv, _, _, _ in engine.backend_log
                    if ph == "decode"]
     assert decode_rows and all(pd == 4 for pd, _ in decode_rows)
     assert all(0 < lv <= pd for pd, lv in decode_rows)
     assert any(lv < pd for pd, lv in decode_rows)
-    prefill_rows = [(pd, lv) for _, ph, pd, lv, _, _ in engine.backend_log
-                    if ph == "prefill"]
+    prefill_rows = [(pd, lv) for _, ph, pd, lv, _, _, _ in
+                    engine.backend_log if ph == "prefill"]
     assert all(0 < lv <= pd for pd, lv in prefill_rows)
-    assert rep.padded_tokens == sum(pd for _, ph, pd, _, _, _ in
-                                    engine.backend_log)
-    assert rep.live_tokens == sum(lv for _, ph, _, lv, _, _ in
-                                  engine.backend_log)
+    assert rep.padded_tokens == sum(row[2] for row in engine.backend_log)
+    assert rep.live_tokens == sum(row[3] for row in engine.backend_log)
     assert 0 < rep.compute_utilization < 1
     assert "live/padded" in rep.summary()

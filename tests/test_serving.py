@@ -586,7 +586,7 @@ def test_scheduler_budget_true_for_first_admission():
     engine = ServingEngine(model, params, max_slots=2, max_len=24,
                            prefill_bucket=8, max_prefill_tokens=8)
     engine.run([req])
-    prefills = [(t, n) for t, ph, n, _, _, _ in engine.backend_log
+    prefills = [(t, n) for t, ph, n, _, _, _, _ in engine.backend_log
                 if ph == "prefill"]
     assert len(prefills) == 3                          # ceil(20 / 8)
     assert all(n <= 8 for _, n in prefills), prefills
@@ -598,7 +598,7 @@ def test_scheduler_budget_true_for_first_admission():
     engine = ServingEngine(model, params, max_slots=4, max_len=24,
                            prefill_bucket=8, max_prefill_tokens=8)
     engine.run(herd)
-    prefills = [n for _, ph, n, _, _, _ in engine.backend_log
+    prefills = [n for _, ph, n, _, _, _, _ in engine.backend_log
                 if ph == "prefill"]
     assert all(n <= 8 for n in prefills), prefills     # padded rows count
 
@@ -776,7 +776,7 @@ def test_fused_backend_width_policy(paged):
             {r.rid: tuple(r.generated) for r in off.requests})
     assert on.dropped_pairs == 0
     ran = set()
-    for _, phase, padded, _, backend, _ in eng.backend_log:
+    for _, phase, padded, _, backend, _, _ in eng.backend_log:
         assert phase == "decode"
         assert backend == microbatch_backend(cfg, padded, "mixed"), \
             (padded, backend)
@@ -809,7 +809,7 @@ def test_overlap_telemetry(qwen_smoke):
     assert rep.ttft_p95_s >= rep.ttft_p50_s > 0
     assert "overlap occupancy" in rep.summary()
     g = engine._row_granule
-    for _, phase, padded, live, _, _ in engine.backend_log:
+    for _, phase, padded, live, _, _, _ in engine.backend_log:
         assert phase == "decode"           # one fused dispatch per step
         # the satellite fix: a fused step charges its actual granule-
         # rounded row count, never a flat max_slots per decode dispatch

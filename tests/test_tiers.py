@@ -1,0 +1,314 @@
+"""Per-request activation tiers: k as routing DATA, not shape.
+
+The converted weight family serves any effective routed k in [1, top_k]
+— config top_k (the ``S{s}A{k}E{e}`` tag) only names the DEFAULT tier.
+``cmoe_gate(k_row=...)`` re-aims assignments past each token's k at the
+out-of-range expert id (the invalidation mechanism padding already
+uses), so every routed backend absorbs mixed tiers with zero dispatch
+changes. Gates:
+
+  * uniform tier at K_max is BITWISE the k_row=None gate — the refactor
+    costs nothing on default traffic;
+  * invalidated assignments land on the sentinel id and occupy NO
+    ragged segment row (``ragged_layout`` gives them the drop slot);
+  * mixed-tier batches match the exact oracle on every backend, and the
+    per-token width-invariance contract extends to tier mixes: a
+    default-tier request's tokens are identical whether its co-batch
+    neighbors run k=1 or K_max;
+  * the engine co-batches mixed tiers into one fused step, reports
+    per-tier TTFT/TPOT, and charges k-weighted active pairs.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import CMoEConfig, override
+from repro.configs import get_smoke_config
+from repro.core.router import cmoe_gate, expert_load
+from repro.models import build_model
+from repro.serving import Request, ServingEngine
+from repro.serving.workload import make_requests
+
+
+# ------------------------------------------------------------- gate edges
+
+def _scores(t=12, n_r=6, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (t, n_r))
+
+
+def test_gate_uniform_k_row_is_bitwise_identity():
+    """k_row == top_k everywhere must be the exact k_row=None gate —
+    same idx bits, same gate bits — so default traffic pays nothing."""
+    scores = _scores()
+    u = jnp.linspace(0.5, 1.5, 6)
+    for kw in ({}, {"u": u}):
+        g0, i0, p0 = cmoe_gate(scores, 3, **kw)
+        g1, i1, p1 = cmoe_gate(scores, 3, k_row=jnp.full((12,), 3,
+                                                         jnp.int32), **kw)
+        assert np.array_equal(np.asarray(i0), np.asarray(i1))
+        assert np.array_equal(np.asarray(g0), np.asarray(g1))
+        assert np.array_equal(np.asarray(p0), np.asarray(p1))
+
+
+def test_gate_k_row_edges_and_mix():
+    """k=1, k=num_routed, and a batch mixing both: live columns match the
+    plain top-k selection, dead columns carry the out-of-range id n_r
+    with a zeroed gate, and expert_load never counts a dead column."""
+    t, n_r = 12, 6
+    scores = _scores(t, n_r)
+    g_full, i_full, _ = cmoe_gate(scores, n_r)
+    k_row = jnp.asarray([1, n_r] * (t // 2), jnp.int32)
+    g, i, _ = cmoe_gate(scores, n_r, k_row=k_row)
+    gi, ii = np.asarray(g), np.asarray(i)
+    for tok in range(t):
+        k = int(k_row[tok])
+        assert np.array_equal(ii[tok, :k], np.asarray(i_full)[tok, :k])
+        assert np.array_equal(gi[tok, :k], np.asarray(g_full)[tok, :k])
+        assert np.all(ii[tok, k:] == n_r), "dead columns must re-aim at n_r"
+        assert np.all(gi[tok, k:] == 0.0), "dead columns must zero the gate"
+    keep = jnp.ones_like(i, bool)
+    load = np.asarray(expert_load(i, keep, n_r))
+    assert load.sum() == pytest.approx(1.0)
+    # dead columns (the sentinel id) are dropped by the scatter, so the
+    # load distribution is over LIVE assignments only: uniform scores ->
+    # each token's single live pick for k=1 rows, all n_r for full rows
+    counts = np.zeros(n_r)
+    for tok in range(t):
+        for j in range(int(k_row[tok])):
+            counts[ii[tok, j]] += 1
+    np.testing.assert_allclose(load, counts / counts.sum(), atol=1e-6)
+
+
+def test_invalidated_assignments_occupy_no_ragged_segment():
+    """Sentinel-id assignments get the drop slot P: group sizes cover
+    exactly the live assignments, so a k=1 token's dead columns never
+    consume grouped-backend segment rows."""
+    from repro.core.experts import RAGGED_BLOCK_XLA, ragged_layout
+
+    t, n_r = 16, 4
+    k_row = np.asarray([1, 3] * (t // 2), np.int32)
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, n_r, size=(t, 3)).astype(np.int32)
+    col = np.arange(3)[None, :]
+    flat = np.where(col < k_row[:, None], idx, n_r).reshape(-1)
+    slot, owner, group_sizes, p_total = ragged_layout(
+        jnp.asarray(flat), n_r, RAGGED_BLOCK_XLA)
+    live = int(k_row.sum())
+    dead = flat == n_r
+    assert np.all(np.asarray(slot)[dead] == p_total), \
+        "dead assignments must land on the drop slot"
+    assert np.all(np.asarray(slot)[~dead] < p_total)
+    # block-rounded segments cover the live assignments only
+    assert live <= int(np.asarray(group_sizes).sum()) <= \
+        live + n_r * (RAGGED_BLOCK_XLA - 1)
+
+
+# ------------------------------------------------- backend tier parity
+
+def _bank(e=6, d=16, m=24, seed=1):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return {"wg": jax.random.normal(ks[0], (e, d, m)),
+            "wu": jax.random.normal(ks[1], (e, d, m)),
+            "wd": jax.random.normal(ks[2], (e, m, d))}
+
+
+class _Cfg:
+    activation = "swiglu"
+
+
+@pytest.mark.parametrize("backend", ["gather", "grouped_xla",
+                                     "grouped_pallas"])
+def test_tiered_routing_matches_exact_oracle(backend):
+    """A mixed per-token k vector through the full gate -> dispatch path
+    agrees with the exact oracle on every backend — the invalidation
+    mechanism is absorbed exactly like padding."""
+    from repro.core.experts import routed_experts
+
+    t, n_r, k_max = 24, 6, 3
+    scores = _scores(t, n_r, seed=3)
+    w = _bank(e=n_r)
+    xf = jax.random.normal(jax.random.PRNGKey(4), (t, 16))
+    k_row = jnp.asarray(([1, 2, 3] * t)[:t], jnp.int32)
+    gates, idx, _ = cmoe_gate(scores, k_max, k_row=k_row)
+    ref, _ = routed_experts(xf, w, gates, idx, _Cfg(), backend="exact")
+    out, keep = routed_experts(xf, w, gates, idx, _Cfg(), backend=backend)
+    assert bool(keep.all())
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-4, rtol=2e-4)
+    # a token's own rows must not depend on neighbors' tiers: re-run with
+    # every OTHER token forced to k=1 — rows of the unchanged tokens stay
+    # bitwise identical (per-token width invariance extended to tiers)
+    k_alt = k_row.at[1::2].set(1)
+    g2, i2, _ = cmoe_gate(scores, k_max, k_row=k_alt)
+    out2, _ = routed_experts(xf, w, g2, i2, _Cfg(), backend=backend)
+    same = np.arange(t) % 2 == 0
+    assert np.array_equal(np.asarray(out)[same], np.asarray(out2)[same])
+
+
+def test_gather_kernel_skips_dead_slabs():
+    """The Pallas gather kernel (interpret mode) receives the PRESERVED
+    sentinel id: dead assignment rows output exact zeros and live rows
+    match the XLA gather path."""
+    from repro.kernels.moe_gather import moe_gather
+
+    t, e, d, m, k = 6, 4, 8, 128, 3
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    xf = jax.random.normal(ks[0], (t, d))
+    wg = jax.random.normal(ks[1], (e, d, m))
+    wu = jax.random.normal(ks[2], (e, d, m))
+    wd = jax.random.normal(ks[3], (e, m, d))
+    rng = np.random.default_rng(2)
+    eidx = rng.integers(0, e, size=t * k).astype(np.int32)
+    dead = rng.random(t * k) < 0.4
+    eidx[dead] = e                                   # the sentinel
+    y = moe_gather(xf, jnp.asarray(eidx), wg, wu, wd, top_k=k,
+                   interpret=True)
+    y = np.asarray(y)
+    assert np.all(y[dead] == 0.0), "sentinel rows must output zeros"
+    live = moe_gather(xf, jnp.asarray(np.where(dead, 0, eidx)), wg, wu,
+                      wd, top_k=k, interpret=True)
+    assert np.array_equal(y[~dead], np.asarray(live)[~dead])
+
+
+# ------------------------------------------------------- policy + roofline
+
+def test_backend_policy_learns_effective_k():
+    """The gather/grouped break-even is t*k ≈ E: halving the mean k
+    doubles the token count gather stays optimal for."""
+    from repro.core.experts import select_backend
+
+    cfg = override(get_smoke_config("qwen1.5-0.5b"),
+                   cmoe=CMoEConfig(num_experts=48, num_shared=2, top_k=4,
+                                   k_activation=4))
+    # num_routed = 46: default threshold ~E/k_max = 11, at k_eff=1 it
+    # stretches to 46 — t=20 sits between the two
+    t_mid = 20
+    assert select_backend(t_mid, cfg, "mixed") == "grouped_xla"
+    assert select_backend(t_mid, cfg, "mixed",
+                          effective_k=1.0) == "gather"
+    assert select_backend(t_mid, cfg, "mixed",
+                          effective_k=4.0) == "grouped_xla"
+
+
+def test_roofline_active_params_effective_k():
+    from repro.roofline import active_params
+
+    cfg = override(get_smoke_config("qwen1.5-0.5b"),
+                   cmoe=CMoEConfig(num_experts=8, num_shared=2, top_k=3,
+                                   k_activation=4))
+    n = cfg.num_params()
+    default = active_params(cfg, n)
+    low = active_params(cfg, n, effective_k=1)
+    assert low < default < n
+    assert active_params(cfg, n, effective_k=3) == default
+    # clipped to [1, top_k]: a tier can't activate beyond the family
+    assert active_params(cfg, n, effective_k=99) == default
+    assert active_params(cfg, n, effective_k=0) == low
+
+
+def test_baseline_fold_is_tier_aware():
+    from repro.core.baselines import _fold_shared
+
+    cm = CMoEConfig(num_experts=8, num_shared=2, top_k=3, k_activation=4)
+    assert _fold_shared(cm).top_k == 5            # default tier fold
+    assert _fold_shared(cm, effective_k=1).top_k == 3
+    with pytest.raises(ValueError, match="outside"):
+        _fold_shared(cm, effective_k=4)
+    with pytest.raises(ValueError, match="outside"):
+        _fold_shared(cm, effective_k=0)
+
+
+# ------------------------------------------------------------- the engine
+
+def _cmoe_smoke():
+    cfg = override(get_smoke_config("qwen1.5-0.5b"), dtype="float32",
+                   cmoe=CMoEConfig(num_experts=8, num_shared=2, top_k=2,
+                                   k_activation=4))
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _reqs(cfg, tiers, n=4, seed=9):
+    return make_requests(n, cfg.vocab_size, prompt_range=(6, 10),
+                         gen_range=(4, 6), rate=0.0, seed=seed,
+                         tiers=tiers)
+
+
+def test_engine_tier_validation():
+    cfg, model, params = _cmoe_smoke()
+    eng = ServingEngine(model, params, max_slots=2, max_len=24)
+    bad = [Request(rid=0, prompt=[1, 2, 3], max_new=2, tier=5)]
+    with pytest.raises(ValueError, match="outside"):
+        eng.run(bad)
+    dense_cfg = override(get_smoke_config("qwen1.5-0.5b"),
+                         dtype="float32")
+    dense = build_model(dense_cfg)
+    deng = ServingEngine(dense, dense.init(jax.random.PRNGKey(0)),
+                         max_slots=2, max_len=24)
+    with pytest.raises(ValueError, match="CMoE"):
+        deng.run([Request(rid=0, prompt=[1, 2, 3], max_new=2, tier=1)])
+
+
+def test_engine_uniform_default_tier_is_identity():
+    """tier == K_max on every request is the all-default run: same
+    tokens, and the engine never threads a row_k vector (the compiled
+    step is the pre-tier graph)."""
+    cfg, model, params = _cmoe_smoke()
+    kw = dict(max_slots=2, max_len=24, overlap=True)
+    base = ServingEngine(model, params, **kw).run(_reqs(cfg, None))
+    eng = ServingEngine(model, params, **kw)
+    rep = eng.run(_reqs(cfg, [cfg.cmoe.top_k]))
+    assert not eng._tiered
+    assert ({r.rid: tuple(r.generated) for r in rep.requests} ==
+            {r.rid: tuple(r.generated) for r in base.requests})
+    assert rep.active_pairs == rep.live_tokens * cfg.cmoe.top_k
+
+
+@pytest.mark.parametrize("overlap", [False, True])
+def test_engine_mixed_tiers_cobatch(overlap):
+    """k=1 and default-tier requests co-batch into the same steps; the
+    default-tier requests' streams are bitwise those of an all-default
+    run (width invariance across the tier mix), active pairs come in
+    under the all-default charge, and tier_metrics splits both tiers."""
+    cfg, model, params = _cmoe_smoke()
+    kw = dict(max_slots=4, max_len=24, overlap=overlap)
+    base = ServingEngine(model, params, **kw).run(_reqs(cfg, None))
+    eng = ServingEngine(model, params, **kw)
+    rep = eng.run(_reqs(cfg, [1, None]))
+    assert eng._tiered
+    assert all(r.done for r in rep.requests)
+    assert rep.dropped_pairs == 0
+    base_toks = {r.rid: tuple(r.generated) for r in base.requests}
+    for r in rep.requests:
+        if r.tier is None:          # the default-tier half of the mix
+            assert tuple(r.generated) == base_toks[r.rid], \
+                "a neighbor's tier leaked into a default-tier stream"
+    tm = rep.tier_metrics()
+    assert set(tm) == {1, cfg.cmoe.top_k}
+    assert tm[1]["pairs"] == tm[1]["tokens"] * 1
+    assert tm[2]["pairs"] == tm[2]["tokens"] * 2
+    assert all(m["tpot_p50_s"] >= 0 for m in tm.values())
+    # the k=1 half charges fewer routed pairs than its token count would
+    # at the default tier — the low tier is strictly cheaper in the SAME
+    # co-batched run
+    assert rep.active_pairs < rep.live_tokens * cfg.cmoe.top_k
+    assert rep.active_pair_utilization < rep.compute_utilization
+    assert rep.padded_pairs == rep.padded_tokens * cfg.cmoe.top_k
+    assert "active/padded pairs" in rep.summary()
+
+
+def test_engine_mixed_tiers_overlap_parity():
+    """Mixed-tier co-batching preserves the overlap-invariance contract:
+    the fused double-buffered loop and the sequential baseline serve
+    token-identical streams for the SAME tier mix."""
+    cfg, model, params = _cmoe_smoke()
+    on = ServingEngine(model, params, max_slots=4, max_len=24,
+                       overlap=True).run(_reqs(cfg, [1, None]))
+    off = ServingEngine(model, params, max_slots=4, max_len=24,
+                        overlap=False).run(_reqs(cfg, [1, None]))
+    assert ({r.rid: tuple(r.generated) for r in on.requests} ==
+            {r.rid: tuple(r.generated) for r in off.requests})
+    assert on.dropped_pairs == off.dropped_pairs == 0
