@@ -64,6 +64,30 @@ if [[ "${1:-}" != "--fast" ]]; then
     python -m repro.launch.serve --smoke --continuous --batch 4 \
         --requests 8 --rate 0.5 --prompt-len 32 --gen 8 \
         --max-prefill-tokens 16 --tier 1,default --parity
+    echo "== smoke: prefix-reuse parity (hot prefixes, reuse == no reuse) =="
+    # prefix-sharing gate: every request carries the same 24-token system
+    # prompt (--prefix-groups); with --prefix-reuse each admission after
+    # the first adopts the shared blocks from the refcounted pool (COW on
+    # partial tails) and prefills only its unique remainder. --parity
+    # replays reuse-off (and the overlap==sequential baseline) and gates
+    # token identity, nonzero hits, and the pool conservation audit
+    python -m repro.launch.serve --smoke --continuous --batch 4 \
+        --requests 8 --rate 0.5 --prompt-len 32 --gen 8 \
+        --max-prefill-tokens 16 --paged --block-size 8 \
+        --prefix-groups 24 --prefix-reuse --parity
+    echo "== smoke: preemptive SLO admission (priority classes, tiny pool) =="
+    # overload gate: two priority classes into a pool sized for ONE
+    # request, arrivals staggered so each low-class request is RUNNING
+    # when the next high-class one lands — the high class preempts the
+    # low lane (private blocks evicted, recompute replay re-queued)
+    # instead of queueing behind it. --expect-preemption asserts
+    # preemptions really happened and every victim completed; --parity
+    # replays the same mix unpressured (full pool) and gates token
+    # identity — preemption is a latency policy, invisible in the streams
+    python -m repro.launch.serve --smoke --continuous --batch 4 \
+        --requests 4 --rate 0.3 --prompt-len 24 --gen 8 \
+        --max-prefill-tokens 16 --paged --block-size 8 --num-blocks 5 \
+        --priority 0,1 --expect-preemption --parity --no-overlap
     echo "== smoke: paged kernel parity (Pallas interpret == XLA) =="
     # kernel-correctness gate: the paged run with --use-kernel routes
     # decode attention through the Pallas paged-attention kernel and

@@ -10,14 +10,20 @@ sequential two-dispatch baseline, where prefill micro-batches run the
 grouped routed-expert backend and decode micro-batches the drop-free
 gather path). `--max-prefill-tokens` chunks long prompts across steps so
 prefill cannot stall decode lanes (head-of-line fix). `--paged` swaps
-the contiguous slot lanes for the block-pool KV cache (per-request
-block tables). `--parity` replays the same requests on the other axes
-(overlap off, and contiguous / unchunked) and asserts token-identical
-streams. `--tier` assigns per-request activation tiers (effective routed
-top-k, cycled over a comma list; "default" = config top_k): k is routing
-DATA, so mixed tiers co-batch into the same compiled steps and the
-report grows per-tier TTFT/TPOT plus k-weighted (active-pair) compute
-utilization.
+the contiguous slot lanes for the refcounted block-pool KV cache
+(per-request block tables). `--prefix-reuse` turns on content-addressed
+prefix sharing over that pool (use `--prefix-groups` to generate
+hot-prefix traffic: a comma list of shared system-prompt lengths cycled
+over requests); `--priority` cycles SLO priority classes, and under a
+tiny `--num-blocks` pool a higher class PREEMPTS the lowest running
+lane instead of queueing behind it (`--expect-preemption` asserts it
+happened). `--parity` replays the same requests on the other axes
+(overlap off, contiguous / unchunked, reuse off, unpressured pool) and
+asserts token-identical streams. `--tier` assigns per-request
+activation tiers (effective routed top-k, cycled over a comma list;
+"default" = config top_k): k is routing DATA, so mixed tiers co-batch
+into the same compiled steps and the report grows per-tier TTFT/TPOT
+plus k-weighted (active-pair) compute utilization.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
         --cmoe S3A3E8 --batch 4 --prompt-len 32 --gen 16
@@ -27,6 +33,12 @@ utilization.
         --batch 4 --prompt-len 32 --gen 8 --max-prefill-tokens 16
     PYTHONPATH=src python -m repro.launch.serve --smoke --continuous \
         --batch 4 --gen 8 --paged --block-size 8 --parity
+    PYTHONPATH=src python -m repro.launch.serve --smoke --continuous \
+        --batch 4 --gen 8 --paged --block-size 8 --prefix-reuse \
+        --prefix-groups 24 --parity
+    PYTHONPATH=src python -m repro.launch.serve --smoke --continuous \
+        --batch 4 --gen 8 --paged --block-size 8 --num-blocks 12 \
+        --priority 0,1 --expect-preemption --parity
 """
 from __future__ import annotations
 
@@ -75,6 +87,9 @@ def serve_continuous(model, params, args) -> int:
     parity replays reuse the SAME tiered requests, so each gate also
     certifies mixed-tier co-batching on its axis."""
     cfg = model.cfg
+    if args.prefix_reuse and not args.paged:
+        raise SystemExit("--prefix-reuse needs --paged: sharing is a "
+                         "block-table property")
     max_len = args.prompt_len + args.gen
     tiers = None
     if args.tier:
@@ -86,17 +101,29 @@ def serve_continuous(model, params, args) -> int:
     k_max = cfg.cmoe.top_k if cfg.cmoe is not None else 1
     tiered = bool(tiers) and any(t is not None and t != k_max
                                  for t in tiers)
+    prefix_groups = None
+    if args.prefix_groups:
+        prefix_groups = [int(p) for p in args.prefix_groups.split(",")]
+        # shared prefixes lengthen prompts past --prompt-len: widen the
+        # max_len wall so nothing truncates just for carrying one
+        max_len += max(prefix_groups)
+    priorities = None
+    if args.priority:
+        priorities = [int(p) for p in args.priority.split(",")]
     lo_p = min(max(4, args.prompt_len // 2), args.prompt_len)
     reqs = make_requests(args.requests, cfg.vocab_size,
                          prompt_range=(lo_p, args.prompt_len),
                          gen_range=(max(1, args.gen // 2), args.gen),
-                         rate=args.rate, seed=args.seed, tiers=tiers)
+                         rate=args.rate, seed=args.seed, tiers=tiers,
+                         prefix_groups=prefix_groups,
+                         priorities=priorities)
     engine = ServingEngine(model, params, max_slots=args.batch,
                            max_len=max_len,
                            max_prefill_tokens=args.max_prefill_tokens,
                            temperature=args.temperature, seed=args.seed,
                            paged=args.paged, block_size=args.block_size,
                            num_blocks=args.num_blocks,
+                           prefix_reuse=args.prefix_reuse,
                            overlap=args.overlap)
     report = engine.run(reqs)
     print(f"[continuous] {report.summary()}")
@@ -126,8 +153,27 @@ def serve_continuous(model, params, args) -> int:
         print(f"[continuous] paged pool: {kv.num_blocks} blocks x "
               f"{kv.block_size} tokens (+1 trash), peak occupancy "
               f"{report.peak_occupancy}/{args.batch} slots, "
-              f"{report.pool_deferrals} admission deferrals, "
-              f"{report.truncated} truncated")
+              f"{report.gate_deferrals} admission deferrals "
+              f"({report.deferral_causes or 'none'}), "
+              f"{report.preemptions} preemptions, "
+              f"{report.truncated} truncated, end-of-run audit "
+              f"{report.pool_audit}")
+    if args.prefix_reuse:
+        print(f"[continuous] prefix reuse: hit-rate "
+              f"{report.prefix_hit_rate * 100:.0f}% "
+              f"({report.prefix_matched_tokens}/"
+              f"{report.prefix_prompt_tokens} prefill tokens skipped, "
+              f"{report.prefix_hits} hits), {report.reused_blocks} "
+              f"blocks shared by refcount, {report.cow_copies} "
+              f"copy-on-write tails")
+    if args.expect_preemption:
+        assert report.preemptions > 0, (
+            "--expect-preemption: no lane was preempted — pool "
+            "pressure or the priority mix never triggered the policy")
+        assert all(r.done for r in report.requests), (
+            "a preempted request failed to complete")
+        print(f"[continuous] preemption OK: {report.preemptions} "
+              f"evictions, every request (victims included) completed")
     if args.parity:
         # every baseline runs overlap-off, so under --overlap (the
         # default) each comparison also certifies the fused double-
@@ -143,7 +189,27 @@ def serve_continuous(model, params, args) -> int:
                 "into the tokens",
                 dict(common, max_prefill_tokens=args.max_prefill_tokens,
                      paged=args.paged, block_size=args.block_size,
-                     num_blocks=args.num_blocks, overlap=False)))
+                     num_blocks=args.num_blocks,
+                     prefix_reuse=args.prefix_reuse, overlap=False)))
+        if args.prefix_reuse:
+            comparisons.append((
+                "prefix reuse == no reuse",
+                "prefix sharing forked the generated streams — an "
+                "adopted block's K/V was not bitwise what the request "
+                "would have prefilled",
+                dict(common, max_prefill_tokens=args.max_prefill_tokens,
+                     paged=True, block_size=args.block_size,
+                     num_blocks=args.num_blocks, prefix_reuse=False,
+                     overlap=False)))
+        if args.priority and args.paged and args.num_blocks is not None:
+            comparisons.append((
+                "preempted == unpressured",
+                "preemption forked the generated streams — a victim's "
+                "recompute replay did not resume token-identically",
+                dict(common, max_prefill_tokens=args.max_prefill_tokens,
+                     paged=True, block_size=args.block_size,
+                     num_blocks=None, prefix_reuse=args.prefix_reuse,
+                     overlap=False)))
         if args.paged:
             comparisons.append((
                 "paged == contiguous",
@@ -273,6 +339,28 @@ def main(argv=None):
                     help="[--paged] pool size in blocks (default: the "
                          "same token capacity as the contiguous cache, "
                          "batch x max_len)")
+    ap.add_argument("--prefix-reuse", action="store_true",
+                    help="[--paged] content-addressed prefix sharing: "
+                         "admission adopts matching cached blocks "
+                         "(refcounted full blocks + a copy-on-write "
+                         "tail) and prefills only the unmatched "
+                         "remainder — token-identical to reuse off")
+    ap.add_argument("--prefix-groups", default=None,
+                    help="[--continuous] comma list of shared system-"
+                         "prompt lengths cycled over requests (0 = no "
+                         "shared prefix), e.g. '24' or '32,0' — "
+                         "generates the hot-prefix traffic "
+                         "--prefix-reuse exploits")
+    ap.add_argument("--priority", default=None,
+                    help="[--continuous] comma list of SLO priority "
+                         "classes cycled over requests (higher wins), "
+                         "e.g. '0,1' — under paged pool pressure a "
+                         "higher class preempts the lowest running lane "
+                         "instead of deferring behind it")
+    ap.add_argument("--expect-preemption", action="store_true",
+                    help="assert at least one lane was preempted and "
+                         "every request (victims included) still "
+                         "completed — the overload-policy smoke")
     ap.add_argument("--overlap", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="[--continuous] overlapped engine: one fused "

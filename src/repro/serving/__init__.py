@@ -6,31 +6,47 @@ fixed-batch prefill-then-decode script into an engine that keeps every
 batch lane busy on mixed traffic. Three pieces, three contracts:
 
 ``Scheduler`` (`scheduler.py`)
-    Owns the admission queue (arrival-sorted deque), the slot table, and
-    a free-slot min-heap. Requests are submitted with an arrival time
-    (engine steps); ``plan_prefill(now)`` builds the step's prefill plan
-    — resume partially-prefilled prompts, then admit due requests (FIFO)
-    into free slots — under the ``max_prefill_tokens`` budget, a TRUE
-    per-step cap (first admission included): longer prompts become
-    per-step chunks tracked by the ``PREFILLING`` state and the
-    ``Request.prefill_pos`` cursor. ``finish(req)`` recycles the slot.
-    Policy "continuous" refills slots the moment they free; policy
-    "static" models the classic baseline — it only admits when *all*
-    slots are free, so a batch drains fully before the next one starts.
+    Owns the admission queue (arrival-sorted deque feeding a priority
+    due-heap), the slot table, and a free-slot min-heap. Requests are
+    submitted with an arrival time (engine steps); ``plan_prefill(now)``
+    builds the step's prefill plan — resume partially-prefilled prompts,
+    then admit due requests in (priority desc, arrival, rid) order,
+    which is exact FIFO when every request carries the default class —
+    under the ``max_prefill_tokens`` budget, a TRUE per-step cap (first
+    admission included): longer prompts become per-step chunks tracked
+    by the ``PREFILLING`` state and the ``Request.prefill_pos`` cursor.
+    ``finish(req)`` recycles the slot; ``requeue(req)`` is the
+    PREEMPTION path — an evicted RUNNING lane re-enters the due queue
+    with a recompute replay (prompt + emitted tokens) and resumes
+    token-identically. The ``admission_gate`` seam (True, or a defer
+    cause: "pool" / "priority") is where the paged engine's headroom
+    reservation and preemption policy plug in; deferrals are counted
+    per cause, never silent. Policy "continuous" refills slots the
+    moment they free; policy "static" models the classic baseline — it
+    only admits when *all* slots are free, so a batch drains fully
+    before the next one starts.
 
 ``SlotKVCache`` / ``PagedKVCache`` (`cache.py`)
     The model KV cache plus per-slot bookkeeping, in two layouts.
     Contiguous: leaves stacked (L, B, T, ...), batch axis 1 — each slot
     carries its own position, so a new prompt prefills into a freed slot
     at position 0 while neighboring slots keep decoding at their own
-    depths; recycling is a length reset. Paged: a flat block pool
-    (L, 1 + nblocks, block, ...) addressed through per-slot BLOCK TABLES
-    — a request occupies ceil(len / block) blocks instead of a max_len
-    lane, admission reserves its worst case against pool headroom, and
-    recycling returns blocks to the free list. In both, every cache
-    entry a mask can reach is written by the current request before it
-    is read, so stale K/V from a previous occupant — of a lane or of a
-    recycled block — is never attended (proved by the parity tests).
+    depths; recycling is a length reset. Paged: a flat REFCOUNTED block
+    pool (L, 1 + nblocks, block, ...) addressed through per-slot BLOCK
+    TABLES — a request occupies ceil(len / block) blocks instead of a
+    max_len lane, admission reserves its worst case against pool
+    headroom, and recycling is a DECREF, not a free: a block still
+    referenced by another lane's table (or resurrectable from the
+    prefix index) stays resident, and only refcount zero returns it to
+    circulation. With ``reuse`` on, full immutable blocks are
+    content-addressed in a token-chain trie: admission adopts a new
+    request's matching prefix — shared full blocks by refcount, a
+    partial tail by COPY-ON-WRITE into a private block — and prefills
+    only the unmatched remainder. In both layouts, every cache entry a
+    mask can reach is written by the current request before it is read
+    (shared/cached blocks being the deliberate, provably-valid
+    exception), so stale K/V from a previous occupant — of a lane or of
+    a recycled block — is never attended (proved by the parity tests).
 
 ``StepExecutor`` (`executor.py`)
     jit-compiled step functions over ``Model.step``. The OVERLAPPED
@@ -69,7 +85,11 @@ batch lane busy on mixed traffic. Three pieces, three contracts:
     overlap_occupancy (fraction of dispatches issued while the previous
     step was in flight), compute utilization (live/padded tokens), the
     k-weighted active-pair utilization, per-tier latency via
-    ``tier_metrics()``, and the per-micro-batch backend log.
+    ``tier_metrics()``, the per-micro-batch backend log, and — paged —
+    the prefix-reuse and overload columns: prefix_hit_rate /
+    reused_blocks / cow_copies, gate_deferrals split per cause, and
+    preemptions, with the end-of-run pool conservation audit attached
+    as ``pool_audit``.
 
 ACTIVATION TIERS (per-request effective routed top-k). CMoE's converted
 weights serve any routed k in [1, config top_k] — the ``S{s}A{k}E{e}``

@@ -42,12 +42,31 @@ micro-batch ran, its padded vs live rows (a fused step charges its
 actual padded row count, not max_slots), and its routed drop count
 (`EngineReport.dropped_pairs` aggregates; zero on every engine backend).
 The cache behind the loop is either contiguous slot lanes or — with
-``paged=True`` — a block pool with per-request block tables
+``paged=True`` — a refcounted block pool with per-request block tables
 (`serving.cache.PagedKVCache`): admission then reserves each request's
 worst-case block count against POOL headroom (not just a free slot), so
 concurrency is bounded by actual footprint, pool pressure surfaces as
 admission deferrals (`EngineReport.pool_deferrals`), and both layouts
 serve token-identical streams (tests/test_paged.py).
+
+Two policies ride the refcounted pool. PREFIX REUSE (``prefix_reuse=
+True``): full blocks written by prefill are content-addressed in a
+token-chain trie (keyed by the request's resolved activation tier), and
+admission points a new request's table at matching prefix blocks —
+shared full blocks by refcount, a partial tail by copy-on-write — then
+fast-forwards ``Request.prefill_pos`` past the match, so a hot-prefix
+request prefills only its unmatched tail (TTFT collapses to table
+assembly + the tail; the chunked-prefill resume machinery IS the
+dispatch path, no new kernel shape exists). PRIORITY PREEMPTION: when a
+due request finds no pool headroom, the gate evicts the lowest RUNNING
+lane STRICTLY below its priority class — private blocks decref to zero
+and recycle, shared prefix blocks survive by refcount — and requeues it
+for recompute (prompt + emitted tokens replayed through prefill; the
+resumed stream is token-identical by width-invariant prefill + keyed
+sampling), instead of deferring the head behind lower-priority work
+forever. Both policies are token-identity-preserving by construction:
+reuse on == reuse off, preemption-pressured == unpressured, across
+sequential and overlapped dispatch (tests/test_prefix_reuse.py).
 
 Latency telemetry under overlap splits in two. A DISPATCH gap
 (`dispatch_gaps_s`) is the wall time between consecutive fused
@@ -114,7 +133,9 @@ class EngineReport:
     #   Request.truncated, so a clipped stream is never a silent finish
     pool_deferrals: int             # plans where a due request with a
     #   free slot was deferred because the paged pool lacked headroom
-    #   for its reservation (0 in contiguous mode)
+    #   for its reservation (0 in contiguous mode) — the "pool"-cause
+    #   slice of gate_deferrals, kept as its own column so pre-priority
+    #   readers (bench gates) keep reading the number they always did
     peak_occupancy: int             # max lanes simultaneously occupied —
     #   the concurrency the cache layout actually admitted
     live_tokens: int                # micro-batch tokens backed by real
@@ -148,6 +169,36 @@ class EngineReport:
     #   tier; active/padded is k-aware compute utilization
     k_max: int = 1                  # the DEFAULT tier: config top_k (what
     #   Request.tier=None resolves to, and the bound tiers live under)
+    gate_deferrals: int = 0         # ALL admission-gate deferrals, every
+    #   cause — pool_deferrals plus the priority-cause slice
+    deferral_causes: dict = dataclasses.field(default_factory=dict)
+    #   per-cause breakdown: "pool" = no headroom and nothing strictly
+    #   lower-priority to preempt; "priority" = every pool holder
+    #   strictly outranks the deferred head
+    prefix_matched_tokens: int = 0  # prompt tokens adopted from the
+    #   prefix index instead of prefilled (reuse on; 0 otherwise)
+    prefix_prompt_tokens: int = 0   # prefill tokens ADMITTED while reuse
+    #   was on (replays included) — prefix_hit_rate's denominator
+    prefix_hits: int = 0            # admissions that matched >= 1 token
+    reused_blocks: int = 0          # full blocks adopted by refcount
+    #   (zero copy, zero recompute)
+    cow_copies: int = 0             # partial-tail adoptions: one device
+    #   block copy each (the copy-on-write private tail)
+    preemptions: int = 0            # RUNNING lanes evicted under pool
+    #   pressure and requeued for recompute — never a drop: every
+    #   preempted request still completes, token-identically
+    pool_audit: dict = dataclasses.field(default_factory=dict)
+    #   end-of-run PagedKVCache.audit(): the free + cached + allocated
+    #   == num_blocks conservation law, asserted before the report is
+    #   built ({} in contiguous mode)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Matched / admitted prefill tokens while prefix reuse was on —
+        the fraction of prompt work the trie turned into table
+        assembly."""
+        return self.prefix_matched_tokens / max(self.prefix_prompt_tokens,
+                                                1)
 
     @property
     def goodput(self) -> float:
@@ -250,7 +301,14 @@ class EngineReport:
                 f"{self.slot_busy_frac * 100:.0f}%, peak "
                 f"occupancy {self.peak_occupancy}, slot reuse "
                 f"{self.slot_reuse}, truncated {self.truncated}, pool "
-                f"deferrals {self.pool_deferrals}, live/padded tokens "
+                f"deferrals {self.pool_deferrals}, gate deferrals "
+                f"{self.gate_deferrals} {self.deferral_causes or '{}'}, "
+                f"prefix hit-rate {self.prefix_hit_rate * 100:.0f}% "
+                f"({self.prefix_matched_tokens}/"
+                f"{self.prefix_prompt_tokens} tokens, {self.prefix_hits} "
+                f"hits), reused blocks {self.reused_blocks}, cow copies "
+                f"{self.cow_copies}, preemptions {self.preemptions}, "
+                f"live/padded tokens "
                 f"{self.live_tokens}/{self.padded_tokens} "
                 f"({self.compute_utilization * 100:.0f}%), active/padded "
                 f"pairs {self.active_pairs}/{self.padded_pairs} "
@@ -302,14 +360,25 @@ class ServingEngine:
     max_prefill_tokens is a true per-step prefill token budget: prompts
     longer than it are split into per-step chunks interleaved with decode
     (None = whole prompts in one micro-batch).
-    paged=True swaps the contiguous slot lanes for a block pool with
-    per-request block tables: each request's cache footprint is
-    ceil(len / block_size) blocks, admission reserves its worst case
+    paged=True swaps the contiguous slot lanes for a refcounted block
+    pool with per-request block tables: each request's cache footprint
+    is ceil(len / block_size) blocks, admission reserves its worst case
     against `num_blocks` pool headroom (default: the same token capacity
     as max_slots contiguous lanes — pass fewer blocks to oversubscribe
     slots against memory), and pool pressure surfaces as
     `EngineReport.pool_deferrals`. Both layouts serve token-identical
     streams.
+    prefix_reuse=True (paged only) turns on content-addressed prefix
+    sharing: admission probes the trie with the request's tokens and
+    adopts matched blocks instead of prefilling them (see the module
+    docstring) — token-identical to prefix_reuse=False, with the matched
+    tokens' prefill compute gone and the savings surfaced as
+    `EngineReport.prefix_hit_rate` / `reused_blocks` / `cow_copies`.
+    Requests may carry a PRIORITY class (`Request.priority`, default 0):
+    due requests admit in (priority desc, arrival, rid) order, and under
+    paged pool pressure a due request preempts the lowest RUNNING lane
+    strictly below its class (`EngineReport.preemptions`) — all-default
+    runs never reorder and never preempt.
     A request whose prompt + max_new exceeds max_len is served but
     CLIPPED at the max_len wall: it finishes early with
     ``Request.truncated`` set (counted in `EngineReport.truncated`) —
@@ -328,7 +397,11 @@ class ServingEngine:
                  temperature: float = 0.0, seed: int = 0,
                  paged: bool = False, block_size: int = 16,
                  num_blocks: Optional[int] = None,
+                 prefix_reuse: bool = False,
                  overlap: bool = False):
+        if prefix_reuse and not paged:
+            raise ValueError("prefix_reuse needs paged=True — sharing is "
+                             "a block-table property")
         kind = getattr(model, "kind", None)
         if model.cfg.family in ("ssm", "hybrid", "audio") or kind not in (
                 "dense", "moe", "mla_moe"):
@@ -345,6 +418,7 @@ class ServingEngine:
         self.paged = paged
         self.block_size = block_size
         self.num_blocks = num_blocks
+        self.prefix_reuse = prefix_reuse
         self.overlap = overlap
         # built once: at temperature>0 the keyed sampler is a jitted
         # closure, and rebuilding it per run() would retrace inside the
@@ -416,7 +490,8 @@ class ServingEngine:
             self.kv = PagedKVCache(self.model, self.max_slots,
                                    self.max_len,
                                    block_size=self.block_size,
-                                   num_blocks=self.num_blocks)
+                                   num_blocks=self.num_blocks,
+                                   reuse=self.prefix_reuse)
             for r in requests:
                 need = self.kv.blocks_for(self._footprint(r))
                 if need > self.kv.num_blocks:
@@ -424,9 +499,24 @@ class ServingEngine:
                         f"request {r.rid}: needs {need} blocks, pool has "
                         f"{self.kv.num_blocks} — it could never admit")
             self.scheduler.admission_gate = self._paged_gate
+            self.scheduler.prefix_skip = \
+                self._prefix_skip if self.prefix_reuse else None
+            self.scheduler.on_admit = \
+                self._on_admit if self.prefix_reuse else None
         else:
             self.kv = SlotKVCache(self.model, self.max_slots, self.max_len)
             self.scheduler.admission_gate = None
+            self.scheduler.prefix_skip = None
+            self.scheduler.on_admit = None
+        self._probe = {}                 # rid -> pending PrefixMatch|None
+        self._prefix_matched_tokens = 0
+        self._prefix_prompt_tokens = 0
+        self._prefix_hits = 0
+        self._reused_blocks = 0
+        self._cow_copies = 0
+        self._inflight = None            # overlapped in-flight deque —
+        #   _preempt invalidates a victim's speculative rows through it
+        self._disp_counts: dict[int, int] = {}
         self.backend_log = []
         self._decode_gaps: list[float] = []
         self._last_decode_t: Optional[float] = None
@@ -437,8 +527,15 @@ class ServingEngine:
             # token or decodes >= 1 token, so the loop is bounded by
             # total work + the arrival horizon
             horizon = max((r.arrival for r in requests), default=0.0)
-            max_steps = int(horizon) + sum(
-                r.prompt_len + r.max_new for r in requests) + 16
+            work = sum(r.prompt_len + r.max_new for r in requests)
+            if any(r.priority != requests[0].priority for r in requests):
+                # mixed priorities: preemption UNDOES progress (a victim
+                # replays prompt + emitted tokens). Each higher-priority
+                # admission preempts at most max_slots lanes and each
+                # replay is at most one request's work, so scale the
+                # bound instead of modelling the exact recompute
+                work *= 1 + len(requests)
+            max_steps = int(horizon) + work + 16
         self.scheduler.submit(requests)
         if self.overlap:
             return self._run_fused(requests, max_steps)
@@ -486,6 +583,15 @@ class ServingEngine:
         ttft = [r.first_token_step - r.arrival for r in requests]
         ttft_s = [r.first_token_t - r.arrival_t for r in requests
                   if r.first_token_t >= 0 and r.arrival_t >= 0]
+        audit = {}
+        if self.paged:
+            # the conservation law, checked at the end of EVERY paged
+            # run: with all requests drained, no block may be leaked,
+            # double-freed, or hold a stale refcount
+            audit = self.kv.audit()
+            assert audit["ok"] and audit["allocated"] == 0, (
+                f"block-pool conservation violated at end of run: {audit}")
+        causes = dict(self.scheduler.deferral_causes)
         return EngineReport(
             num_requests=len(requests),
             steps=step,
@@ -500,7 +606,16 @@ class ServingEngine:
             requests=[dataclasses.replace(r, generated=list(r.generated))
                       for r in requests],
             truncated=sum(1 for r in requests if r.truncated),
-            pool_deferrals=self.scheduler.gate_deferrals,
+            pool_deferrals=causes.get("pool", 0),
+            gate_deferrals=self.scheduler.gate_deferrals,
+            deferral_causes=causes,
+            prefix_matched_tokens=self._prefix_matched_tokens,
+            prefix_prompt_tokens=self._prefix_prompt_tokens,
+            prefix_hits=self._prefix_hits,
+            reused_blocks=self._reused_blocks,
+            cow_copies=self._cow_copies,
+            preemptions=self.scheduler.preemptions,
+            pool_audit=audit,
             peak_occupancy=peak,
             live_tokens=sum(row[3] for row in self.backend_log),
             padded_tokens=sum(row[2] for row in self.backend_log),
@@ -535,11 +650,80 @@ class ServingEngine:
         truncated)."""
         return min(req.prompt_len + req.max_new, self.max_len)
 
-    def _paged_gate(self, req: Request) -> bool:
+    def _paged_gate(self, req: Request):
         """Scheduler admission gate: reserve the request's worst-case
         block count against pool headroom (idempotent per rid — a
-        deferred or budget-stalled head keeps its reservation)."""
-        return self.kv.reserve(req, self._footprint(req))
+        deferred or budget-stalled head keeps its reservation). When the
+        pool is exhausted, PREEMPT the lowest RUNNING lane strictly
+        below the head's priority class — repeatedly, until the
+        reservation fits or no victim remains — then defer with a cause:
+        "pool" (headroom exhaustion among peers-or-lower) or "priority"
+        (every pool holder strictly outranks the head)."""
+        if self.kv.reserve(req, self._footprint(req)):
+            return True
+        while True:
+            victim = self.scheduler.preemption_victim(req.priority)
+            if victim is None:
+                break
+            self._preempt(victim)
+            if self.kv.reserve(req, self._footprint(req)):
+                return True
+        holders = self.scheduler.occupied()
+        if holders and all(r.priority > req.priority for r in holders):
+            return "priority"
+        return "pool"
+
+    def _preempt(self, victim: Request) -> None:
+        """Evict a RUNNING lane for a higher-priority admission: roll
+        back its speculative in-flight rows (overlapped mode — their
+        tokens were dispatched but never emitted, and the replay
+        recomputes them identically), decref its blocks (shared prefix
+        blocks survive by refcount; private ones recycle), and requeue
+        it for recompute."""
+        if self._inflight is not None:
+            for later in self._inflight:
+                for row in later.rows:
+                    if row.req is victim:
+                        row.valid = False
+        self.kv.free_request(victim)   # needs the slot requeue() clears
+        self.scheduler.requeue(victim)
+
+    # ------------------------------------------------------ prefix reuse
+
+    def _chain_key(self, req: Request) -> tuple:
+        """The prefix trie a request may share from: keyed by its
+        RESOLVED activation tier, because the effective routed top-k
+        changes every layer's hidden states and therefore the K/V a
+        token writes — cross-tier sharing would break bitwise
+        identity."""
+        return (self._tier_k(req),)
+
+    def _prefix_skip(self, req: Request) -> int:
+        """Scheduler probe hook: how many prefill tokens admission would
+        adopt from the prefix index. Pure lookup; the match is parked
+        for _on_admit, which runs before the pool can change."""
+        m = self.kv.match_prefix(req.seq_tokens, key=self._chain_key(req))
+        self._probe[req.rid] = m
+        return 0 if m is None else m.matched
+
+    def _on_admit(self, req: Request) -> None:
+        """Scheduler admission hook (reuse on): adopt the probed match
+        into the freshly-assigned slot and fast-forward the prefill
+        cursor past it — the chunked-prefill resume machinery then
+        prefills only the unmatched tail. On a miss, just point the
+        slot's chain cursor at the trie root so its full blocks
+        register as prefill advances."""
+        m = self._probe.pop(req.rid, None)
+        self._prefix_prompt_tokens += req.seq_len
+        if m is None:
+            self.kv.begin_chain(req, key=self._chain_key(req))
+            return
+        nblocks, cows = self.kv.adopt_prefix(req, m)
+        req.prefill_pos = m.matched
+        self._prefix_matched_tokens += m.matched
+        self._prefix_hits += 1
+        self._reused_blocks += nblocks
+        self._cow_copies += cows
 
     # ------------------------------------------------------------- tiers
 
@@ -598,11 +782,16 @@ class ServingEngine:
         row_k = np.full(n, self._k_max, np.int32)
         active = 0
         for i, (r, c) in enumerate(chunks):
-            tokens[i, :c] = r.prompt[r.prefill_pos:r.prefill_pos + c]
+            # seq_tokens = the prompt, or the preemption replay (prompt +
+            # emitted tokens); either way the ordinary chunked path
+            toks = r.seq_tokens
+            tokens[i, :c] = toks[r.prefill_pos:r.prefill_pos + c]
             lengths[i] = c
             slots[i] = r.slot
             starts[i] = r.prefill_pos
             rids[i] = r.rid
+            tidx[i] = r.resume_m      # a replay's final logits re-sample
+            #   token index resume_m — the stream continues, no duplicate
             row_k[i] = self._tier_k(r)
             active += c * int(row_k[i])
             if r.admit_step < 0:
@@ -641,9 +830,12 @@ class ServingEngine:
         for i, (r, c) in enumerate(chunks):
             r.prefill_pos += c
             self.kv.lengths[r.slot] = r.prefill_pos
-            if r.prefill_pos == r.prompt_len:
+            if self.paged:
+                self.kv.commit(r)     # register newly-FULL blocks
+            if r.prefill_pos == r.seq_len:
                 self.scheduler.prefill_done(r)
-                r.first_token_step = step
+                if r.first_token_step < 0:
+                    r.first_token_step = step
                 self._emit(r, int(first[i]), step)
 
     def _decode_microbatch(self, step: int,
@@ -670,11 +862,11 @@ class ServingEngine:
                     self.kv.ensure(r, int(self.kv.lengths[slot]) + 1)
         for r, _ in piggy:
             # a width-1 prefill chunk riding the decode dispatch: feed the
-            # next prompt token at the slot's cursor; its logits row is
-            # the request's FIRST sampled token when the prompt completes
-            tokens[r.slot, 0] = r.prompt[r.prefill_pos]
+            # next sequence token at the slot's cursor; its logits row is
+            # the request's next sampled token when the prefill completes
+            tokens[r.slot, 0] = r.seq_tokens[r.prefill_pos]
             rids[r.slot] = r.rid
-            tidx[r.slot] = 0
+            tidx[r.slot] = r.resume_m
             row_k[r.slot] = self._tier_k(r)
             active += int(row_k[r.slot])
             if r.admit_step < 0:
@@ -719,9 +911,12 @@ class ServingEngine:
         for r, _ in piggy:
             self.kv.lengths[r.slot] += 1
             r.prefill_pos += 1
-            if r.prefill_pos == r.prompt_len:
+            if self.paged:
+                self.kv.commit(r)
+            if r.prefill_pos == r.seq_len:
                 self.scheduler.prefill_done(r)
-                r.first_token_step = step
+                if r.first_token_step < 0:
+                    r.first_token_step = step
                 self._emit(r, int(nxt[r.slot]), step)
 
     def _emit(self, req: Request, token: int, step: int) -> None:
@@ -758,8 +953,10 @@ class ServingEngine:
         slot_tokens = jnp.zeros((self.max_slots,), jnp.int32)
         # tokens dispatched (= sampled on device) per request — runs one
         # step AHEAD of len(r.generated), which counts emissions
-        self._disp_counts: dict[int, int] = {r.rid: 0 for r in requests}
+        self._disp_counts = {r.rid: 0 for r in requests}
         inflight: deque[_InFlight] = deque()
+        self._inflight = inflight      # _preempt rolls back a victim's
+        #                                speculative rows through this
         step = busy = peak = 0
         n_disp = n_overlapped = 0
         t0 = time.perf_counter()
@@ -849,22 +1046,30 @@ class ServingEngine:
                 r.admit_step = step
             if self.paged:
                 self.kv.ensure(r, r.prefill_pos + c)
+            toks = r.seq_tokens      # prompt, or the preemption replay
             for j in range(c):
                 pos = r.prefill_pos + j
-                last = pos == r.prompt_len - 1
+                last = pos == r.seq_len - 1
                 rows.append(_FusedRow(req=r,
                                       kind="first" if last else "mid",
                                       slot=r.slot, pos=pos,
-                                      base=int(r.prompt[pos]),
-                                      use_prev=False, tidx=0, carry=last))
+                                      base=int(toks[pos]),
+                                      use_prev=False,
+                                      tidx=r.resume_m if last else 0,
+                                      carry=last))
             r.prefill_pos += c
             self.kv.lengths[r.slot] = r.prefill_pos
-            if r.prefill_pos == r.prompt_len:
+            if self.paged:
+                self.kv.commit(r)
+            if r.prefill_pos == r.seq_len:
                 promotions.append(r)
-                self._disp_counts[r.rid] = 1
-                full = r.prompt_len >= self.max_len
-                if r.max_new <= 1 or full:
-                    if full and r.max_new > 1:
+                # dispatch count continues across a preemption: resume_m
+                # tokens were emitted before the eviction, and the
+                # "first" row above just re-dispatched index resume_m
+                self._disp_counts[r.rid] = r.resume_m + 1
+                full = r.seq_len >= self.max_len
+                if r.resume_m + 1 >= r.max_new or full:
+                    if full and r.resume_m + 1 < r.max_new:
                         r.truncated = True
                     finishes.append(r)
         occupied = len(sched.occupied())
@@ -957,7 +1162,9 @@ class ServingEngine:
                 continue
             r = row.req
             tok = int(nxt[i])
-            if row.kind == "first":
+            if row.kind == "first" and r.first_token_step < 0:
+                # a resumed request's "first" row is its replay
+                # completion — the original first-token stamps stand
                 r.first_token_step = rec.step
                 r.first_token_t = now
             r.generated.append(tok)

@@ -6,7 +6,13 @@ Two compiled shapes do all the work:
       one prefill CHUNK per row: row i covers prompt positions
       [starts[i], starts[i] + lengths[i]) of its slot (0 for a fresh or
       freshly recycled slot — the classic whole-prompt prefill is the
-      starts==0 special case). The executor gathers the first `hist`
+      starts==0 special case). Nonzero starts are the ONE resume
+      primitive every higher policy rides: a chunked long prompt, a
+      PREFIX-REUSE admission fast-forwarded past its adopted blocks
+      (start = the matched token count — the skipped prefill never
+      dispatches anything), and a preempted request's recompute replay
+      all reach the executor as "prefill from a cursor", so no new
+      compiled shape exists for any of them. The executor gathers the first `hist`
       cache columns of the admitted slots (hist >= max(starts) + W, so a
       chunk's queries see the whole already-filled prefix), runs the
       slot-aware step at per-slot start positions, and scatters back ONLY

@@ -9,6 +9,13 @@ PREFILLING = "prefilling"     # admitted to a slot, prompt partially in cache
 RUNNING = "running"           # prompt fully prefilled, decoding
 FINISHED = "finished"
 
+# Lifecycle with preemption: a PREFILLING/RUNNING request evicted under
+# pool pressure goes BACK to QUEUED with its private blocks freed; on
+# re-admission it re-prefills prompt + already-emitted tokens (the
+# ``prefill_tokens`` replay) and resumes decoding where it left off —
+# token-identical to the unpreempted stream, because prefill is width-
+# invariant and sampling is keyed by (rid, token index).
+
 
 @dataclasses.dataclass
 class Request:
@@ -38,6 +45,12 @@ class Request:
     #   compiled step, so picking an operating point of the converted
     #   weight family is a per-request knob, not a model swap. Part of
     #   the caller's identity block — reset() preserves it.
+    priority: int = 0                 # SLO priority class (higher wins).
+    #   Admission orders due requests by (priority desc, arrival, rid) —
+    #   all-default-priority runs keep the exact FIFO order — and under
+    #   paged pool pressure a due higher-priority request may PREEMPT
+    #   the lowest-priority RUNNING lane instead of deferring behind it.
+    #   Part of the caller's identity block — reset() preserves it.
 
     # --- runtime (engine-owned) ---
     state: str = QUEUED
@@ -58,10 +71,39 @@ class Request:
     truncated: bool = False           # finished because the slot hit
     #   max_len before max_new (and before EOS) — surfaced on
     #   EngineReport.summary(), never a silent early finish
+    prefill_tokens: Optional[list] = None   # PREEMPTION REPLAY: the
+    #   token sequence to (re-)prefill — prompt + every token emitted
+    #   before the eviction. None (the normal case) means the prompt
+    #   itself; the engine reads prompts only through seq_tokens/seq_len
+    #   so a resumed request re-enters the ordinary chunked-prefill path.
+    preemptions: int = 0              # times this request was evicted
+    #   and re-queued for recompute (aggregated on EngineReport)
 
     @property
     def prompt_len(self) -> int:
         return len(self.prompt)
+
+    @property
+    def seq_tokens(self) -> list:
+        """The sequence prefill must put in the cache: the prompt, or —
+        after a preemption — the prompt plus the already-emitted tokens
+        (recompute replay). The last replayed token's logits re-sample
+        token index ``resume_m`` (keyed sampling), so the stream resumes
+        with a NEW token and no emission is duplicated."""
+        return self.prefill_tokens if self.prefill_tokens is not None \
+            else self.prompt
+
+    @property
+    def seq_len(self) -> int:
+        return len(self.seq_tokens)
+
+    @property
+    def resume_m(self) -> int:
+        """Tokens already emitted when the prefill replay was snapshot:
+        the sampling token-index the resumed stream continues from (0
+        for a never-preempted request)."""
+        return 0 if self.prefill_tokens is None \
+            else len(self.prefill_tokens) - len(self.prompt)
 
     @property
     def done(self) -> bool:
@@ -79,3 +121,5 @@ class Request:
         self.last_token_t = -1.0
         self.finish_step = -1
         self.truncated = False
+        self.prefill_tokens = None
+        self.preemptions = 0

@@ -2,10 +2,24 @@
 
 Pure host-side bookkeeping — no jax. The engine drives it with an integer
 step clock: ``plan_prefill(now)`` resumes partially-prefilled requests and
-hands out free slots to due requests (FIFO by arrival, then rid), splitting
-prompts into per-step chunks bounded by ``max_prefill_tokens``;
-``prefill_done(req)`` promotes a fully-prefilled request to a decode lane;
-``finish(req, step)`` recycles the slot for the next admission.
+hands out free slots to due requests — ordered by (priority desc, arrival,
+rid), which is the exact historical FIFO whenever every request carries
+the default priority 0 — splitting prompts into per-step chunks bounded by
+``max_prefill_tokens``; ``prefill_done(req)`` promotes a fully-prefilled
+request to a decode lane; ``finish(req, step)`` recycles the slot for the
+next admission; ``requeue(req)`` is the PREEMPTION path — a RUNNING lane
+evicted under pool pressure goes back to the due queue with a recompute
+replay (prompt + emitted tokens) and re-enters through the ordinary
+admission/chunked-prefill machinery.
+
+Admission beyond slot availability is delegated through ``admission_gate``
+(the paged engine's pool-headroom reservation, and — with priorities — its
+preemption policy): the gate returns True to admit or a CAUSE string to
+defer ("pool" = no headroom and nothing strictly lower-priority to
+preempt; "priority" = every pool holder strictly outranks the head).
+Deferrals are head-blocking — nothing behind the highest-priority due
+request may jump it — and are counted per cause in ``deferral_causes``
+(total in ``gate_deferrals``), never a silent drop.
 
 Under the OVERLAPPED engine the clock is DISPATCH time: promotions and
 max_new/max_len finishes are applied the step their last token is
@@ -86,24 +100,43 @@ class Scheduler:
         self.max_prefill_tokens = max_prefill_tokens
         self.prefill_granule = prefill_granule
         # optional admission gate beyond slot availability (the paged
-        # engine's pool-headroom reservation: returns False to DEFER the
-        # head-of-queue request; must be idempotent, because a deferred
-        # or budget-stalled head is re-gated on the next plan). Set by
-        # the engine per run — reset() preserves it.
+        # engine's pool-headroom reservation + preemption policy: returns
+        # True to admit, or a cause string — "pool" / "priority" — to
+        # DEFER the head request; plain False is accepted as "pool" for
+        # older gates. Must be idempotent, because a deferred or
+        # budget-stalled head is re-gated on the next plan). Set by the
+        # engine per run — reset() preserves it.
         self.admission_gate = None
+        # prefix-reuse admission hooks (paged engine, reuse on):
+        #   prefix_skip(req) -> int   tokens the engine will fast-forward
+        #       at admission (a PURE cache probe — called before the
+        #       chunk budget is charged, so matched tokens cost nothing)
+        #   on_admit(req)             called right after the slot is
+        #       assigned; the engine adopts the matched blocks and
+        #       fast-forwards req.prefill_pos to the probed skip
+        self.prefix_skip = None
+        self.on_admit = None
         self.reset()
 
     def reset(self) -> None:
         self.pending: deque[Request] = deque()
+        # DUE requests, ordered (priority desc, arrival, rid): plan moves
+        # arrived pending requests here, so priority only ever reorders
+        # requests that are simultaneously waiting — it never sees the
+        # future. All-default-priority runs pop in exact FIFO order.
+        self._due: list[tuple] = []
         self.slots: list[Optional[Request]] = [None] * self.max_slots
         self._free_heap = list(range(self.max_slots))   # sorted == heapified
         self.prefilling: list[Request] = []             # admission order
         self.num_admitted = 0
         self.slot_reuse = 0            # admissions into a previously-used slot
         self.gate_deferrals = 0        # plans where the admission gate
-        #   deferred a due request a free slot was available for (paged:
-        #   pool exhaustion) — surfaced via EngineReport.pool_deferrals,
-        #   never a silent drop
+        #   deferred a due request a free slot was available for —
+        #   totalled here, split per cause in deferral_causes ("pool" =
+        #   headroom exhaustion, "priority" = outranked by every pool
+        #   holder); surfaced via EngineReport, never a silent drop
+        self.deferral_causes: dict[str, int] = {}
+        self.preemptions = 0           # RUNNING lanes evicted + requeued
         self._slot_used = [False] * self.max_slots
 
     # ------------------------------------------------------------- queue
@@ -131,7 +164,7 @@ class Scheduler:
                 if r is not None and r.state == RUNNING]
 
     def all_done(self) -> bool:
-        return not self.pending and not self.occupied()
+        return not self.pending and not self._due and not self.occupied()
 
     # --------------------------------------------------------- admission
 
@@ -172,25 +205,40 @@ class Scheduler:
 
         plan: list[tuple[Request, int]] = []
         for r in self.prefilling:
-            chunk = take(r.prompt_len - r.prefill_pos)
+            chunk = take(r.seq_len - r.prefill_pos)
             if chunk == 0:
                 break
             plan.append((r, chunk))
         if self.policy == "static" and self.occupied():
             return plan
-        while (self.pending and self.pending[0].arrival <= now
-               and self._free_heap):
+        while self.pending and self.pending[0].arrival <= now:
+            r = self.pending.popleft()
+            heapq.heappush(self._due, (-r.priority, r.arrival, r.rid, r))
+        while self._due and self._free_heap:
+            head = self._due[0][3]
             # gate BEFORE charging the budget: a gate-passed reservation
             # is idempotent, so a head that then stalls on budget is
-            # simply re-admitted (reservation intact) next plan
-            if self.admission_gate is not None and \
-                    not self.admission_gate(self.pending[0]):
-                self.gate_deferrals += 1
-                break                  # FIFO: nothing behind may jump it
-            chunk = take(self.pending[0].prompt_len)
+            # simply re-admitted (reservation intact) next plan. The
+            # gate may PREEMPT a lower-priority RUNNING lane to make
+            # headroom (requeue() below) — safe mid-loop, because
+            # RUNNING lanes are never in this step's plan rows.
+            if self.admission_gate is not None:
+                verdict = self.admission_gate(head)
+                if verdict is not True:
+                    cause = verdict if isinstance(verdict, str) else "pool"
+                    self.gate_deferrals += 1
+                    self.deferral_causes[cause] = \
+                        self.deferral_causes.get(cause, 0) + 1
+                    break          # head-blocking: nothing may jump it
+            # matched prefix tokens are adopted, not prefilled — charge
+            # the budget only for the unmatched tail (probe is pure; the
+            # pool is untouched between probe and the on_admit adoption)
+            skip = self.prefix_skip(head) if self.prefix_skip else 0
+            chunk = take(head.seq_len - skip)
             if chunk == 0:
                 break
-            req = self.pending.popleft()
+            heapq.heappop(self._due)
+            req = head
             slot = heapq.heappop(self._free_heap)
             req.slot = slot
             req.state = PREFILLING
@@ -201,6 +249,8 @@ class Scheduler:
                 self.slot_reuse += 1
             self._slot_used[slot] = True
             self.num_admitted += 1
+            if self.on_admit is not None:
+                self.on_admit(req)
             plan.append((req, chunk))
         return plan
 
@@ -219,3 +269,46 @@ class Scheduler:
         heapq.heappush(self._free_heap, req.slot)
         req.state = FINISHED
         req.finish_step = step
+
+    # -------------------------------------------------------- preemption
+
+    def preemption_victim(self, priority: int) -> Optional[Request]:
+        """The lane a due request of ``priority`` may evict: the lowest-
+        priority RUNNING request STRICTLY below it (ties broken toward
+        the latest arrival, then highest rid — evict the newest work,
+        it has the least sunk compute). None when nothing qualifies.
+        PREFILLING lanes are never victims: they may already own rows in
+        the step's prefill plan."""
+        best = None
+        for r in self.slots:
+            if r is None or r.state != RUNNING or r.priority >= priority:
+                continue
+            if best is None or (r.priority, -r.arrival, -r.rid) < \
+                    (best.priority, -best.arrival, -best.rid):
+                best = r
+        return best
+
+    def requeue(self, req: Request) -> None:
+        """Evict a RUNNING lane back to the due queue for RECOMPUTE: the
+        replay sequence (prompt + every emitted token) becomes its
+        prefill, so on re-admission it flows through the ordinary
+        chunked-prefill path and resumes decoding token-identically
+        (width-invariant prefill + keyed sampling). The caller frees the
+        lane's cache state FIRST — free_request needs the slot id this
+        method clears."""
+        if self.slots[req.slot] is not req:
+            raise ValueError(f"request {req.rid} does not own slot "
+                             f"{req.slot}")
+        if req.state != RUNNING:
+            raise ValueError(f"request {req.rid} is {req.state}, only "
+                             "RUNNING lanes are preemptible")
+        self.slots[req.slot] = None
+        heapq.heappush(self._free_heap, req.slot)
+        req.state = QUEUED
+        req.slot = -1
+        req.prefill_tokens = list(req.prompt) + list(req.generated)
+        req.prefill_pos = 0
+        req.preemptions += 1
+        self.preemptions += 1
+        heapq.heappush(self._due, (-req.priority, req.arrival, req.rid,
+                                   req))

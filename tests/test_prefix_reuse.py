@@ -1,0 +1,505 @@
+"""Refcounted block pool: prefix sharing, copy-on-write, preemption.
+
+Three contracts under test:
+
+1. POOL CONSERVATION — every physical block is in exactly one of
+   free / cached / allocated, refcounts equal table-entry counts, and
+   random admit/ensure/commit/adopt/free/preempt sequences can never
+   leak, double-free, or underflow a block (``PagedKVCache.audit``).
+2. TOKEN IDENTITY — prefix reuse on == off and preemption-pressured ==
+   unpressured are bitwise-identical streams, for GQA and MLA, paged,
+   sequential and overlapped, greedy and temperature>0: adopting a
+   cached block hands the request exactly the K/V it would have
+   computed (width invariance), and a preempted request's recompute
+   replay resumes via keyed sampling with no duplicated or forked
+   token.
+3. POLICY — admission orders by (priority desc, arrival, rid) and is
+   exact FIFO at uniform priority; deferrals split per cause ("pool" vs
+   "priority"); preemption evicts only strictly-lower RUNNING lanes and
+   every victim still completes.
+"""
+import numpy as np
+import pytest
+
+from repro.serving import PagedKVCache, Request, ServingEngine
+from repro.serving.scheduler import Scheduler
+from repro.serving.workload import make_requests
+
+
+def _toks(rng, n, vocab=64):
+    return [int(t) for t in rng.integers(0, vocab, n)]
+
+
+def _slotted(rid, prompt, slot, max_new=4, priority=0):
+    r = Request(rid=rid, prompt=prompt, max_new=max_new, priority=priority)
+    r.slot = slot
+    return r
+
+
+def _prefill_host(kv, r, upto):
+    """Host-side stand-in for the engine's prefill bookkeeping: allocate,
+    advance the cursor, register full blocks."""
+    kv.ensure(r, upto)
+    r.prefill_pos = upto
+    kv.lengths[r.slot] = upto
+    kv.commit(r)
+
+
+# --------------------------------------------------------------- mechanics
+
+
+def test_prefix_trie_match_adopt_cow(qwen_smoke):
+    """Host-visible sharing protocol end to end: registration of full
+    blocks, full-block match + refcounted adoption, partial-tail
+    copy-on-write, decref-to-cached survival, and the conservation
+    audit at every stage."""
+    cfg, model, params = qwen_smoke
+    rng = np.random.default_rng(3)
+    kv = PagedKVCache(model, 4, 32, block_size=4, reuse=True)
+    base = _toks(rng, 18)
+
+    a = _slotted(0, base, 0)
+    assert kv.reserve(a, 22)
+    kv.begin_chain(a)
+    _prefill_host(kv, a, 18)
+    assert kv.audit()["ok"]
+    # 18 tokens / block 4: blocks 0..3 full (registered), block 4 partial
+    assert len(kv._reg) == 4
+
+    # same tokens again: 4 full blocks match (16 tokens); the partial
+    # 5th block of `a` was never registered, so no COW source exists and
+    # the last token is always prefilled (limit = len - 1)
+    m = kv.match_prefix(base)
+    assert m is not None and m.matched == 16 and len(m.blocks) == 4
+    assert m.cow is None
+
+    b = _slotted(1, list(base), 1)
+    assert kv.reserve(b, 22)
+    nb, cows = kv.adopt_prefix(b, m)
+    assert (nb, cows) == (4, 0)
+    b.prefill_pos = m.matched
+    shared = [int(x) for x in kv.tables[0, :4]]
+    assert [int(x) for x in kv.tables[1, :4]] == shared
+    assert all(int(kv.refcount[blk]) == 2 for blk in shared)
+    assert kv.audit()["ok"]
+    _prefill_host(kv, b, 18)          # the tail prefills privately
+    assert int(kv.tables[1, 4]) != int(kv.tables[0, 4])
+
+    # divergence INSIDE a full block: longest-common-prefix partial
+    # match becomes one copy-on-write private block
+    div = base[:6] + [v + 1 for v in base[6:10]]
+    m2 = kv.match_prefix(div)
+    assert m2 is not None and len(m2.blocks) == 1
+    assert m2.cow is not None and m2.cow[1] == 2 and m2.matched == 6
+    c = _slotted(2, div, 2)
+    assert kv.reserve(c, 14)
+    nb2, cows2 = kv.adopt_prefix(c, m2)
+    assert (nb2, cows2) == (1, 1)
+    assert int(kv.tables[2, 1]) not in shared   # the COW block is private
+    assert int(kv.refcount[kv.tables[2, 1]]) == 1
+    assert kv.audit()["ok"]
+
+    # recycling is a decref: a's blocks stay resident (b still shares
+    # the first 4; the NEVER-FILLED 5th was never registered, so its
+    # decref-to-0 returns it straight to the free list)
+    kv.free_request(a)
+    # block 0 is held by b AND c's full-block match; blocks 1-3 by b only
+    assert int(kv.refcount[shared[0]]) == 2
+    assert all(int(kv.refcount[blk]) == 1 for blk in shared[1:])
+    assert kv.audit()["ok"]
+    kv.free_request(b)
+    kv.free_request(c)
+    aud = kv.audit()
+    # everything refcount-0 now; registered content survives as cached
+    assert aud["ok"] and aud["allocated"] == 0 and aud["cached"] == 4
+    assert aud["free"] + aud["cached"] == kv.num_blocks
+
+    # ...and a new request can still resurrect it from the index
+    m3 = kv.match_prefix(base)
+    assert m3 is not None and m3.matched >= 16
+
+
+def test_chain_key_separates_tiers(qwen_smoke):
+    """Identical token chains under different chain keys (the engine
+    passes the resolved activation tier) never share blocks: tier
+    changes the K/V a token writes, so cross-key adoption would break
+    bitwise identity."""
+    cfg, model, params = qwen_smoke
+    rng = np.random.default_rng(5)
+    kv = PagedKVCache(model, 2, 16, block_size=4, reuse=True)
+    toks = _toks(rng, 9)
+    a = _slotted(0, toks, 0)
+    assert kv.reserve(a, 12)
+    kv.begin_chain(a, key=(1,))
+    _prefill_host(kv, a, 9)
+    assert kv.match_prefix(toks, key=(2,)) is None
+    m = kv.match_prefix(toks, key=(1,))
+    assert m is not None and m.matched == 8
+    kv.free_request(a)
+    assert kv.audit()["ok"]
+
+
+def test_cached_blocks_evict_lru_under_pressure(qwen_smoke):
+    """Refcount-0 registered blocks are reclaimable on demand — the free
+    list runs dry, allocation evicts the least-recently-cached chain
+    (and its matchability), and conservation still holds."""
+    cfg, model, params = qwen_smoke
+    rng = np.random.default_rng(7)
+    kv = PagedKVCache(model, 2, 32, block_size=4, num_blocks=8, reuse=True)
+    toks = _toks(rng, 16)
+    a = _slotted(0, toks, 0)
+    assert kv.reserve(a, 16)            # 4 blocks
+    kv.begin_chain(a)
+    _prefill_host(kv, a, 16)
+    kv.free_request(a)
+    aud = kv.audit()
+    assert aud["cached"] == 4 and aud["free"] == 4
+
+    # a disjoint request needing 8 blocks must cannibalize the cache
+    b = _slotted(1, [v + 7 for v in toks], 1)
+    assert kv.reserve(b, 32)
+    kv.begin_chain(b)
+    _prefill_host(kv, b, 16)
+    kv.ensure(b, 32)
+    aud = kv.audit()
+    assert aud["ok"] and aud["free"] == 0 and aud["cached"] == 0
+    assert kv.match_prefix(toks) is None   # the evicted chain is gone
+    kv.free_request(b)
+    assert kv.audit()["ok"]
+
+
+# ----------------------------------------------------------- conservation
+
+
+def _drive_pool(model, seed, steps=60):
+    """Random admit/ensure/commit/adopt/free sequences against a small
+    pool with a tiny vocabulary (so chains collide and sharing/COW/
+    eviction all actually happen); the conservation audit runs after
+    EVERY operation. Returns the audit counters it ended on."""
+    rng = np.random.default_rng(seed)
+    kv = PagedKVCache(model, 4, 32, block_size=4, num_blocks=10,
+                      reuse=True)
+    live: dict[int, Request] = {}
+    rid = 0
+    for _ in range(steps):
+        op = rng.choice(["admit", "advance", "decode", "free"])
+        if op == "admit" and len(live) < 4:
+            slot = next(s for s in range(4) if s not in live)
+            plen = int(rng.integers(2, 20))
+            r = _slotted(rid, _toks(rng, plen, vocab=4), slot,
+                         max_new=int(rng.integers(1, 6)))
+            rid += 1
+            foot = min(plen + r.max_new, 32)
+            if not kv.reserve(r, foot):
+                assert kv.audit()["ok"]
+                continue
+            m = kv.match_prefix(r.seq_tokens)
+            if m is not None:
+                kv.adopt_prefix(r, m)
+                r.prefill_pos = m.matched
+            else:
+                kv.begin_chain(r)
+            r.max_new = foot - plen if foot > plen else 1
+            live[slot] = r
+        elif op == "advance" and live:
+            slot = int(rng.choice(list(live)))
+            r = live[slot]
+            if r.prefill_pos < r.seq_len:
+                upto = min(r.seq_len,
+                           r.prefill_pos + int(rng.integers(1, 8)))
+                _prefill_host(kv, r, upto)
+        elif op == "decode" and live:
+            slot = int(rng.choice(list(live)))
+            r = live[slot]
+            depth = int(kv.lengths[slot])
+            if r.prefill_pos == r.seq_len and \
+                    depth < min(r.seq_len + r.max_new, 32):
+                kv.ensure(r, depth + 1)
+                kv.lengths[slot] = depth + 1
+        elif op == "free" and live:
+            slot = int(rng.choice(list(live)))
+            kv.free_request(live.pop(slot))
+        aud = kv.audit()
+        assert aud["ok"], aud
+    for r in live.values():
+        kv.free_request(r)
+    aud = kv.audit()
+    assert aud["ok"] and aud["allocated"] == 0
+    assert aud["free"] + aud["cached"] == kv.num_blocks
+    assert kv.reserved_blocks == 0
+    return aud
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_pool_conservation_random_sequences(qwen_smoke, seed):
+    """Always-on (hypothesis-free) slice of the conservation property."""
+    cfg, model, params = qwen_smoke
+    _drive_pool(model, seed)
+
+
+try:
+    import hypothesis  # noqa: F401
+    HAVE_HYP = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYP = False
+
+if HAVE_HYP:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_pool_conservation_property(qwen_smoke, seed):
+        """Property: NO admit/ensure/adopt/finish sequence can leak,
+        double-free, or refcount-underflow a block, and free + cached +
+        allocated always sums to the pool size."""
+        cfg, model, params = qwen_smoke
+        _drive_pool(model, seed, steps=40)
+
+
+# -------------------------------------------------------------- scheduler
+
+
+def test_priority_admission_order_and_fifo_default():
+    """Due requests admit in (priority desc, arrival, rid) order; the
+    all-default-priority case is the exact historical FIFO."""
+    sched = Scheduler(1)
+    reqs = [Request(rid=i, prompt=[1, 2], max_new=1,
+                    priority=[0, 2, 1][i]) for i in range(3)]
+    sched.submit(reqs)
+    order = []
+    step = 0
+    while not sched.all_done():
+        plan = sched.plan_prefill(step)
+        for r, _ in plan:
+            order.append(r.rid)
+            r.prefill_pos = r.seq_len
+            sched.prefill_done(r)
+            sched.finish(r, step)
+        step += 1
+    assert order == [1, 2, 0]
+
+    sched.reset()
+    fifo = [Request(rid=i, prompt=[1, 2], max_new=1) for i in range(3)]
+    sched.submit(fifo)
+    got = []
+    step = 0
+    while not sched.all_done():
+        for r, _ in sched.plan_prefill(step):
+            got.append(r.rid)
+            r.prefill_pos = r.seq_len
+            sched.prefill_done(r)
+            sched.finish(r, step)
+        step += 1
+    assert got == [0, 1, 2]
+
+
+def test_preemption_victim_selection():
+    """Victims are RUNNING lanes STRICTLY below the given class —
+    lowest class first, newest arrival first within it; PREFILLING
+    lanes (possibly in the live plan) are never victims."""
+    sched = Scheduler(3)
+    reqs = [Request(rid=0, prompt=[1, 2], max_new=4, priority=0),
+            Request(rid=1, prompt=[1, 2], max_new=4, priority=0,
+                    arrival=1.0),
+            Request(rid=2, prompt=[1, 2, 3], max_new=4, priority=1,
+                    arrival=1.0)]
+    sched.submit(reqs)
+    sched.plan_prefill(0.0)
+    reqs[0].prefill_pos = 2
+    sched.prefill_done(reqs[0])
+    sched.plan_prefill(1.0)
+    reqs[1].prefill_pos = 2
+    sched.prefill_done(reqs[1])          # rid 2 stays PREFILLING
+    assert sched.preemption_victim(0) is None          # nothing strictly below
+    assert sched.preemption_victim(1).rid == 1         # newest of class 0
+    assert sched.preemption_victim(2).rid == 1         # PREFILLING rid 2 immune
+
+    victim = sched.preemption_victim(1)
+    victim.generated = [7, 8]
+    sched.requeue(victim)
+    assert victim.state == "queued" and victim.slot == -1
+    assert victim.prefill_tokens == [1, 2, 7, 8]
+    assert victim.resume_m == 2 and victim.preemptions == 1
+    assert not sched.all_done()          # the victim is due again
+
+
+# ----------------------------------------------------------- token parity
+
+
+def _mk_hot(cfg, n=6, prefix=14, seed=9):
+    """Hot-prefix workload: a 14-token shared prefix (NOT a block-size
+    multiple, so later admissions exercise the partial-tail COW path on
+    block_size 4) over staggered arrivals."""
+    return make_requests(n, cfg.vocab_size, prompt_range=(5, 9),
+                         gen_range=(3, 5), rate=0.4, seed=seed,
+                         prefix_groups=[prefix])
+
+
+def _run(model, params, reqs, **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_len", 40)
+    kw.setdefault("prefill_bucket", 8)
+    engine = ServingEngine(model, params, **kw)
+    rep = engine.run(reqs)
+    assert all(r.done for r in rep.requests)
+    assert rep.dropped_pairs == 0
+    return {r.rid: tuple(r.generated) for r in rep.requests}, rep
+
+
+@pytest.mark.parametrize("overlap", [False, True])
+def test_prefix_reuse_token_parity_gqa(qwen_smoke, overlap):
+    """Reuse on == reuse off, token for token, sequential and
+    overlapped — and reuse measurably happened (hits, shared blocks,
+    COW tails, matched tokens) with the pool conserved at run end."""
+    cfg, model, params = qwen_smoke
+    reqs = _mk_hot(cfg)
+    base, _ = _run(model, params, reqs, paged=True, block_size=4,
+                   overlap=overlap)
+    got, rep = _run(model, params, reqs, paged=True, block_size=4,
+                    prefix_reuse=True, overlap=overlap)
+    assert got == base
+    assert rep.prefix_hits >= 1
+    assert rep.reused_blocks >= 3        # 14-token prefix = 3 full blocks
+    assert rep.cow_copies >= 1           # ...plus a 2-token partial tail
+    assert rep.prefix_matched_tokens >= 14
+    assert 0.0 < rep.prefix_hit_rate < 1.0
+    assert rep.pool_audit["ok"] and rep.pool_audit["allocated"] == 0
+    assert "prefix hit-rate" in rep.summary()
+
+
+def test_prefix_reuse_token_parity_temperature(qwen_smoke):
+    """temperature > 0: keyed sampling is (rid, token index), so adopted
+    prefixes cannot perturb sampled streams."""
+    cfg, model, params = qwen_smoke
+    reqs = _mk_hot(cfg, seed=10)
+    base, _ = _run(model, params, reqs, paged=True, block_size=4,
+                   temperature=0.7)
+    got, rep = _run(model, params, reqs, paged=True, block_size=4,
+                    prefix_reuse=True, temperature=0.7)
+    assert got == base and rep.prefix_hits >= 1
+
+
+def test_prefix_reuse_token_parity_mla():
+    """The MLA latent pool shares prefixes too: one compressed-KV block
+    family, same trie, same parity."""
+    import jax
+
+    from repro.config import override
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+    cfg = override(get_smoke_config("deepseek-v2-236b"), dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    reqs = make_requests(4, cfg.vocab_size, prompt_range=(4, 6),
+                         gen_range=(3, 4), rate=0.3, seed=2,
+                         prefix_groups=[6])
+    for overlap in (False, True):
+        base, _ = _run(model, params, reqs, paged=True, block_size=4,
+                       max_len=24, overlap=overlap)
+        got, rep = _run(model, params, reqs, paged=True, block_size=4,
+                        max_len=24, prefix_reuse=True, overlap=overlap)
+        assert got == base, overlap
+        assert rep.prefix_hits >= 1 and rep.reused_blocks >= 1
+
+
+def test_reuse_skips_prefill_compute(qwen_smoke):
+    """The point of the refactor: matched tokens never reach a dispatch.
+    Live prefill work (chunk tokens actually executed) drops by exactly
+    the matched count, and the hot requests' step-clock TTFT improves."""
+    cfg, model, params = qwen_smoke
+    reqs = _mk_hot(cfg, n=6)
+    _, off = _run(model, params, reqs, paged=True, block_size=4)
+    _, on = _run(model, params, reqs, paged=True, block_size=4,
+                 prefix_reuse=True)
+    assert on.prefix_matched_tokens > 0
+    assert on.live_tokens == off.live_tokens - on.prefix_matched_tokens
+    assert on.mean_ttft_steps <= off.mean_ttft_steps
+
+
+# ------------------------------------------------------------- preemption
+
+
+def _preempt_mix(cfg, seed=13):
+    """One long low-priority request admitted first, one high-priority
+    arriving once it is RUNNING, into a pool only one of them fits."""
+    rng = np.random.default_rng(seed)
+    lo = Request(rid=0, prompt=_toks(rng, 8, cfg.vocab_size), max_new=12,
+                 priority=0)
+    hi = Request(rid=1, prompt=_toks(rng, 8, cfg.vocab_size), max_new=8,
+                 priority=1, arrival=4.0)
+    return [lo, hi]
+
+
+@pytest.mark.parametrize("overlap", [False, True])
+def test_preemption_victim_completes_token_identical(qwen_smoke, overlap):
+    """Under pool pressure the high class preempts the RUNNING low lane
+    (never defers behind it); the victim recomputes and completes with
+    the EXACT stream of an unpressured run — preemption is a latency
+    policy, invisible in the tokens."""
+    cfg, model, params = qwen_smoke
+    reqs = _preempt_mix(cfg)
+    base, rep0 = _run(model, params, reqs, paged=True, block_size=4,
+                      max_len=24, overlap=overlap)      # ample pool
+    assert rep0.preemptions == 0
+    got, rep = _run(model, params, reqs, paged=True, block_size=4,
+                    max_len=24, num_blocks=6, overlap=overlap)
+    assert got == base
+    assert rep.preemptions >= 1
+    victim = next(r for r in rep.requests if r.rid == 0)
+    assert victim.preemptions >= 1 and victim.done
+    assert rep.truncated == 0
+    assert rep.pool_audit["ok"]
+    assert "preemptions" in rep.summary()
+
+
+def test_preemption_parity_temperature(qwen_smoke):
+    """Replay-resume at temperature > 0: the re-sampled continuation
+    draws the same keyed stream, so no token duplicates or forks."""
+    cfg, model, params = qwen_smoke
+    reqs = _preempt_mix(cfg, seed=14)
+    base, _ = _run(model, params, reqs, paged=True, block_size=4,
+                   max_len=24, temperature=0.7)
+    got, rep = _run(model, params, reqs, paged=True, block_size=4,
+                    max_len=24, num_blocks=6, temperature=0.7)
+    assert got == base and rep.preemptions >= 1
+
+
+def test_deferral_causes_split(qwen_smoke):
+    """gate_deferrals splits per cause: uniform-priority pressure is all
+    "pool" (and pool_deferrals keeps reading it, unchanged); a low class
+    starved by an outranking holder defers as "priority"."""
+    cfg, model, params = qwen_smoke
+    rng = np.random.default_rng(15)
+    uniform = [Request(rid=i, prompt=_toks(rng, 8, cfg.vocab_size),
+                       max_new=6, arrival=float(i)) for i in range(3)]
+    _, rep = _run(model, params, uniform, paged=True, block_size=4,
+                  max_len=16, num_blocks=4)
+    assert rep.gate_deferrals > 0
+    assert rep.deferral_causes == {"pool": rep.gate_deferrals}
+    assert rep.pool_deferrals == rep.gate_deferrals
+
+    hi = Request(rid=0, prompt=_toks(rng, 8, cfg.vocab_size), max_new=10,
+                 priority=1)
+    lo = Request(rid=1, prompt=_toks(rng, 8, cfg.vocab_size), max_new=4,
+                 priority=0, arrival=2.0)
+    _, rep2 = _run(model, params, [hi, lo], paged=True, block_size=4,
+                   max_len=24, num_blocks=5)
+    assert rep2.deferral_causes.get("priority", 0) > 0
+    assert rep2.preemptions == 0         # never preempt UP the ladder
+    assert rep2.pool_deferrals == rep2.deferral_causes.get("pool", 0)
+
+
+def test_preemption_and_reuse_compose(qwen_smoke):
+    """The policies stack: a preempted victim's replay re-matches its
+    own surviving registered blocks, so recompute is cheap — and the
+    composed run still serves the baseline streams."""
+    cfg, model, params = qwen_smoke
+    reqs = _preempt_mix(cfg, seed=16)
+    base, _ = _run(model, params, reqs, paged=True, block_size=4,
+                   max_len=24)
+    got, rep = _run(model, params, reqs, paged=True, block_size=4,
+                    max_len=24, num_blocks=6, prefix_reuse=True)
+    assert got == base
+    assert rep.preemptions >= 1
+    assert rep.prefix_hits >= 1          # the replay hit the trie
+    assert rep.pool_audit["ok"]
